@@ -1,0 +1,60 @@
+"""Microbenchmarks of the aggregation path (the paper's serverless
+aggregation function): XLA fused reduction, Pallas staleness_agg kernel
+(interpret mode on CPU — TPU numbers come from a real chip), int8-compressed
+update pipeline, fused Adam."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_aggregate
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[dict]:
+    rows = []
+    K, N = 16, 1 << 20  # 16 clients x 1M params
+    rng = np.random.default_rng(0)
+    ups = [{"w": jnp.asarray(rng.normal(size=(N,)), jnp.float32)}
+           for _ in range(K)]
+    w = (np.ones(K) / K).astype(np.float32)
+
+    us = _time(weighted_aggregate, ups, w)
+    rows.append({"name": "aggregate/xla_fused", "us_per_call": us,
+                 "derived": f"GBps={(K * N * 4 / (us / 1e6)) / 1e9:.2f}"})
+
+    stacked = jnp.stack([u["w"] for u in ups])
+    us = _time(ops.staleness_agg, stacked, jnp.asarray(w), interpret=True)
+    rows.append({"name": "aggregate/pallas_interpret", "us_per_call": us,
+                 "derived": "correctness-path; TPU perf needs Mosaic"})
+
+    x = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    us = _time(ops.quantize_q8, x, interpret=True)
+    rows.append({"name": "quant8/quantize_interpret", "us_per_call": us,
+                 "derived": f"compression=4x"})
+
+    n = 8 * 1024 * 16
+    p = jnp.zeros(n); m = jnp.zeros(n); v = jnp.zeros(n)
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    us = _time(ops.fused_adam, p, m, v, g, jnp.int32(1), lr=1e-3,
+               interpret=True)
+    rows.append({"name": "fused_adam/interpret", "us_per_call": us,
+                 "derived": f"n={n}"})
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        emit(r["name"], r["us_per_call"], r["derived"])

@@ -1,0 +1,32 @@
+"""Paper Fig 4b: client selection bias — the spread of per-client invocation
+counts (max-min = bias; plus distribution quantiles for the violin shape)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_experiment
+from benchmarks.bench_time_to_accuracy import DATASETS, STRATEGIES
+
+
+def run(datasets=DATASETS, strategies=STRATEGIES) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        for s in strategies:
+            m = run_experiment(dataset=ds, strategy=s)
+            counts = np.array(m["invocation_counts"])
+            rows.append({
+                "dataset": ds, "strategy": s,
+                "bias_max_minus_min": int(counts.max() - counts.min()),
+                "p10": float(np.percentile(counts, 10)),
+                "p50": float(np.percentile(counts, 50)),
+                "p90": float(np.percentile(counts, 90)),
+                "mean": round(float(counts.mean()), 2),
+            })
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        emit(f"fig4b/{r['dataset']}/{r['strategy']}",
+             r["bias_max_minus_min"] * 1e6,
+             f"p10={r['p10']};p50={r['p50']};p90={r['p90']}")

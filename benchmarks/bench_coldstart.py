@@ -1,0 +1,29 @@
+"""Paper Fig 4c: cold-start ratios per strategy/dataset (the paper's headline
+4x average reduction for Apodotiko)."""
+from __future__ import annotations
+
+from benchmarks.common import run_experiment
+from benchmarks.bench_time_to_accuracy import DATASETS, STRATEGIES
+
+
+def run(datasets=DATASETS, strategies=STRATEGIES) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        base = None
+        for s in strategies:
+            m = run_experiment(dataset=ds, strategy=s)
+            ratio = m["cold_start_ratio"]
+            if s == "fedavg":
+                base = ratio
+            rows.append({"dataset": ds, "strategy": s,
+                         "cold_start_ratio": round(ratio, 4),
+                         "reduction_vs_fedavg": (round(base / ratio, 2)
+                                                 if base and ratio > 0 else None)})
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        emit(f"fig4c/{r['dataset']}/{r['strategy']}",
+             r["cold_start_ratio"] * 1e6,
+             f"reduction_vs_fedavg={r['reduction_vs_fedavg']}")

@@ -1,0 +1,22 @@
+"""Paper Table III: total training cost (USD, GCP model) per strategy/dataset."""
+from __future__ import annotations
+
+from benchmarks.common import run_experiment
+from benchmarks.bench_time_to_accuracy import DATASETS, STRATEGIES
+
+
+def run(datasets=DATASETS, strategies=STRATEGIES) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        for s in strategies:
+            m = run_experiment(dataset=ds, strategy=s)
+            rows.append({"dataset": ds, "strategy": s,
+                         "cost_usd": round(m["total_cost_usd"], 4),
+                         "invocations": m["n_invocations"]})
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        emit(f"tableIII/{r['dataset']}/{r['strategy']}", r["cost_usd"] * 1e6,
+             f"invocations={r['invocations']}")

@@ -1,0 +1,33 @@
+"""Paper Fig 6 + Table II CR rows: Apodotiko concurrencyRatio sensitivity
+(CR in {0.3, 0.6, 0.7, 0.8}; the paper finds 0.3 fastest)."""
+from __future__ import annotations
+
+from benchmarks.common import best_accuracy, run_experiment, time_to_accuracy
+
+CRS = (0.3, 0.6, 0.7, 0.8)
+
+
+def run(datasets=("shakespeare", "speech")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        runs = {cr: run_experiment(dataset=ds, strategy="apodotiko",
+                                   concurrency_ratio=cr) for cr in CRS}
+        target = 0.95 * min(best_accuracy(m) for m in runs.values())
+        t03 = time_to_accuracy(runs[0.3], target)
+        for cr, m in runs.items():
+            t = time_to_accuracy(m, target)
+            rows.append({"dataset": ds, "cr": cr,
+                         "time_to_target_s": None if t is None else round(t, 1),
+                         "speedup_cr03_vs_this": (round(t / t03, 2)
+                                                  if t and t03 else None),
+                         "final_acc": round(m["final_accuracy"], 4),
+                         "cost_usd": round(m["total_cost_usd"], 4)})
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        t = r["time_to_target_s"]
+        emit(f"fig6/{r['dataset']}/cr{r['cr']}",
+             0.0 if t is None else t * 1e6,
+             f"final_acc={r['final_acc']};cost={r['cost_usd']}")

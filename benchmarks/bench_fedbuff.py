@@ -1,0 +1,37 @@
+"""Paper Fig 5: Apodotiko (CR 0.3/0.6) vs FedBuff (buffer ratio 0.3) —
+the paper's closest asynchronous baseline."""
+from __future__ import annotations
+
+from benchmarks.common import best_accuracy, run_experiment, time_to_accuracy
+
+
+def run(datasets=("shakespeare", "speech")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        runs = {
+            ("apodotiko", 0.3): run_experiment(dataset=ds, strategy="apodotiko",
+                                               concurrency_ratio=0.3),
+            ("apodotiko", 0.6): run_experiment(dataset=ds, strategy="apodotiko",
+                                               concurrency_ratio=0.6),
+            ("fedbuff", 0.3): run_experiment(dataset=ds, strategy="fedbuff",
+                                             concurrency_ratio=0.3),
+            ("fedbuff", 0.6): run_experiment(dataset=ds, strategy="fedbuff",
+                                             concurrency_ratio=0.6),
+        }
+        target = 0.95 * min(best_accuracy(m) for m in runs.values())
+        tb = time_to_accuracy(runs[("fedbuff", 0.3)], target)
+        for (s, cr), m in runs.items():
+            t = time_to_accuracy(m, target)
+            rows.append({"dataset": ds, "strategy": s, "ratio": cr,
+                         "time_to_target_s": None if t is None else round(t, 1),
+                         "speedup_vs_fedbuff03": (round(tb / t, 2)
+                                                  if t and tb else None)})
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        t = r["time_to_target_s"]
+        emit(f"fig5/{r['dataset']}/{r['strategy']}-{r['ratio']}",
+             0.0 if t is None else t * 1e6,
+             f"speedup_vs_fedbuff03={r['speedup_vs_fedbuff03']}")

@@ -1,0 +1,56 @@
+"""Paper Fig 1 + Fig 3: the motivating experiment — FedAvg vs FedLesScan vs
+Apodotiko across hardware-distribution scenarios (homogeneous / two-tier /
+heterogeneous CPU+GPU), plus per-hardware client training durations."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    best_accuracy,
+    fleet_for,
+    run_experiment,
+    time_to_accuracy,
+)
+
+SCENARIOS = ("homogeneous", "two-tier", "heterogeneous")
+
+
+def run() -> list[dict]:
+    rows = []
+    for scenario in SCENARIOS:
+        runs = {s: run_experiment(dataset="shakespeare", strategy=s,
+                                  scenario=scenario)
+                for s in ("fedavg", "fedlesscan", "apodotiko")}
+        target = 0.95 * min(best_accuracy(m) for m in runs.values())
+        base = time_to_accuracy(runs["fedavg"], target)
+        for s, m in runs.items():
+            t = time_to_accuracy(m, target)
+            rows.append({"scenario": scenario, "strategy": s,
+                         "time_to_target_s": None if t is None else round(t, 1),
+                         "speedup_vs_fedavg": (round(base / t, 2)
+                                               if t and base else None)})
+    return rows
+
+
+def fig3_durations() -> dict:
+    """Client training duration spread per hardware class (sim model)."""
+    from repro.faas.hardware import HARDWARE_PROFILES
+    from repro.faas.platform import FaaSPlatform
+    p = FaaSPlatform(seed=0)
+    out = {}
+    for name, hw in HARDWARE_PROFILES.items():
+        durs = [p.invoke(i, 0, 0.0, train_steps=60, hw=hw,
+                         base_step_time=6.0).duration for i in range(30)]
+        out[name] = {"p50": round(float(np.median(durs)), 1),
+                     "p95": round(float(np.percentile(durs, 95)), 1)}
+    return out
+
+
+def main(emit) -> None:
+    for r in run():
+        t = r["time_to_target_s"]
+        emit(f"fig1/{r['scenario']}/{r['strategy']}",
+             0.0 if t is None else t * 1e6,
+             f"speedup_vs_fedavg={r['speedup_vs_fedavg']}")
+    for hw, d in fig3_durations().items():
+        emit(f"fig3/{hw}", d["p50"] * 1e6, f"p95={d['p95']}")

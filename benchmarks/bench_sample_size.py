@@ -1,0 +1,26 @@
+"""Paper Fig 7: impact of clients-per-round (50/100/200 of 200 in the paper;
+25%/50%/100% of the pool here)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_scale, best_accuracy, run_experiment, time_to_accuracy
+
+
+def run(strategies=("fedavg", "fedlesscan", "apodotiko")) -> list[dict]:
+    n_clients, _, _, _ = bench_scale()
+    fractions = (0.25, 0.5, 1.0)
+    rows = []
+    for s in strategies:
+        for frac in fractions:
+            cpr = max(2, int(n_clients * frac))
+            m = run_experiment(dataset="shakespeare", strategy=s,
+                               clients_per_round=cpr)
+            rows.append({"strategy": s, "clients_per_round": cpr,
+                         "best_acc": round(best_accuracy(m), 4),
+                         "sim_time_s": round(m["total_time"], 1)})
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        emit(f"fig7/{r['strategy']}/cpr{r['clients_per_round']}",
+             r["sim_time_s"] * 1e6, f"best_acc={r['best_acc']}")

@@ -1,0 +1,47 @@
+"""Paper Fig 2: the staleness weighting surfaces of Eq. 1 (FedLesScan) vs
+Eq. 2 (Apodotiko) — diagonal consistency is the paper's argument for Eq. 2.
+Plus an ablation: Apodotiko trained with eq1 vs eq2 weighting."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko
+from benchmarks.common import best_accuracy, run_experiment
+
+
+def weight_surface(fn, rounds=10):
+    return [[round(fn(t_i, T), 4) if t_i <= T else None
+             for t_i in range(1, rounds + 1)] for T in range(1, rounds + 1)]
+
+
+def diagonal_variance(surface):
+    """Variance of weights along equal-staleness diagonals (0 for Eq. 2)."""
+    n = len(surface)
+    var = []
+    for stale in range(1, n):
+        diag = [surface[T][T - stale] for T in range(stale, n)]
+        if len(diag) > 1:
+            var.append(float(np.var(diag)))
+    return float(np.mean(var)) if var else 0.0
+
+
+def run() -> dict:
+    s1 = weight_surface(eq1_fedlesscan)
+    s2 = weight_surface(eq2_apodotiko)
+    out = {
+        "eq1_diag_variance": diagonal_variance(s1),
+        "eq2_diag_variance": diagonal_variance(s2),
+    }
+    for fn in ("eq1", "eq2"):
+        m = run_experiment(dataset="speech", strategy="apodotiko",
+                           staleness_fn=fn)
+        out[f"best_acc_{fn}"] = round(best_accuracy(m), 4)
+    return out
+
+
+def main(emit) -> None:
+    r = run()
+    emit("fig2/eq1", r["eq1_diag_variance"] * 1e6,
+         f"best_acc={r['best_acc_eq1']}")
+    emit("fig2/eq2", r["eq2_diag_variance"] * 1e6,
+         f"best_acc={r['best_acc_eq2']}")

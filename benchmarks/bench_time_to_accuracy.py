@@ -1,0 +1,44 @@
+"""Paper Table II + Fig 4a: total training time to target accuracy across
+the six strategies x four datasets (heterogeneous fleet)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    best_accuracy,
+    run_experiment,
+    time_to_accuracy,
+)
+
+STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
+              "apodotiko")
+DATASETS = ("mnist", "femnist", "shakespeare", "speech")
+
+
+def run(datasets=DATASETS, strategies=STRATEGIES) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        runs = {s: run_experiment(dataset=ds, strategy=s) for s in strategies}
+        # time-to-COMMON-accuracy: the highest level every strategy
+        # reaches (95% of the weakest best) — the paper's fixed targets work
+        # because its tasks converge; proxy tasks plateau at strategy-
+        # dependent ceilings (EXPERIMENTS.md notes this deviation)
+        target = 0.95 * min(best_accuracy(m) for m in runs.values())
+        base = time_to_accuracy(runs["fedavg"], target)
+        for s, m in runs.items():
+            t = time_to_accuracy(m, target)
+            rows.append({
+                "dataset": ds, "strategy": s, "target_acc": round(target, 4),
+                "time_to_target_s": None if t is None else round(t, 1),
+                "speedup_vs_fedavg": (None if (t is None or base is None)
+                                      else round(base / t, 2)),
+                "final_acc": round(m["final_accuracy"], 4),
+                "sim_time_s": round(m["total_time"], 1),
+            })
+    return rows
+
+
+def main(emit) -> None:
+    for r in run():
+        t = r["time_to_target_s"]
+        emit(f"tableII/{r['dataset']}/{r['strategy']}",
+             0.0 if t is None else t * 1e6,
+             f"speedup={r['speedup_vs_fedavg']};final_acc={r['final_acc']}")

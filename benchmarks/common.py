@@ -1,0 +1,145 @@
+"""Shared experiment engine for the paper-reproduction benchmarks.
+
+Each benchmark module reproduces one paper table/figure by running (or
+loading from the results cache) FL experiments on the serverless simulator
+with real JAX local training. Experiments are cached by config hash under
+``results/bench_cache`` so the full ``python -m benchmarks.run`` suite
+composes tables without re-running shared grids.
+
+Scale: the paper's full setup (200 clients, 100/round, 28x28 CNNs) costs
+~150 s/round of pure conv compute on this 1-core container; the default
+bench scale keeps the paper's *structure* (client mix 65/25/10, non-IID
+schemes, CR values, round counts) at proxy-model scale (DESIGN.md §7).
+Pass fidelity="paper" for the exact models.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.controller import Controller, FLConfig
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
+from repro.models.proxy_models import build_bench_model
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "bench_cache")
+
+# per-dataset simulated compute weight (1vCPU-seconds per optimizer step),
+# calibrated so round durations land in the paper's Fig-1/Fig-3 ranges
+BASE_STEP_TIME = {"mnist": 0.8, "femnist": 4.0, "shakespeare": 6.0,
+                  "speech": 1.5}
+# every strategy gets the SAME simulated wall-clock budget per dataset (the
+# paper compares time-to-accuracy, not round counts — async strategies run
+# many more, shorter rounds inside the same budget)
+SIM_BUDGET = {"mnist": 2_500.0, "femnist": 8_000.0, "shakespeare": 12_000.0,
+              "speech": 4_000.0}
+LOCAL_EPOCHS = {"mnist": 3, "femnist": 3, "speech": 3, "shakespeare": 2}
+# paper IV-B target accuracies (proxy tasks reach different absolute values;
+# bench tables report time-to-(fraction of best) instead where needed)
+PAPER_TARGETS = {"mnist": 0.98, "femnist": 0.70, "shakespeare": 0.40,
+                 "speech": 0.75}
+
+_MODELS: dict[tuple, object] = {}
+_DATA: dict[tuple, object] = {}
+
+
+def bench_scale():
+    """(n_clients, clients_per_round, max_rounds, data_scale)."""
+    if os.environ.get("BENCH_FULL"):
+        return 200, 100, 500, 0.5
+    return 24, 10, 100, 0.12
+
+
+def get_model(dataset: str, fidelity: str = "proxy"):
+    key = (dataset, fidelity)
+    if key not in _MODELS:
+        _MODELS[key] = build_bench_model(dataset, fidelity)
+    return _MODELS[key]
+
+
+def get_data(dataset: str, n_clients: int, scale: float, seed: int = 0,
+             fidelity: str = "proxy"):
+    key = (dataset, n_clients, scale, seed, fidelity)
+    if key not in _DATA:
+        _DATA[key] = make_federated_dataset(
+            dataset, n_clients=n_clients, scale=scale, seed=seed,
+            fidelity=fidelity)
+    return _DATA[key]
+
+
+def fleet_for(scenario: str, n_clients: int):
+    """Paper hardware scenarios: heterogeneous (IV-A3 mix), homogeneous
+    (Fig 1 scenario 1), two-tier (Fig 1 scenario 2)."""
+    if scenario == "heterogeneous":
+        return list(paper_fleet(n_clients))
+    if scenario == "homogeneous":
+        return [HARDWARE_PROFILES["cpu2"]] * n_clients
+    if scenario == "two-tier":
+        rng = np.random.default_rng(0)
+        fleet = [HARDWARE_PROFILES["cpu1"]] * round(n_clients * 0.6) + \
+                [HARDWARE_PROFILES["cpu2"]] * (n_clients - round(n_clients * 0.6))
+        rng.shuffle(fleet)
+        return fleet
+    raise ValueError(scenario)
+
+
+def run_experiment(*, dataset: str, strategy: str, scenario: str = "heterogeneous",
+                   concurrency_ratio: float = 0.3, clients_per_round: Optional[int] = None,
+                   rounds: Optional[int] = None, seed: int = 0,
+                   staleness_fn: str = "eq2", use_cache: bool = True) -> dict:
+    n_clients, cpr_default, rounds_default, scale = bench_scale()
+    cpr = clients_per_round or cpr_default
+    rounds = rounds or rounds_default
+    key_src = json.dumps([dataset, strategy, scenario, concurrency_ratio,
+                          cpr, rounds, seed, staleness_fn, bench_scale()],
+                         sort_keys=True)
+    key = hashlib.sha1(key_src.encode()).hexdigest()[:16]
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"{key}.json")
+    if use_cache and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    epochs = LOCAL_EPOCHS[dataset]
+    # paper batch sizes are 10/10/32/5; proxy datasets are ~8x smaller per
+    # client, so batches scale down to keep steps-per-epoch comparable
+    batch = 8 if dataset == "shakespeare" else 5
+    cfg = FLConfig(
+        n_clients=n_clients, clients_per_round=cpr, rounds=rounds,
+        strategy=strategy, concurrency_ratio=concurrency_ratio,
+        local_epochs=epochs, batch_size=batch,
+        optimizer="sgd" if dataset == "shakespeare" else "adam",
+        lr=0.5 if dataset == "shakespeare" else 1e-3,
+        base_step_time=BASE_STEP_TIME[dataset],
+        round_timeout=600.0, staleness_fn=staleness_fn, seed=seed,
+        eval_every=2, max_sim_time=SIM_BUDGET[dataset])
+    model = get_model(dataset)
+    data = get_data(dataset, n_clients, scale, seed=0)
+    t0 = time.time()
+    ctl = Controller(cfg, model, data, fleet_for(scenario, n_clients))
+    metrics = ctl.run()
+    metrics["wall_s"] = time.time() - t0
+    metrics["dataset"] = dataset
+    metrics["scenario"] = scenario
+    metrics["concurrency_ratio"] = concurrency_ratio
+    with open(path, "w") as f:
+        json.dump(metrics, f)
+    return metrics
+
+
+def time_to_accuracy(metrics: dict, target: float) -> Optional[float]:
+    for t, _, acc in metrics["history"]:
+        if acc >= target:
+            return t
+    return None
+
+
+def best_accuracy(metrics: dict) -> float:
+    return max((a for _, _, a in metrics["history"]), default=0.0)

@@ -1,0 +1,51 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus section markers). Scale
+is bench-sized by default (1-core container); set BENCH_FULL=1 for the
+paper-scale grid (hours).
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run fig4 cost  # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig2_staleness", "benchmarks.bench_staleness"),
+    ("tableII_time_to_accuracy", "benchmarks.bench_time_to_accuracy"),
+    ("tableIII_cost", "benchmarks.bench_cost"),
+    ("fig4b_bias", "benchmarks.bench_bias"),
+    ("fig4c_coldstart", "benchmarks.bench_coldstart"),
+    ("fig5_fedbuff", "benchmarks.bench_fedbuff"),
+    ("fig6_concurrency_ratio", "benchmarks.bench_cr"),
+    ("fig7_sample_size", "benchmarks.bench_sample_size"),
+    ("fig1_fig3_heterogeneity", "benchmarks.bench_heterogeneity"),
+    ("aggregation_kernels", "benchmarks.bench_aggregation"),
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in BENCHES:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main(lambda n, us, d="": print(f"{n},{us:.1f},{d}", flush=True))
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

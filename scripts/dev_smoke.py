@@ -1,0 +1,43 @@
+"""Dev scratch: exercise every SMOKE config forward/loss/decode on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import build_model
+
+rng = jax.random.PRNGKey(0)
+
+
+def run(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params, axes = model.init(rng)
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+             "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(rng, (B, cfg.n_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (B, S, cfg.d_model))
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+    # decode one step
+    if cfg.family == "encdec":
+        cache_struct, _ = model.cache_struct(B, S, S)
+        caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_struct)
+        logits, caches = model.decode_step(params, caches, batch["tokens"][:, :1], jnp.int32(0))
+    else:
+        cache_struct, _ = model.cache_struct(B, S)
+        caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_struct)
+        logits, caches = model.decode_step(params, caches, batch["tokens"][:, :1], jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab_size), (arch, logits.shape)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    print(f"OK {arch:28s} params={n:,} loss={float(loss):.3f}")
+
+
+for arch in (sys.argv[1:] or ARCH_IDS):
+    run(arch)

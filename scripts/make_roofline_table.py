@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md tables from results/roofline.jsonl + probe.jsonl."""
+import json
+import sys
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def load(path):
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"], r.get("mesh", "16x16"))] = r
+    return rows
+
+
+def main():
+    roof = load("results/roofline.jsonl")
+    print("| arch | shape | kind | compute ms | memory ms | collective ms | "
+          "bottleneck | peak GiB/dev | MODEL/HLO | roofline MFU | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = []
+    for (a, s, m), r in roof.items():
+        if a not in archs:
+            archs.append(a)
+    for a in archs:
+        for s in order:
+            r = roof.get((a, s, "16x16"))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | — | — | — | — | skipped | — | — | — | — |")
+                continue
+            if r["status"] == "error":
+                print(f"| {a} | {s} | ERROR | {r['error'][:40]} |")
+                continue
+            print(f"| {a} | {s} | {r['kind']} | {fmt_ms(r['compute_s'])} | "
+                  f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+                  f"{r['bottleneck']} | "
+                  f"{r['peak_memory_per_device']/2**30:.1f} | "
+                  f"{r['useful_ratio']:.2f} | {r['mfu']:.3f} | "
+                  f"{r['compile_s']:.0f}+{r.get('unroll_compile_s',0):.0f} |")
+
+
+
+
+def embed_into_experiments():
+    """Replace the <!-- ROOFLINE_TABLE --> marker in EXPERIMENTS.md."""
+    import io, contextlib
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        main()
+    table = buf.getvalue()
+    path = "EXPERIMENTS.md"
+    src = open(path).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in src:
+        src = src.replace(marker, table.rstrip())
+        open(path, "w").write(src)
+        print(f"embedded {table.count(chr(10))-2} rows into {path}")
+    else:
+        print("marker not found; printing only")
+        print(table)
+
+
+if __name__ == "__main__" and "--embed" in sys.argv:
+    embed_into_experiments()
+elif __name__ == "__main__":
+    main()

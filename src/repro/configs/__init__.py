@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    shape_supported,
+)

@@ -1,0 +1,80 @@
+"""Staleness-weighted asynchronous aggregation (paper §III-B).
+
+Given K client models (current + up to ``max_staleness`` rounds old), the
+aggregator computes
+
+    w_{T+1} = sum_i s(t_i, T) * (n_i / n) * w^i   /   sum_i s(t_i, T) * (n_i / n)
+
+where ``s`` is Eq. 2 (1/sqrt(T - t_i + 1)) for Apodotiko or Eq. 1 (t_i/T)
+for FedLesScan. The denominator normalization matches the FedLess reference
+implementation (the raw paper formula shrinks the model norm whenever any
+update is stale).
+
+The hot loop — a K-way weighted reduction over every parameter — is exactly
+the paper's serverless aggregation function. Three execution paths:
+  * ``weighted_aggregate``: jit'd XLA path (default, used by the controller);
+  * ``kernels.ops.staleness_agg``: Pallas TPU kernel (VMEM-tiled fused
+    multiply-accumulate; validated in interpret mode);
+  * sharded path: on a mesh, stacked updates [K, ...] are sharded over the
+    ``pod``/``data`` axes and the reduce lowers to a weighted psum — this is
+    how the FaaS aggregation pattern maps onto TPU collectives (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.staleness import STALENESS_FNS
+
+Pytree = Any
+
+
+def staleness_weights(rounds: Sequence[int], cardinalities: Sequence[int],
+                      current_round: int, fn: str = "eq2") -> np.ndarray:
+    s = STALENESS_FNS[fn]
+    n = float(sum(cardinalities)) or 1.0
+    w = np.array([s(t_i, current_round) * (n_i / n)
+                  for t_i, n_i in zip(rounds, cardinalities)], np.float64)
+    total = w.sum()
+    if total <= 0:
+        w = np.full(len(w), 1.0 / max(len(w), 1))
+        total = 1.0
+    return (w / total).astype(np.float32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _weighted_sum_stacked(stacked: Pytree, weights: jax.Array) -> Pytree:
+    def one(x):
+        wf = weights.astype(jnp.float32)
+        shape = (x.shape[0],) + (1,) * (x.ndim - 1)
+        return jnp.sum(x.astype(jnp.float32) * wf.reshape(shape), axis=0)
+
+    return jax.tree.map(one, stacked)
+
+
+def weighted_aggregate(updates: Sequence[Pytree], weights: np.ndarray,
+                       out_dtype=None) -> Pytree:
+    """updates: list of K pytrees -> weighted average pytree.
+
+    Stacks on a leading K axis then runs one fused jit reduction (the
+    benchmarked aggregation path)."""
+    assert len(updates) == len(weights) and len(updates) > 0
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *updates)
+    out = _weighted_sum_stacked(stacked, jnp.asarray(weights))
+    if out_dtype is not None:
+        out = jax.tree.map(lambda x: x.astype(out_dtype), out)
+    return out
+
+
+def incremental_aggregate(acc: Optional[Pytree], update: Pytree,
+                          weight: float) -> Pytree:
+    """Streaming form: acc += w * update (callers normalize at the end).
+    Used when K is large and stacking would blow host memory."""
+    if acc is None:
+        return jax.tree.map(lambda x: x.astype(jnp.float32) * weight, update)
+    return jax.tree.map(lambda a, x: a + x.astype(jnp.float32) * weight,
+                        acc, update)

@@ -1,0 +1,147 @@
+"""Client_Update (paper Algorithm 1, lines 14-23) — real JAX local training.
+
+On real hardware every client is an independent FaaS function. In the
+simulator the *learning* is real but executed cohort-vectorized: the local
+SGD/Adam loop of every client invoked at the same simulated instant runs
+under one ``vmap`` (padded to the cohort's max step count, with per-client
+step masking). Simulated durations come from the hardware model, so the
+timing behaviour matches per-client execution while the host does one
+batched computation (a beyond-paper systems optimization, DESIGN.md §2).
+
+Supports the baseline strategies' client-side modifications:
+  - FedProx: proximal term  mu/2 ||w - w_global||^2
+  - SCAFFOLD: control-variate-corrected gradients + c_i update
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import apply_updates, build_optimizer
+
+Pytree = Any
+
+
+def _l2_sq(a: Pytree, b: Pytree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(x - y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _steps_bucket(steps: int) -> int:
+    """Round max step counts to power-of-two buckets to bound recompiles."""
+    b = 8
+    while b < steps:
+        b *= 2
+    return b
+
+
+# Compiled cohort-train fns shared across Controller instances (strategies
+# reuse identical trainer configs; compiles are expensive on the 1-core host).
+_COMPILE_CACHE: dict[tuple, Any] = {}
+
+
+class CohortTrainer:
+    """Vectorized local training over a cohort sharing one model/optimizer."""
+
+    def __init__(self, model, *, optimizer: str, lr: float, batch_size: int,
+                 prox_mu: float = 0.0, scaffold: bool = False, seed: int = 0):
+        self.model = model
+        self.opt = build_optimizer(optimizer, lr)
+        self.lr = lr
+        self.batch_size = batch_size
+        self.prox_mu = prox_mu
+        self.scaffold = scaffold
+        self._key = jax.random.PRNGKey(seed)
+        self._compiled: dict[int, Any] = {}
+
+    # ----------------------------------------------------------- single fn
+    def _make_fn(self, max_steps: int):
+        model, opt = self.model, self.opt
+        B, mu, use_cv, lr = self.batch_size, self.prox_mu, self.scaffold, self.lr
+
+        def local_train(params0, X, y, n_i, steps, key, cg, ci):
+            opt_state = opt.init(params0)
+
+            def body(carry, s):
+                params, opt_state, key = carry
+                key, k = jax.random.split(key)
+                idx = jax.random.randint(k, (B,), 0, jnp.maximum(n_i, 1))
+                batch = {"x": X[idx], "y": y[idx]}
+
+                def loss_fn(p):
+                    l, _ = model.loss(p, batch)
+                    if mu > 0:
+                        l = l + 0.5 * mu * _l2_sq(p, params0)
+                    return l
+
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                if use_cv:
+                    grads = jax.tree.map(lambda g, a, b: g - a + b, grads, ci, cg)
+                upd, new_opt = opt.update(grads, opt_state, params)
+                newp = apply_updates(params, upd)
+                active = s < steps
+                sel = lambda a, b: jnp.where(active, a, b)
+                params = jax.tree.map(sel, newp, params)
+                opt_state = jax.tree.map(sel, new_opt, opt_state)
+                return (params, opt_state, key), jnp.where(active, loss, 0.0)
+
+            (params, _, _), losses = jax.lax.scan(
+                body, (params0, opt_state, key), jnp.arange(max_steps))
+            mean_loss = jnp.sum(losses) / jnp.maximum(steps, 1)
+            if use_cv:
+                # c_i' = c_i - c + (w0 - w) / (K * lr)
+                denom = jnp.maximum(steps, 1).astype(jnp.float32) * lr
+                ci_new = jax.tree.map(
+                    lambda c, g, p0, p: c - g + (p0 - p) / denom,
+                    ci, cg, params0, params)
+            else:
+                ci_new = ci
+            return params, ci_new, mean_loss
+
+        v = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0, 0, None, 0))
+        return jax.jit(v)
+
+    # --------------------------------------------------------------- train
+    def train_cohort(self, global_params: Pytree, X: np.ndarray, y: np.ndarray,
+                     n_i: np.ndarray, steps: np.ndarray,
+                     c_global: Optional[Pytree] = None,
+                     c_clients: Optional[Pytree] = None):
+        """X: [K, N_max, ...], y: [K, N_max], n_i/steps: [K].
+        Returns (params [K, ...] stacked, c_clients', mean losses [K])."""
+        K = X.shape[0]
+        # pad the cohort to a power-of-two bucket: one compile serves every
+        # selection size in the bucket (padded entries run 0 active steps)
+        Kp = _steps_bucket(K)
+        if Kp != K:
+            padt = lambda a: np.concatenate(
+                [a, np.repeat(a[-1:], Kp - K, axis=0)], axis=0)
+            X, y = padt(np.asarray(X)), padt(np.asarray(y))
+            n_i = padt(np.asarray(n_i))
+            steps = np.concatenate([steps, np.zeros(Kp - K, steps.dtype)])
+        max_steps = _steps_bucket(int(steps.max()))
+        cache_key = (id(self.model), self.opt.name, self.lr, self.batch_size,
+                     self.prox_mu, self.scaffold, Kp, max_steps,
+                     X.shape[1:], y.dtype)
+        if cache_key not in _COMPILE_CACHE:
+            _COMPILE_CACHE[cache_key] = self._make_fn(max_steps)
+        fn = _COMPILE_CACHE[cache_key]
+        self._key, sub = jax.random.split(self._key)
+        keys = jax.random.split(sub, Kp)
+        if c_global is None:
+            c_global = jax.tree.map(lambda p: jnp.zeros((), p.dtype), global_params)
+            c_clients = jax.tree.map(
+                lambda p: jnp.zeros((Kp,) + (1,) * p.ndim, p.dtype), global_params)
+        elif c_clients is not None and Kp != K:
+            c_clients = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((Kp - K,) + a.shape[1:], a.dtype)], axis=0),
+                c_clients)
+        out_params, ci_new, losses = fn(
+            global_params, jnp.asarray(X), jnp.asarray(y), jnp.asarray(n_i),
+            jnp.asarray(steps), keys, c_global, c_clients)
+        trim = lambda t: jax.tree.map(lambda a: a[:K], t)
+        return trim(out_params), trim(ci_new), np.asarray(losses)[:K]

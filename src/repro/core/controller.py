@@ -1,0 +1,342 @@
+"""The FedLess controller with Apodotiko's modifications (Algorithm 1).
+
+Train_Global_Model loop:
+  1. ``Select_Clients`` via the active strategy (Algorithm 3 for Apodotiko).
+  2. Invoke the selected client functions on the (simulated) FaaS platform;
+     save invocation records; mark clients busy.
+  3. Clients run Client_Update (real JAX training, cohort-vectorized) and
+     land results in the database at their simulated completion times.
+  4. The controller polls the database until the strategy's gating condition
+     holds — all current-round results or timeout (sync), or
+     ``ceil(CR x clientsPerRound)`` un-aggregated results from the current or
+     up to five previous rounds (async, Algorithm 1 line 9).
+  5. Aggregate with cardinality x staleness weights (Eq. 2), write the new
+     global model, evaluate, and start the next round immediately.
+
+Fault tolerance: failed invocations (crash/preemption) simply never produce
+results — sync strategies absorb them via the round timeout, async ones are
+oblivious; the controller checkpoints {global model, client records, scores,
+boosters, round} and can resume from the database (tests/test_controller.py).
+Elasticity: clients may join/leave between rounds (add_clients/remove_clients).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_aggregate
+from repro.core.client import CohortTrainer
+from repro.core.database import ClientRecord, Database, ResultRecord
+from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
+from repro.faas.cost import CostModel
+from repro.faas.events import EventLoop
+from repro.faas.hardware import HardwareProfile
+from repro.faas.platform import FaaSPlatform
+
+Pytree = Any
+
+
+@dataclass
+class FLConfig:
+    n_clients: int = 200
+    clients_per_round: int = 100
+    rounds: int = 50
+    target_accuracy: Optional[float] = None
+    local_epochs: int = 5
+    batch_size: int = 10
+    optimizer: str = "adam"
+    lr: float = 1e-3
+    strategy: str = "apodotiko"
+    concurrency_ratio: float = 0.3
+    adjustment_rate: float = 0.2
+    max_staleness: int = 5
+    round_timeout: float = 300.0
+    keep_warm: float = 600.0
+    cold_start_s: float = 8.0
+    base_step_time: float = 0.05   # 1vCPU-seconds per optimizer step
+    prox_mu: float = 0.01
+    staleness_fn: str = "eq2"
+    eval_every: int = 1
+    seed: int = 0
+    failure_rate: float = 0.0
+    max_sim_time: float = 1e8
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+
+
+@dataclass
+class RoundLog:
+    round: int
+    t_start: float
+    t_end: float
+    accuracy: float
+    n_aggregated: int
+    n_stale: int
+    mean_loss: float
+
+
+class Controller:
+    def __init__(self, cfg: FLConfig, model, data, fleet: list[HardwareProfile],
+                 *, db: Optional[Database] = None, init_params: Optional[Pytree] = None):
+        self.cfg = cfg
+        self.model = model
+        self.data = data        # FederatedDataset (repro.data)
+        self.fleet = fleet
+        self.loop = EventLoop()
+        self.platform = FaaSPlatform(
+            keep_warm=cfg.keep_warm, cold_start_s=cfg.cold_start_s,
+            seed=cfg.seed, failure_rate=cfg.failure_rate)
+        self.cost_model = CostModel()
+        scfg = StrategyConfig(
+            clients_per_round=cfg.clients_per_round,
+            concurrency_ratio=cfg.concurrency_ratio,
+            adjustment_rate=cfg.adjustment_rate,
+            max_staleness=cfg.max_staleness,
+            round_timeout=cfg.round_timeout,
+            prox_mu=cfg.prox_mu,
+            staleness_fn=cfg.staleness_fn,
+            seed=cfg.seed)
+        self.strategy: Strategy = build_strategy(cfg.strategy, scfg)
+        self.trainer = CohortTrainer(
+            model, optimizer=cfg.optimizer, lr=cfg.lr,
+            batch_size=cfg.batch_size, prox_mu=self.strategy.prox_mu,
+            scaffold=self.strategy.needs_scaffold, seed=cfg.seed)
+
+        self.db = db or Database()
+        if db is None:
+            for cid in range(cfg.n_clients):
+                self.db.register_client(ClientRecord(
+                    client_id=cid, hardware=fleet[cid].name,
+                    data_cardinality=int(data.n[cid]),
+                    batch_size=cfg.batch_size, local_epochs=cfg.local_epochs))
+        self.hw = {cid: fleet[cid] for cid in range(len(fleet))}
+
+        rng = jax.random.PRNGKey(cfg.seed)
+        if init_params is not None:
+            self.params = init_params
+        elif self.db.global_models:
+            self.params = jax.tree.map(jnp.asarray, self.db.latest_global())
+        else:
+            self.params = model.init(rng)[0]
+        # SCAFFOLD state
+        self.c_global = None
+        self.c_clients: dict[int, Pytree] = {}
+        if self.strategy.needs_scaffold:
+            self.c_global = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                         self.params)
+        self.history: list[RoundLog] = []
+        self._eval_fn = jax.jit(model.accuracy)
+        self._completed_this_round: set[int] = set()
+
+    # ---------------------------------------------------------------- elastic
+    def add_clients(self, records: list[ClientRecord],
+                    profiles: list[HardwareProfile]) -> None:
+        for rec, hw in zip(records, profiles):
+            self.db.register_client(rec)
+            self.hw[rec.client_id] = hw
+            self.fleet.append(hw)
+
+    def remove_clients(self, client_ids: list[int]) -> None:
+        for cid in client_ids:
+            self.db.clients.pop(cid, None)
+
+    # ------------------------------------------------------------------ round
+    def _invoke_round(self, round_: int, selection: list[int]) -> None:
+        cfg = self.cfg
+        n_i = self.data.n[selection]
+        steps = np.ceil(n_i / cfg.batch_size).astype(np.int64) * cfg.local_epochs
+        steps = np.maximum(steps, 1)
+
+        # real local training, cohort-vectorized (global model of *this* round)
+        cg = self.c_global
+        ci = None
+        if self.strategy.needs_scaffold:
+            zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+            ci_list = [self.c_clients.get(cid) or jax.tree.map(zeros, self.params)
+                       for cid in selection]
+            ci = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ci_list)
+        out_params, ci_new, losses = self.trainer.train_cohort(
+            self.params, self.data.X[selection], self.data.y[selection],
+            n_i, steps, cg, ci)
+        out_params = jax.tree.map(np.asarray, out_params)  # host copies
+        if self.strategy.needs_scaffold:
+            self._apply_scaffold_updates(selection, ci_new)
+
+        for k, cid in enumerate(selection):
+            rec = self.platform.invoke(cid, round_, self.loop.now,
+                                       float(steps[k]), self.hw[cid],
+                                       cfg.base_step_time)
+            self.db.mark_running(cid, round_)
+            update_k = jax.tree.map(lambda x: x[k], out_params)
+            self.loop.schedule(rec.duration, self._completion_cb(
+                cid, round_, rec, update_k, int(n_i[k]), float(losses[k])))
+
+    def _completion_cb(self, cid, round_, rec, update, n_samples, loss):
+        def cb():
+            if rec.failed:
+                self.db.mark_failed(cid)
+                return
+            train_dur = rec.duration  # includes startup/load/upload
+            self.db.mark_complete(cid, train_dur)
+            self.db.put_update(
+                ResultRecord(client_id=cid, round=round_, n_samples=n_samples,
+                             train_duration=train_dur,
+                             t_available=self.loop.now), update)
+            self._completed_this_round.add(cid)
+        return cb
+
+    def _apply_scaffold_updates(self, selection, ci_new) -> None:
+        old = [self.c_clients.get(cid) for cid in selection]
+        new_list = [jax.tree.map(lambda x: x[k], ci_new)
+                    for k in range(len(selection))]
+        # c <- c + sum(c_i' - c_i) / N_total
+        n_total = max(len(self.db.clients), 1)
+        delta = None
+        for cid, n, o in zip(selection, new_list, old):
+            if o is None:
+                o = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), n)
+            d = jax.tree.map(lambda a, b: a - b, n, o)
+            delta = d if delta is None else jax.tree.map(jnp.add, delta, d)
+            self.c_clients[cid] = n
+        if delta is not None:
+            self.c_global = jax.tree.map(
+                lambda c, d: c + d / n_total, self.c_global, delta)
+
+    def _aggregate(self, round_: int) -> tuple[int, int, float]:
+        strat = self.strategy
+        pending = [r for r in self.db.pending_results(self.cfg.max_staleness, round_)
+                   if strat.usable(r, round_)]
+        if not pending:
+            return 0, 0, float("nan")
+        weights = np.array([strat.result_weight(r, round_) for r in pending],
+                           np.float64)
+        total = weights.sum()
+        if not np.isfinite(total) or total <= 0:
+            # e.g. Eq. 1 zeroes round-0 updates at T=1: fall back to
+            # cardinality weighting so the aggregation stays well-defined
+            weights = np.array([r.n_samples for r in pending], np.float64)
+            total = weights.sum() or 1.0
+        weights = (weights / total).astype(np.float32)
+        updates = [jax.tree.map(jnp.asarray, self.db.blobs[r.update_key])
+                   for r in pending]
+        self.params = weighted_aggregate(
+            updates, weights,
+            out_dtype=jax.tree.leaves(self.params)[0].dtype)
+        n_stale = sum(1 for r in pending if r.round < round_)
+        mean_dur = float(np.mean([r.train_duration for r in pending]))
+        self.db.mark_aggregated(pending)
+        # prune: results too stale to ever be usable again
+        drop = [r for r in self.db.results
+                if not r.aggregated and round_ - r.round >= self.cfg.max_staleness]
+        self.db.mark_aggregated(drop)
+        return len(pending), n_stale, mean_dur
+
+    def _evaluate(self) -> float:
+        xs, ys = self.data.eval_x, self.data.eval_y
+        accs, bs = [], 256
+        for i in range(0, len(xs), bs):
+            accs.append(float(self._eval_fn(
+                self.params, {"x": jnp.asarray(xs[i:i + bs]),
+                              "y": jnp.asarray(ys[i:i + bs])})))
+        return float(np.mean(accs))
+
+    # -------------------------------------------------------------------- run
+    def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
+        cfg, strat = self.cfg, self.strategy
+        round_ = self.db.round
+        acc = 0.0
+        while round_ < cfg.rounds and self.loop.now < cfg.max_sim_time:
+            t0 = self.loop.now
+            selection = strat.select(self.db, round_)
+            if not selection:
+                # every client busy: advance until something completes
+                if not self.loop.run_until(
+                        lambda: any(c.status == "idle"
+                                    for c in self.db.clients.values())):
+                    break
+                continue
+            self._completed_this_round = set()
+            self._invoke_round(round_, selection)
+
+            if strat.is_async:
+                need = strat.results_needed()
+                ok = self.loop.run_until(
+                    lambda: len(self.db.pending_results(cfg.max_staleness, round_))
+                    >= need, max_time=cfg.max_sim_time)
+                if not ok and not self.db.pending_results(cfg.max_staleness, round_):
+                    break
+            else:
+                deadline = t0 + cfg.round_timeout
+                self.loop.run_until(
+                    lambda: self._completed_this_round >= set(selection),
+                    max_time=deadline)
+                # guarantee progress: at least one usable result
+                self.loop.run_until(
+                    lambda: any(strat.usable(r, round_) for r in
+                                self.db.pending_results(cfg.max_staleness, round_)),
+                    max_time=cfg.max_sim_time)
+
+            n_agg, n_stale, _ = self._aggregate(round_)
+            if n_agg == 0:
+                round_ += 1
+                self.db.round = round_
+                continue
+            if cfg.eval_every and round_ % cfg.eval_every == 0:
+                acc = self._evaluate()
+            log = RoundLog(round=round_, t_start=t0, t_end=self.loop.now,
+                           accuracy=acc, n_aggregated=n_agg, n_stale=n_stale,
+                           mean_loss=0.0)
+            self.history.append(log)
+            if progress:
+                progress(log)
+            round_ += 1
+            self.db.round = round_
+            if cfg.checkpoint_every and round_ % cfg.checkpoint_every == 0:
+                self.checkpoint()
+            if cfg.target_accuracy and acc >= cfg.target_accuracy:
+                break
+        return self.metrics()
+
+    # ---------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        inv = self.platform.invocations
+        cost = self.cost_model.total(inv, lambda cid: self.hw[cid])
+        counts = self.platform.invocation_counts()
+        count_arr = [counts.get(cid, 0) for cid in self.db.clients]
+        return {
+            "strategy": self.strategy.name,
+            "rounds": len(self.history),
+            "final_accuracy": self.history[-1].accuracy if self.history else 0.0,
+            "total_time": self.loop.now,
+            "total_cost_usd": cost,
+            "cold_start_ratio": self.platform.cold_start_ratio(),
+            "n_invocations": len(inv),
+            "selection_bias": (max(count_arr) - min(count_arr)) if count_arr else 0,
+            "invocation_counts": count_arr,
+            "history": [(l.t_end, l.round, l.accuracy) for l in self.history],
+        }
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for l in self.history:
+            if l.accuracy >= target:
+                return l.t_end
+        return None
+
+    # ------------------------------------------------------------- checkpoint
+    def checkpoint(self) -> None:
+        if not self.cfg.checkpoint_dir:
+            return
+        self.db.put_global_model(self.db.round,
+                                 jax.tree.map(np.asarray, self.params))
+        self.db.save(self.cfg.checkpoint_dir)
+
+    @classmethod
+    def resume(cls, cfg: FLConfig, model, data, fleet) -> "Controller":
+        db = Database.load(cfg.checkpoint_dir)
+        return cls(cfg, model, data, fleet, db=db)

@@ -1,0 +1,196 @@
+"""FedLess-style database (the paper's external state store).
+
+The real system keeps invocation records, client attributes and model
+updates in MongoDB; clients and the controller communicate exclusively
+through it (Algorithm 1 lines 6-7, 20-22). Here it is an in-process store
+with the same record semantics plus optional persistence (JSON metadata +
+NPZ parameter blobs) so the controller can crash and resume — the
+fault-tolerance path exercised in tests/test_checkpoint.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclass
+class ClientRecord:
+    client_id: int
+    hardware: str                      # profile name
+    data_cardinality: int
+    batch_size: int
+    local_epochs: int
+    booster: float = 1.0
+    status: str = "idle"               # idle | running
+    invoked_rounds: list = field(default_factory=list)
+    durations: list = field(default_factory=list)   # most-recent-LAST
+    n_invocations: int = 0
+    n_failures: int = 0
+
+    @property
+    def ever_invoked(self) -> bool:
+        return self.n_invocations > 0
+
+
+@dataclass
+class ResultRecord:
+    client_id: int
+    round: int                         # round the client trained against
+    n_samples: int
+    train_duration: float
+    t_available: float                 # sim time the update landed in the DB
+    aggregated: bool = False
+    update_key: str = ""               # key into the parameter blob store
+
+
+class Database:
+    """Transactional-enough store: every mutation goes through a method so a
+    snapshot/restore pair gives a consistent view (used for FT tests)."""
+
+    def __init__(self):
+        self.clients: dict[int, ClientRecord] = {}
+        self.results: list[ResultRecord] = []
+        self.blobs: dict[str, Any] = {}          # update pytrees (host numpy)
+        self.global_models: dict[int, str] = {}  # round -> blob key
+        self.round: int = 0
+        self.meta: dict[str, Any] = {}
+
+    # ------------------------------------------------------------- clients
+    def register_client(self, rec: ClientRecord) -> None:
+        self.clients[rec.client_id] = rec
+
+    def mark_running(self, client_id: int, round_: int) -> None:
+        c = self.clients[client_id]
+        c.status = "running"
+        c.invoked_rounds.append(round_)
+        c.n_invocations += 1
+
+    def mark_complete(self, client_id: int, duration: float) -> None:
+        c = self.clients[client_id]
+        c.status = "idle"
+        c.durations.append(duration)
+
+    def mark_failed(self, client_id: int) -> None:
+        c = self.clients[client_id]
+        c.status = "idle"
+        c.n_failures += 1
+
+    # ------------------------------------------------------------- results
+    def put_update(self, rec: ResultRecord, update: Any) -> None:
+        key = f"u{rec.client_id}r{rec.round}n{len(self.results)}"
+        rec.update_key = key
+        self.blobs[key] = update
+        self.results.append(rec)
+
+    def pending_results(self, max_staleness: int, current_round: int):
+        """Un-aggregated updates no older than max_staleness rounds."""
+        return [r for r in self.results
+                if not r.aggregated
+                and current_round - r.round <= max_staleness]
+
+    def mark_aggregated(self, recs) -> None:
+        for r in recs:
+            r.aggregated = True
+            # free the blob: aggregated updates are never re-read
+            self.blobs.pop(r.update_key, None)
+
+    def put_global_model(self, round_: int, params: Any) -> None:
+        key = f"g{round_}"
+        self.blobs[key] = params
+        self.global_models[round_] = key
+        # retain only a short history of globals
+        for r in sorted(self.global_models)[:-3]:
+            self.blobs.pop(self.global_models.pop(r), None)
+
+    def latest_global(self) -> Any:
+        r = max(self.global_models)
+        return self.blobs[self.global_models[r]]
+
+    # --------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        meta = {
+            "round": self.round,
+            "meta": self.meta,
+            "clients": {str(k): asdict(v) for k, v in self.clients.items()},
+            "results": [asdict(r) for r in self.results],
+            "global_models": {str(k): v for k, v in self.global_models.items()},
+        }
+        tmp = os.path.join(path, ".db.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, os.path.join(path, "db.json"))
+        flat = {}
+        for key, tree in self.blobs.items():
+            leaves, _ = _flatten(tree)
+            for i, leaf in enumerate(leaves):
+                flat[f"{key}|{i}"] = np.asarray(leaf)
+            flat[f"{key}|treedef"] = np.array(json.dumps(_treedef(tree)))
+        np.savez(os.path.join(path, "blobs.npz"), **flat)
+
+    @classmethod
+    def load(cls, path: str) -> "Database":
+        db = cls()
+        with open(os.path.join(path, "db.json")) as f:
+            meta = json.load(f)
+        db.round = meta["round"]
+        db.meta = meta["meta"]
+        for k, v in meta["clients"].items():
+            db.clients[int(k)] = ClientRecord(**v)
+        db.results = [ResultRecord(**r) for r in meta["results"]]
+        db.global_models = {int(k): v for k, v in meta["global_models"].items()}
+        data = np.load(os.path.join(path, "blobs.npz"), allow_pickle=False)
+        groups: dict[str, dict] = {}
+        for name in data.files:
+            key, idx = name.rsplit("|", 1)
+            groups.setdefault(key, {})[idx] = data[name]
+        for key, parts in groups.items():
+            tdef = json.loads(str(parts.pop("treedef")))
+            leaves = [parts[str(i)] for i in range(len(parts))]
+            db.blobs[key] = _unflatten(tdef, leaves)
+        return db
+
+
+# -- tiny pytree (nested-dict) flatten helpers, no jax dependency ------------
+
+
+def _flatten(tree):
+    leaves = []
+
+    def rec(node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k])
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v)
+        else:
+            leaves.append(node)
+
+    rec(tree)
+    return leaves, None
+
+
+def _treedef(tree):
+    if isinstance(tree, dict):
+        return {k: _treedef(tree[k]) for k in sorted(tree)}
+    if isinstance(tree, (list, tuple)):
+        return [_treedef(v) for v in tree]
+    return None
+
+
+def _unflatten(tdef, leaves):
+    it = iter(leaves)
+
+    def rec(node):
+        if isinstance(node, dict):
+            return {k: rec(node[k]) for k in sorted(node)}
+        if isinstance(node, list):
+            return [rec(v) for v in node]
+        return next(it)
+
+    return rec(tdef)

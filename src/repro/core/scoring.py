@@ -1,0 +1,58 @@
+"""Client Efficiency Scoring (paper §III-C, Algorithm 2).
+
+Five attributes are collected per training round: training duration, local
+data cardinality N_c, batch size B, local epochs E, and the booster value
+beta. The Client Efficiency Score (CEF) uses measured training throughput as
+an implicit hardware benchmark:
+
+    #updates            = N_c * E / B                    (optimizer steps)
+    per-round score_i   = N_c * (#updates / T_i)         (data-weighted throughput)
+    weighted_sum        = sum_i lambda^i * score_i       (i=0 most recent)
+    score               = beta * weighted_sum / sum_i lambda^i
+
+with decay rate lambda = 1 - rho and promotion rate 1 + rho (rho = 0.2 by
+default, paper §III-C).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def n_updates(data_cardinality: int, epochs: int, batch_size: int) -> float:
+    """Algorithm 2 line 2: number of local optimizer updates."""
+    return data_cardinality * epochs / max(batch_size, 1)
+
+
+def calculate_score(
+    booster: float,
+    durations: Sequence[float],
+    data_cardinality: int,
+    epochs: int,
+    batch_size: int,
+    decay: float,
+) -> float:
+    """Algorithm 2. ``durations`` is ordered most-recent-first (i=0 newest).
+
+    Returns beta * (sum_i decay^i * N_c * #updates / T_i) / (sum_i decay^i).
+    """
+    if not durations:
+        return 0.0
+    upd = n_updates(data_cardinality, epochs, batch_size)
+    weighted_sum = 0.0
+    norm = 0.0
+    w = 1.0
+    for t in durations:
+        weighted_sum += w * data_cardinality * (upd / max(t, 1e-9))
+        norm += w
+        w *= decay
+    return booster * weighted_sum / norm
+
+
+def decay_rate(adjustment_rate: float) -> float:
+    """lambda = 1 - rho."""
+    return 1.0 - adjustment_rate
+
+
+def promotion_rate(adjustment_rate: float) -> float:
+    """beta multiplier = 1 + rho."""
+    return 1.0 + adjustment_rate

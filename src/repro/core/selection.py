@@ -1,0 +1,74 @@
+"""Probabilistic client selection (paper §III-D, Algorithm 3).
+
+1. Split clients into uninvoked vs invoked; drop busy clients.
+2. While uninvoked clients remain, sample the round uniformly from them
+   (bootstraps the scoring data).
+3. Otherwise compute every available client's weighted score (Algorithm 2),
+   normalize to probabilities, and sample without replacement.
+4. Booster bookkeeping: reset to 1 for selected clients; multiply by the
+   promotion rate (1 + rho) for available-but-unselected clients.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.database import ClientRecord, Database
+from repro.core.scoring import calculate_score, decay_rate, promotion_rate
+
+
+def select_clients(
+    db: Database,
+    clients_per_round: int,
+    rng: np.random.Generator,
+    adjustment_rate: float = 0.2,
+    history_window: int = 10,
+) -> list[int]:
+    clients = list(db.clients.values())
+    uninvoked = [c for c in clients if not c.ever_invoked and c.status == "idle"]
+    invoked = [c for c in clients if c.ever_invoked and c.status == "idle"]
+
+    # Lines 4-6: prioritize uninvoked clients to gather scoring data.
+    if len(uninvoked) >= clients_per_round:
+        picks = rng.choice(len(uninvoked), size=clients_per_round, replace=False)
+        selection = [uninvoked[i].client_id for i in picks]
+        _update_boosters(db, selection, adjustment_rate)
+        return selection
+
+    selection = [c.client_id for c in uninvoked]
+    need = clients_per_round - len(selection)
+    need = min(need, len(invoked))
+    if need > 0:
+        lam = decay_rate(adjustment_rate)
+        scores = np.array([
+            calculate_score(
+                c.booster,
+                list(reversed(c.durations[-history_window:])),  # newest first
+                c.data_cardinality, c.local_epochs, c.batch_size, lam)
+            for c in invoked
+        ], dtype=np.float64)
+        # Line 12: normalize scores into probabilities.
+        smax = scores.max() if len(scores) else 0.0
+        if smax <= 0:
+            probs = np.full(len(invoked), 1.0 / len(invoked))
+        else:
+            norm = scores / smax                    # scale to (0, 1]
+            probs = norm / norm.sum()
+        picks = rng.choice(len(invoked), size=need, replace=False, p=probs)
+        selection += [invoked[i].client_id for i in picks]
+
+    _update_boosters(db, selection, adjustment_rate)
+    return selection
+
+
+def _update_boosters(db: Database, selection: Sequence[int],
+                     adjustment_rate: float) -> None:
+    """Lines 14-15: reset selected boosters, promote available-unselected."""
+    beta = promotion_rate(adjustment_rate)
+    chosen = set(selection)
+    for c in db.clients.values():
+        if c.client_id in chosen:
+            c.booster = 1.0
+        elif c.status == "idle":
+            c.booster *= beta

@@ -1,0 +1,1 @@
+from repro.core.strategies.base import STRATEGIES, Strategy, build_strategy  # noqa: F401

@@ -1,0 +1,172 @@
+"""FL training strategies: Apodotiko + the five baselines the paper
+evaluates against (FedAvg, FedProx, SCAFFOLD, FedLesScan, FedBuff).
+
+A strategy decides (a) which clients to invoke each round, (b) when the
+controller may aggregate (sync with timeout / semi-async / async with a
+concurrency-or-buffer ratio), (c) the aggregation weights for each available
+result (cardinality x staleness damping), and (d) client-side training
+modifications (proximal term, control variates).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.database import Database, ResultRecord
+from repro.core.selection import select_clients as apodotiko_select
+from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko
+
+
+@dataclass
+class StrategyConfig:
+    clients_per_round: int = 100
+    concurrency_ratio: float = 0.3     # Apodotiko CR / FedBuff buffer ratio
+    adjustment_rate: float = 0.2       # rho
+    max_staleness: int = 5             # paper: at most five previous rounds
+    round_timeout: float = 300.0       # sync strategies
+    prox_mu: float = 0.01
+    staleness_fn: str = "eq2"
+    seed: int = 0
+
+
+class Strategy:
+    name = "base"
+    is_async = False          # async aggregation (CR-triggered)
+    semi_async = False        # FedLesScan: late updates used next round
+    needs_scaffold = False
+    prox_mu = 0.0
+
+    def __init__(self, cfg: StrategyConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+
+    # -- selection ------------------------------------------------------------
+    def select(self, db: Database, round_: int) -> list[int]:
+        """Default: uniform random among idle clients (FedAvg/FedProx/etc.)."""
+        idle = [c.client_id for c in db.clients.values() if c.status == "idle"]
+        n = min(self.cfg.clients_per_round, len(idle))
+        picks = self.rng.choice(len(idle), size=n, replace=False)
+        return [idle[i] for i in picks]
+
+    # -- aggregation gating -----------------------------------------------------
+    def results_needed(self) -> int:
+        if self.is_async:
+            return max(1, int(np.ceil(self.cfg.clients_per_round
+                                      * self.cfg.concurrency_ratio)))
+        return self.cfg.clients_per_round
+
+    # -- aggregation weights ------------------------------------------------------
+    def staleness(self, t_i: int, T: int) -> float:
+        return 1.0  # sync strategies only see current-round results
+
+    def result_weight(self, rec: ResultRecord, T: int) -> float:
+        return self.staleness(rec.round, T) * rec.n_samples
+
+    def usable(self, rec: ResultRecord, T: int) -> bool:
+        """May this un-aggregated result enter round T's aggregation?"""
+        if self.is_async or self.semi_async:
+            return T - rec.round <= self.cfg.max_staleness
+        return rec.round == T
+
+
+class FedAvg(Strategy):
+    name = "fedavg"
+
+
+class FedProx(Strategy):
+    name = "fedprox"
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.prox_mu = cfg.prox_mu
+
+
+class Scaffold(Strategy):
+    name = "scaffold"
+    needs_scaffold = True
+
+
+class FedLesScan(Strategy):
+    """Semi-asynchronous: clustering-based selection on past training
+    durations + Eq. 1 staleness for late updates (the prior SoTA the paper
+    improves on)."""
+
+    name = "fedlesscan"
+    semi_async = True
+
+    def staleness(self, t_i: int, T: int) -> float:
+        return eq1_fedlesscan(t_i, T)
+
+    def select(self, db: Database, round_: int) -> list[int]:
+        cfg = self.cfg
+        clients = list(db.clients.values())
+        idle = [c for c in clients if c.status == "idle"]
+        uninvoked = [c for c in idle if not c.ever_invoked]
+        if len(uninvoked) >= cfg.clients_per_round:
+            picks = self.rng.choice(len(uninvoked), cfg.clients_per_round,
+                                    replace=False)
+            return [uninvoked[i].client_id for i in picks]
+        selection = [c.client_id for c in uninvoked]
+        invoked = [c for c in idle if c.ever_invoked]
+        if not invoked:
+            return selection
+        # cluster invoked clients by mean duration (1-D k-means, k=3)
+        means = np.array([np.mean(c.durations[-5:]) if c.durations else 0.0
+                          for c in invoked])
+        order = np.argsort(means)
+        k = 3 if len(invoked) >= 3 else 1
+        clusters = np.array_split(order, k)  # duration-sorted tiers
+        need = cfg.clients_per_round - len(selection)
+        for cl in clusters:  # fastest tier first; stragglers fill remainder
+            take = min(need, len(cl))
+            picks = self.rng.choice(len(cl), take, replace=False)
+            selection += [invoked[cl[i]].client_id for i in picks]
+            need -= take
+            if need <= 0:
+                break
+        return selection
+
+
+class FedBuff(Strategy):
+    """Asynchronous buffered aggregation with *random* selection (the paper's
+    closest async baseline; production at Meta)."""
+
+    name = "fedbuff"
+    is_async = True
+
+    def staleness(self, t_i: int, T: int) -> float:
+        return eq2_apodotiko(t_i, T)  # 1/sqrt(1+staleness), as in FedBuff
+
+    def select(self, db: Database, round_: int) -> list[int]:
+        idle = [c.client_id for c in db.clients.values() if c.status == "idle"]
+        n = min(self.cfg.clients_per_round, len(idle))
+        picks = self.rng.choice(len(idle), size=n, replace=False)
+        return [idle[i] for i in picks]
+
+
+class Apodotiko(Strategy):
+    """The paper's strategy: CEF scoring + probabilistic selection +
+    CR-gated asynchronous aggregation with Eq. 2 staleness damping."""
+
+    name = "apodotiko"
+    is_async = True
+
+    def staleness(self, t_i: int, T: int) -> float:
+        if self.cfg.staleness_fn == "eq1":
+            return eq1_fedlesscan(t_i, T)
+        return eq2_apodotiko(t_i, T)
+
+    def select(self, db: Database, round_: int) -> list[int]:
+        return apodotiko_select(db, self.cfg.clients_per_round, self.rng,
+                                adjustment_rate=self.cfg.adjustment_rate)
+
+
+STRATEGIES = {
+    s.name: s for s in (FedAvg, FedProx, Scaffold, FedLesScan, FedBuff, Apodotiko)
+}
+
+
+def build_strategy(name: str, cfg: StrategyConfig) -> Strategy:
+    return STRATEGIES[name](cfg)

@@ -1,0 +1,9 @@
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition,
+    label_shard_partition,
+    lognormal_cardinalities,
+)
+from repro.data.synthetic import (  # noqa: F401
+    FederatedDataset,
+    make_federated_dataset,
+)

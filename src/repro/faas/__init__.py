@@ -1,0 +1,4 @@
+from repro.faas.events import EventLoop  # noqa: F401
+from repro.faas.hardware import HARDWARE_PROFILES, HardwareProfile  # noqa: F401
+from repro.faas.platform import FaaSPlatform, InvocationRecord  # noqa: F401
+from repro.faas.cost import CostModel  # noqa: F401

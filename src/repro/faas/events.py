@@ -1,0 +1,62 @@
+"""Discrete-event engine for the serverless simulation.
+
+Simulated wall-clock is fully decoupled from real compute: client training
+runs eagerly in JAX while durations come from the hardware model, so the
+event loop reproduces the paper's timing behaviour (cold starts, stragglers,
+round timeouts) deterministically and fast.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    callback: Callable[[], None] = field(compare=False)
+    cancelled: bool = field(compare=False, default=False)
+
+
+class EventLoop:
+    def __init__(self):
+        self._heap: list[_Event] = []
+        self._seq = itertools.count()
+        self.now: float = 0.0
+
+    def schedule(self, delay: float, callback: Callable[[], None]) -> _Event:
+        assert delay >= 0, delay
+        ev = _Event(self.now + delay, next(self._seq), callback)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def cancel(self, ev: _Event) -> None:
+        ev.cancelled = True
+
+    def run_until(self, predicate: Callable[[], bool],
+                  max_time: float = float("inf")) -> bool:
+        """Pop events until predicate() holds. Returns False if the loop
+        drained or max_time passed first."""
+        while not predicate():
+            if not self._heap:
+                return False
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if ev.time > max_time:
+                heapq.heappush(self._heap, ev)  # put back; caller hit deadline
+                self.now = max_time
+                return False
+            self.now = ev.time
+            ev.callback()
+        return True
+
+    def run_all(self, max_time: float = float("inf")) -> None:
+        self.run_until(lambda: False, max_time)
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for e in self._heap if not e.cancelled)

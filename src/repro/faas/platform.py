@@ -1,0 +1,84 @@
+"""FaaS platform simulation: function instances, cold starts, scale-to-zero.
+
+Models the serverless client lifecycle the paper measures (IV-A5):
+  - a client function instance is *warm* if it served an invocation within
+    ``keep_warm`` seconds (paper: instances scale down after 10 idle minutes);
+  - a cold invocation pays ``cold_start_s`` (container pull + runtime boot +
+    model/dataset load is accounted separately by the duration model);
+  - the platform records every invocation for the cold-start-ratio metric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.faas.hardware import HardwareProfile
+
+
+@dataclass
+class InvocationRecord:
+    client_id: int
+    round: int
+    t_invoked: float
+    cold: bool
+    duration: float = 0.0
+    t_completed: float = 0.0
+    failed: bool = False
+
+
+@dataclass
+class _Instance:
+    warm_until: float = -1.0
+    busy_until: float = -1.0
+
+
+class FaaSPlatform:
+    def __init__(self, *, keep_warm: float = 600.0, cold_start_s: float = 8.0,
+                 model_load_s: float = 2.0, upload_s: float = 1.0,
+                 seed: int = 0, failure_rate: float = 0.0):
+        self.keep_warm = keep_warm
+        self.cold_start_s = cold_start_s
+        self.model_load_s = model_load_s
+        self.upload_s = upload_s
+        self.failure_rate = failure_rate
+        self._instances: dict[int, _Instance] = {}
+        self._rng = np.random.default_rng(seed)
+        self.invocations: list[InvocationRecord] = []
+
+    # ------------------------------------------------------------------ API
+    def invoke(self, client_id: int, round_: int, now: float,
+               train_steps: float, hw: HardwareProfile,
+               base_step_time: float) -> InvocationRecord:
+        """Returns the invocation record with ``duration`` filled in
+        (invocation latency + load + train + upload)."""
+        inst = self._instances.setdefault(client_id, _Instance())
+        cold = now > inst.warm_until
+        startup = self.cold_start_s * self._rng.uniform(0.8, 1.3) if cold else 0.15
+        speed = hw.speed * float(np.exp(self._rng.normal(0.0, hw.variability)))
+        train_time = train_steps * base_step_time / speed
+        failed = bool(self._rng.random() < self.failure_rate)
+        duration = startup + self.model_load_s + train_time + self.upload_s
+        if failed:
+            # fail partway through (crash / preemption)
+            duration = startup + self.model_load_s + train_time * self._rng.uniform(0.1, 0.9)
+        rec = InvocationRecord(client_id, round_, now, cold,
+                               duration=duration, t_completed=now + duration,
+                               failed=failed)
+        inst.busy_until = rec.t_completed
+        inst.warm_until = rec.t_completed + self.keep_warm
+        self.invocations.append(rec)
+        return rec
+
+    # -------------------------------------------------------------- metrics
+    def cold_start_ratio(self) -> float:
+        if not self.invocations:
+            return 0.0
+        return sum(r.cold for r in self.invocations) / len(self.invocations)
+
+    def invocation_counts(self) -> dict[int, int]:
+        counts: dict[int, int] = {}
+        for r in self.invocations:
+            counts[r.client_id] = counts.get(r.client_id, 0) + 1
+        return counts

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+TPU adaptation (not a CUDA port): the online-softmax accumulation is kept in
+fp32 VREGs; tiles are MXU-shaped (q block 128 x head_dim, kv block 128);
+per-(batch*head) K/V panels are VMEM-resident (HBM->VMEM once per panel) and
+the q grid walks over them — the HBM->VMEM->MXU hierarchy replaces the
+SRAM/warp structure of the GPU algorithm. For causal attention the kv loop
+is bounded by the query block index, halving work (the XLA fallback
+materializes the full S x T score matrix; this kernel never does).
+
+Scope: forward pass, used on the serving path (prefill); training uses the
+XLA attention (see DESIGN.md — kernels stay off the CPU dry-run path since
+Mosaic requires a real TPU; correctness is validated in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -2.0**30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale, block_k, causal):
+    # q_ref [BQ, D]; k_ref/v_ref [T, D] (VMEM-resident panel); o_ref [BQ, D]
+    bq = q_ref.shape[0]
+    T = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    qi = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+
+    nkb = T // block_k
+    if causal:
+        # only kv blocks whose start <= last query position
+        nkb = jnp.minimum(nkb, (qi + 1) * bq // block_k + (bq % block_k != 0))
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [BQ, BK]
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot(p.astype(v.dtype), v)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, q_ref.shape[1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
+                                              "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale=None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jax.Array:
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D]. S % block_q == T % block_k == 0."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    assert S % block_q == 0 and T % block_k == 0, (S, T)
+    qr = q.reshape(B * H, S, D)
+    kr = k.reshape(B * H, T, D)
+    vr = v.reshape(B * H, T, D)
+    kernel = functools.partial(_fa_kernel, sm_scale=sm_scale,
+                               block_k=block_k, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((None, T, D), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((None, T, D), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, D)

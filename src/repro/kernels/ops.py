@@ -1,0 +1,102 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True unless running on a real TPU backend — the
+kernels target TPU (Mosaic); on this CPU container they execute through the
+Pallas interpreter, validated against ``repro.kernels.ref`` oracles.
+
+Higher-level conveniences:
+  - ``aggregate_pytree``: staleness-weighted aggregation over a list of
+    parameter pytrees (ravel -> kernel -> unravel), the drop-in kernel path
+    for ``repro.core.aggregation``;
+  - ``compress_update`` / ``decompress_update``: int8 client-update
+    compression with error feedback.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.fused_adam import fused_adam  # noqa: F401
+from repro.kernels.quant8 import QBLOCK, ROWS, dequantize_q8, quantize_q8  # noqa: F401
+from repro.kernels.staleness_agg import staleness_agg  # noqa: F401
+
+Pytree = Any
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+def _ravel(tree: Pytree):
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, leaves
+
+
+def _unravel(flat: jax.Array, like_leaves, treedef) -> Pytree:
+    out, off = [], 0
+    for l in like_leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def aggregate_pytree(updates: Sequence[Pytree], weights,
+                     interpret: Optional[bool] = None) -> Pytree:
+    """Kernel-path equivalent of core.aggregation.weighted_aggregate."""
+    interpret = default_interpret() if interpret is None else interpret
+    treedef = jax.tree.structure(updates[0])
+    flats = []
+    leaves0 = None
+    for u in updates:
+        f, leaves = _ravel(u)
+        leaves0 = leaves0 or leaves
+        flats.append(f)
+    stacked = jnp.stack(flats, 0)
+    N = stacked.shape[1]
+    pad = (-N) % 1024
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    agg = staleness_agg(stacked, jnp.asarray(weights), interpret=interpret)
+    return _unravel(agg[:N], leaves0, treedef)
+
+
+def compress_update(update: Pytree, error_feedback: Optional[Pytree] = None,
+                    interpret: Optional[bool] = None):
+    """int8-compress a client update with residual error feedback.
+
+    Returns ((q, scales, meta), new_error_feedback)."""
+    interpret = default_interpret() if interpret is None else interpret
+    treedef = jax.tree.structure(update)
+    flat, leaves = _ravel(update)
+    if error_feedback is not None:
+        flat = flat + error_feedback
+    N = flat.shape[0]
+    pad = (-N) % (ROWS * QBLOCK)
+    flat_p = jnp.pad(flat, (0, pad)) if pad else flat
+    q, s = quantize_q8(flat_p, interpret=interpret)
+    deq = dequantize_q8(q, s, interpret=interpret)[:N]
+    err = flat - deq
+    meta = (treedef, [(l.shape, l.dtype) for l in leaves], N)
+    return (q, s, meta), err
+
+
+def decompress_update(q, s, meta, interpret: Optional[bool] = None) -> Pytree:
+    interpret = default_interpret() if interpret is None else interpret
+    treedef, shapes, N = meta
+    flat = dequantize_q8(q, s, interpret=interpret)[:N]
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernels: block-scaled int8 (de)quantization for gradient /
+client-update compression.
+
+Serverless FL ships every client update over the WAN (and the TPU mapping
+ships it over ICI during the weighted psum); 4x compression with per-256
+block scales keeps aggregation quality while quartering collective bytes
+(used by the beyond-paper hillclimb in EXPERIMENTS.md §Perf). Layout: values
+reshaped [N/256, 256] so each scale block is one aligned VMEM row; tiles of
+8 rows (8x256) match the fp32 sublane x lane register shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 256     # elements per scale
+ROWS = 8         # scale-blocks per kernel tile
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                   # [ROWS, QBLOCK]
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)                   # [ROWS, QBLOCK]
+    x_ref[...] = (q * s_ref[...]).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_q8(x: jax.Array, *, interpret: bool = True):
+    """x [N] with N % (ROWS*QBLOCK) == 0 -> (int8 [N], scales [N/QBLOCK])."""
+    N = x.shape[0]
+    assert N % (ROWS * QBLOCK) == 0, N
+    nb = N // QBLOCK
+    x2 = x.reshape(nb, QBLOCK)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, QBLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2)
+    return q.reshape(N), s.reshape(nb)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "dtype"))
+def dequantize_q8(q: jax.Array, scales: jax.Array, *,
+                  dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    N = q.shape[0]
+    nb = N // QBLOCK
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb // ROWS,),
+        in_specs=[
+            pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, QBLOCK), dtype),
+        interpret=interpret,
+    )(q.reshape(nb, QBLOCK), scales.reshape(nb, 1))
+    return out.reshape(N)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def staleness_agg(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """updates [K, N], weights [K] -> weighted sum [N] (fp32 accumulate)."""
+    return jnp.einsum("kn,k->n", updates.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(updates.dtype)
+
+
+def quantize_q8(x: jax.Array, block: int = 256):
+    """x [N] (N % block == 0) -> (int8 values [N], fp32 scales [N/block])."""
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_q8(q: jax.Array, scale: jax.Array, block: int = 256) -> jax.Array:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1)
+
+
+def fused_adam(p, m, v, g, *, lr, b1=0.9, b2=0.999, eps=1e-8, t=1):
+    """Single fused Adam step on flat arrays (fp32 math)."""
+    g = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g
+    v_new = b2 * v + (1 - b2) * g * g
+    mhat = m_new / (1 - b1 ** t)
+    vhat = v_new / (1 - b2 ** t)
+    p_new = p.astype(jnp.float32) - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p_new.astype(p.dtype), m_new, v_new
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D]. Naive softmax oracle."""
+    if sm_scale is None:
+        sm_scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        S, T = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -2.0**30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract memory / cost / collective analyses.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder host devices.
+(Only this entry point gets 512 devices — tests and benchmarks see 1.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.steps import build_cell
+from repro.models import build_model
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides=None, rules_override=None, verbose: bool = True,
+             roofline: bool = True, variant: str = "baseline"):
+    """Lower+compile one cell; returns a result dict (or skip/error record).
+
+    Two lowerings per single-pod cell:
+      1. production program (scan over layers) -> proves compile-at-scale,
+         gives memory_analysis;
+      2. roofline program (unroll_layers=True) -> exact cost_analysis and
+         collective bytes (XLA counts while-loop bodies once; unrolling
+         removes the undercount). Multi-pod cells compile only (1) — the
+         roofline table is single-pod per the assignment.
+    """
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape, mesh, overrides=overrides,
+                          rules_override=rules_override, variant=variant)
+        compiled_scan = cell.lower().compile()
+        compile_s = time.time() - t0
+        mem = compiled_scan.memory_analysis()
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] compiled in "
+                  f"{compile_s:.1f}s")
+            print("  memory_analysis:", mem)
+        total_params = sum(
+            int(x.size) for x in jax.tree.leaves(cell.in_args[0]))
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "ok", "kind": cell.kind,
+               "total_params": total_params, "compile_s": compile_s}
+        if not (roofline and not multi_pod):
+            peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes) if mem else 0
+            rec["peak_memory_per_device"] = peak
+            return rec
+        # roofline lowering: unrolled layers, exact cost analysis
+        t1 = time.time()
+        ov = dict(overrides or {})
+        ov["unroll_layers"] = True
+        cell_u = build_cell(arch, shape, mesh, overrides=ov,
+                            rules_override=rules_override, variant=variant)
+        compiled_u = cell_u.lower().compile()
+        unroll_compile_s = time.time() - t1
+        hlo = compiled_u.as_text()
+        roof = analyze(compiled_u, hlo, arch=arch, shape=shape,
+                       mesh_name=mesh_name, n_devices=mesh.size,
+                       cfg=cell.cfg, total_params=total_params,
+                       kind=cell.kind, compile_s=compile_s,
+                       mem_compiled=compiled_scan)
+        rec.update(roof.to_dict())
+        rec.update({"status": "ok", "kind": cell.kind,
+                    "total_params": total_params, "variant": variant,
+                    "unroll_compile_s": unroll_compile_s})
+        if verbose:
+            print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+                  f"memory={roof.memory_s*1e3:.2f}ms "
+                  f"collective={roof.collective_s*1e3:.2f}ms "
+                  f"bottleneck={roof.bottleneck} "
+                  f"useful_ratio={roof.useful_ratio:.2f} mfu={roof.mfu:.3f}")
+        return rec
+    except Exception as e:  # noqa: BLE001 — report, don't die mid-sweep
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+                "compile_s": time.time() - t0}
+
+
+PROBE_DEPTHS = {
+    # (L1, L2) reduced depths for cost extrapolation, respecting each arch's
+    # structural period (hybrid attn_period=6, vlm cross period=4, deepseek
+    # first dense layer, enc-dec symmetric stacks)
+    "qwen3-1.7b": (4, 8), "granite-8b": (4, 8), "yi-6b": (4, 8),
+    "qwen3-4b": (4, 8), "llama-3.2-vision-11b": (4, 8),
+    "zamba2-2.7b": (6, 12), "deepseek-v2-lite-16b": (4, 7),
+    "arctic-480b": (4, 8), "mamba2-370m": (4, 8),
+    "seamless-m4t-large-v2": (4, 8),
+}
+
+
+def _depth_overrides(arch: str, L: int) -> dict:
+    ov = {"n_layers": L, "unroll_layers": True}
+    if arch == "seamless-m4t-large-v2":
+        ov["enc_layers"] = L // 2
+        ov["dec_layers"] = L // 2
+    return ov
+
+
+def run_cell_extrapolated(arch: str, shape_name: str, *, overrides=None,
+                          verbose: bool = True):
+    """Roofline costing via two reduced-depth unrolled lowerings + linear
+    extrapolation in layer count (cost_analysis is exact for the unrolled
+    program; per-layer cost is depth-independent for homogeneous stacks).
+    Used where the full-depth unrolled compile is prohibitive on this host.
+    The full-depth scan compile still proves compile-at-scale + memory."""
+    from repro.launch.roofline import (
+        Roofline, _cost_value, collective_bytes_per_device, model_flops,
+        ssd_inner_scan_correction)
+
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": "16x16",
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=False)
+        cell = build_cell(arch, shape, mesh, overrides=overrides)
+        compiled_scan = cell.lower().compile()
+        compile_s = time.time() - t0
+        mem = compiled_scan.memory_analysis()
+        total_params = sum(int(x.size) for x in jax.tree.leaves(cell.in_args[0]))
+        L1, L2 = PROBE_DEPTHS[arch]
+        probes = []
+        t1 = time.time()
+        for L in (L1, L2):
+            ov = dict(overrides or {})
+            ov.update(_depth_overrides(arch, L))
+            c = build_cell(arch, shape, mesh, overrides=ov)
+            comp = c.lower().compile()
+            cost = comp.cost_analysis()
+            probes.append({
+                "L": L,
+                "flops": _cost_value(cost, "flops"),
+                "bytes": _cost_value(cost, "bytes accessed"),
+                "coll": collective_bytes_per_device(comp.as_text(), mesh.size),
+                "cfg": c.cfg,
+            })
+        unroll_compile_s = time.time() - t1
+
+        def extrap(v1, v2):
+            slope = (v2 - v1) / (L2 - L1)
+            return max(v1 + slope * (cfg.n_layers - L1), 0.0)
+
+        p1, p2 = probes
+        # add ssd inner-scan corrections at probe depths before extrapolating
+        f1 = p1["flops"] + ssd_inner_scan_correction(p1["cfg"], shape, cell.kind) / mesh.size
+        f2 = p2["flops"] + ssd_inner_scan_correction(p2["cfg"], shape, cell.kind) / mesh.size
+        flops = extrap(f1, f2)
+        byts = extrap(p1["bytes"], p2["bytes"])
+        coll_total = extrap(p1["coll"]["total"], p2["coll"]["total"])
+        coll = {k: extrap(p1["coll"].get(k, 0.0), p2["coll"].get(k, 0.0))
+                for k in p1["coll"]}
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes) if mem else 0
+        roof = Roofline(
+            arch=arch, shape=shape.name, mesh="16x16", n_devices=mesh.size,
+            flops_per_device=flops, bytes_per_device=byts,
+            coll_bytes_per_device=coll_total, coll_breakdown=coll,
+            peak_memory_per_device=peak,
+            model_flops_global=model_flops(cfg, shape, total_params),
+            compile_s=compile_s)
+        rec = roof.to_dict()
+        rec.update({"status": "ok", "kind": cell.kind,
+                    "total_params": total_params, "variant": "baseline",
+                    "cost_mode": f"extrapolated[{L1},{L2}]",
+                    "unroll_compile_s": unroll_compile_s})
+        if verbose:
+            print(f"[{arch} x {shape_name} x 16x16] scan compile "
+                  f"{compile_s:.1f}s, probes {unroll_compile_s:.1f}s")
+            print(f"  roofline(extrap): compute={roof.compute_s*1e3:.2f}ms "
+                  f"memory={roof.memory_s*1e3:.2f}ms "
+                  f"collective={roof.collective_s*1e3:.2f}ms "
+                  f"bottleneck={roof.bottleneck} "
+                  f"useful_ratio={roof.useful_ratio:.2f} mfu={roof.mfu:.3f}")
+        return rec
+    except Exception as e:  # noqa: BLE001
+        return {"arch": arch, "shape": shape_name, "mesh": "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+                "compile_s": time.time() - t0}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="input shape (default: all four)")
+    ap.add_argument("--all", action="store_true", help="all 10 architectures")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--remat", default=None, choices=["on", "off"])
+    ap.add_argument("--zero1", default=None, choices=["on", "off"])
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="scan-compile proof only (skip the unrolled costing)")
+    ap.add_argument("--variant", default="baseline",
+                    help="cell variant (e.g. scatter_bf16 for fl_round)")
+    ap.add_argument("--cost-mode", default="unroll",
+                    choices=["unroll", "extrapolate"],
+                    help="roofline costing: full unroll or 2-point depth "
+                         "extrapolation (for archs whose full unrolled "
+                         "compile is prohibitive on this host)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    overrides = {}
+    if args.remat:
+        overrides["remat"] = args.remat == "on"
+    if args.zero1:
+        overrides["zero1"] = args.zero1 == "on"
+    if args.optimizer:
+        overrides["optimizer"] = args.optimizer
+
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                if args.cost_mode == "extrapolate" and not mp:
+                    rec = run_cell_extrapolated(arch, shape,
+                                                overrides=overrides or None)
+                else:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   overrides=overrides or None,
+                                   roofline=not args.no_roofline,
+                                   variant=args.variant)
+                if rec["status"] == "error":
+                    n_err += 1
+                    print(f"[{arch} x {shape} x "
+                          f"{'2x16x16' if mp else '16x16'}] ERROR: "
+                          f"{rec['error']}", file=sys.stderr)
+                    print(rec.get("traceback", ""), file=sys.stderr)
+                elif rec["status"] == "skipped":
+                    print(f"[{arch} x {shape}] skipped: {rec['reason']}")
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Production target: TPU v5e pods, 256 chips per pod
+as a (data=16, model=16) mesh; the multi-pod variant adds a leading
+``pod`` axis (2 pods = 512 chips). The FL mapping treats ``pod`` as the
+cohort axis (each pod trains a cohort member group; staleness-weighted
+aggregation is a weighted psum over ``pod`` — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 8):
+    """Small mesh for unit tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh((n_devices // 4, 4), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

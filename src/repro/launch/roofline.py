@@ -1,0 +1,255 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+  memory_s     = HLO_bytes_per_device / HBM_BW
+  collective_s = collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` FLOPs/bytes are per-partition (the compiled module is the
+SPMD-partitioned program). Collective bytes are NOT in cost_analysis: we
+parse the optimized HLO and sum payload bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, scaled by the
+ring-transfer factor for the op's group size.
+
+MODEL_FLOPS (analytic useful compute) = 6*N*D for dense training,
+6*N_active*D for MoE; 2*N*D for pure forward (prefill/decode); attention
+score/value FLOPs are added separately. The ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat recompute and dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)"
+                       r"\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str, n_devices: int) -> dict:
+    """Sum effective bytes moved per device, by collective kind.
+
+    Ring-transfer factors (payload = result bytes, group size g):
+      all-reduce: 2 (g-1)/g, all-gather/reduce-scatter/all-to-all: (g-1)/g,
+      collective-permute: 1.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        payload = _shape_bytes(shape_str)
+        # find the group size on the same line
+        line_end = hlo_text.find("\n", m.start())
+        line = hlo_text[m.start():line_end if line_end > 0 else None]
+        g = n_devices
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(len(gm.group(1).split(",")), 1)
+        else:
+            gm2 = _GROUPS_IOTA_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        if g <= 1:
+            continue
+        factor = {"all-reduce": 2.0 * (g - 1) / g,
+                  "all-gather": (g - 1) / g,
+                  "reduce-scatter": (g - 1) / g,
+                  "all-to-all": (g - 1) / g,
+                  "collective-permute": 1.0}[kind]
+        out[kind] += payload * factor
+    out["total"] = sum(out.values())
+    return out
+
+
+def _cost_value(cost, key: str) -> float:
+    if cost is None:
+        return 0.0
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return float(cost.get(key, 0.0))
+
+
+def active_params(cfg: ModelConfig, total_params: int) -> int:
+    """Per-token active parameter count (MoE: only routed top-k + shared)."""
+    if not cfg.n_experts:
+        return total_params
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    routed_total = cfg.n_experts * per_expert * (cfg.n_layers - cfg.first_dense_layers)
+    active_routed = cfg.top_k * per_expert * (cfg.n_layers - cfg.first_dense_layers)
+    return total_params - routed_total + active_routed
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, total_params: int) -> float:
+    """Analytic useful FLOPs for the step (global, all devices)."""
+    if shape.kind == "flround":
+        # K-way weighted reduce: one multiply-add per stacked-update element
+        # (total_params here counts the [K, ...] stacked input)
+        return 2.0 * total_params
+    n_act = active_params(cfg, total_params)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_act * tokens
+        # causal attention scores+values: 6 * L * B * S^2 * H * hd (fwd+bwd),
+        # halved for causality
+        hd = cfg.hd()
+        attn = 6.0 * cfg.n_layers * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.n_heads * hd * 0.5 if cfg.family not in ("ssm",) else 0.0
+        return base + attn
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        hd = cfg.hd()
+        attn = 2.0 * cfg.n_layers * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.n_heads * hd * 0.5 if cfg.family not in ("ssm",) else 0.0
+        return 2.0 * n_act * tokens + attn
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    hd = cfg.hd()
+    attn = 2.0 * cfg.n_layers * shape.global_batch * shape.seq_len \
+        * cfg.n_heads * hd * 2.0 if cfg.family not in ("ssm",) else 0.0
+    return 2.0 * n_act * tokens + attn
+
+
+def ssd_inner_scan_correction(cfg: ModelConfig, shape: ShapeConfig,
+                              kind: str) -> float:
+    """Global FLOPs to add for the Mamba2 SSD *chunk* scan.
+
+    The layer scan is unrolled for the roofline lowering, but the SSD
+    intra-layer chunk scan stays a while loop (unrolling nc x L bodies is
+    compile-prohibitive), so XLA counts its body once per layer instead of
+    nc times. Analytic per-chunk-body FLOPs:
+      y_diag: 2BQ^2(N + HP), states + y_off: 4BQNHP
+    multiplied by (nc-1) missing iterations x mamba layers x pass multiplier
+    (train with remat: fwd + recompute + 2x bwd = 4; prefill: 1).
+    """
+    if cfg.family not in ("ssm", "hybrid") or kind not in ("train", "prefill"):
+        return 0.0
+    S = shape.seq_len
+    if S <= 0:
+        return 0.0
+    Q = min(cfg.ssm_chunk, S)
+    nc = S // Q
+    if nc <= 1:
+        return 0.0
+    B = shape.global_batch
+    H = (cfg.ssm_expand * cfg.d_model) // cfg.ssm_headdim
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    body = 2.0 * B * Q * Q * (N + H * P) + 4.0 * B * Q * N * H * P
+    mult = 4.0 if kind == "train" else 1.0
+    return body * (nc - 1) * cfg.n_layers * mult
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    peak_memory_per_device: float
+    model_flops_global: float
+    compile_s: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time lower bound (perfect overlap -> max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline bound."""
+        denom = self.step_time_s * self.n_devices * PEAK_FLOPS_BF16
+        return self.model_flops_global / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s, "useful_ratio": self.useful_ratio,
+            "mfu": self.mfu, "compile_s": self.compile_s,
+        }
+
+
+def analyze(compiled, hlo_text: str, *, arch: str, shape: ShapeConfig,
+            mesh_name: str, n_devices: int, cfg: ModelConfig,
+            total_params: int, kind: str, compile_s: float = 0.0,
+            mem_compiled=None) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = _cost_value(cost, "flops")
+    byts = _cost_value(cost, "bytes accessed")
+    flops += ssd_inner_scan_correction(cfg, shape, kind) / n_devices
+    coll = collective_bytes_per_device(hlo_text, n_devices)
+    mem = (mem_compiled or compiled).memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = (getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll["total"], coll_breakdown=coll,
+        peak_memory_per_device=peak,
+        model_flops_global=model_flops(cfg, shape, total_params),
+        compile_s=compile_s)

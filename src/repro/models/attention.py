@@ -1,0 +1,260 @@
+"""Attention variants: GQA (with optional qk-norm), DeepSeek MLA, cross-attn.
+
+All attention functions are functional: ``forward(params, x, ...)`` and
+optionally take/return a KV cache dict for decode. Caches use a fixed-size
+sequence buffer with a scalar write position ``pos`` (the assigned decode
+shapes model "one new token against a cache of seq_len", so the buffer is
+allocated at seq_len and attention masks to ``index <= pos``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamFactory, apply_rope, rms_norm
+from repro.sharding import shard_act
+
+NEG_INF = -2.0**30
+
+
+# ----------------------------------------------------------------------------
+# GQA
+# ----------------------------------------------------------------------------
+
+
+def init_gqa(pf: ParamFactory, cfg: ModelConfig, *, rope: bool = True) -> None:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    pf.param("wq", (d, h, hd), ("d_model", "heads", "head_dim"))
+    pf.param("wk", (d, k, hd), ("d_model", "kv_heads", "head_dim"))
+    pf.param("wv", (d, k, hd), ("d_model", "kv_heads", "head_dim"))
+    pf.param("wo", (h, hd, d), ("heads", "head_dim", "d_model"))
+    if cfg.qk_norm:
+        pf.param("q_norm", (hd,), ("head_dim",), init="ones")
+        pf.param("k_norm", (hd,), ("head_dim",), init="ones")
+
+
+def _gqa_core(q, k, v, *, causal: bool, q_pos=None, kv_valid=None,
+              seq_parallel: bool = False):
+    """q [B,S,H,hd], k/v [B,T,K,hd]; GQA grouping H = K*g. Returns [B,S,H,hd].
+
+    K/V are expanded to per-query-head layout (repeat by g) so tensor
+    parallelism shards attention over the H query heads even when K does not
+    divide the model axis (e.g. kv=8 on a 16-way mesh).
+
+    ``seq_parallel`` (decode): the KV cache is kv_seq-sharded over the model
+    axis; replicate the (tiny) q instead of gathering the (huge) cache —
+    logits stay T-sharded, softmax reduces with small cross-shard max/sum
+    collectives, and the value contraction psums a [B,H,S,hd] vector. This
+    removed the per-step full-cache all-gather (perf iteration #2,
+    EXPERIMENTS.md §Perf).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if seq_parallel:
+        q = shard_act(q, ("batch", None, None, None))       # replicate heads
+        k = shard_act(k, ("batch", "kv_seq", None, None))
+        v = shard_act(v, ("batch", "kv_seq", None, None))
+    scale = hd ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if seq_parallel:
+        logits = shard_act(logits, ("batch", None, None, "kv_seq"))
+    mask = None
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(S)
+        mask = qp[:, None] >= jnp.arange(T)[None, :]  # [S, T]
+    if kv_valid is not None:
+        valid = kv_valid[None, :]
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def gqa_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    pos: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    """Self attention. With ``cache`` (decode): writes this step's K/V at
+    ``pos`` and attends over slots <= pos. Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        ck = shard_act(ck, ("batch", "kv_seq", "kv_heads", None))
+        cv = shard_act(cv, ("batch", "kv_seq", "kv_heads", None))
+        new_cache = {"k": ck, "v": cv}
+        # absolute positions of the S query tokens; causal mask over the buffer
+        q_pos = pos + jnp.arange(S)
+        # seq-parallel attention only for single-token decode; multi-token
+        # prefill into a cache keeps the heads-sharded compute layout
+        out = _gqa_core(q, ck.astype(x.dtype), cv.astype(x.dtype), causal=True,
+                        q_pos=q_pos, seq_parallel=(S == 1))
+    else:
+        out = _gqa_core(q, k, v, causal=causal)
+    out = shard_act(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_act(y, ("batch", "seq", "d_model")), new_cache
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    k, hd = cfg.n_kv_heads, cfg.hd()
+    return {
+        "k": jax.ShapeDtypeStruct((batch, seq_len, k, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, seq_len, k, hd), dtype),
+    }
+
+
+def gqa_cache_axes():
+    return {
+        "k": ("batch", "kv_seq", "kv_heads", None),
+        "v": ("batch", "kv_seq", "kv_heads", None),
+    }
+
+
+# ----------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV cache, decoupled RoPE key, absorbed decode
+# ----------------------------------------------------------------------------
+
+
+def init_mla(pf: ParamFactory, cfg: ModelConfig) -> None:
+    d, h = cfg.d_model, cfg.n_heads
+    L, nope, rope_d, vd = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pf.param("wq", (d, h, nope + rope_d), ("d_model", "heads", "head_dim"))
+    pf.param("w_dkv", (d, L), ("d_model", "lora"))
+    pf.param("kv_norm", (L,), ("lora",), init="ones")
+    pf.param("w_uk", (L, h, nope), ("lora", "heads", "head_dim"))
+    pf.param("w_uv", (L, h, vd), ("lora", "heads", "head_dim"))
+    pf.param("w_kpe", (d, rope_d), ("d_model", "head_dim"))
+    pf.param("wo", (h, vd, d), ("heads", "head_dim", "d_model"))
+
+
+def mla_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    pos: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    B, S, _ = x.shape
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    scale = (nope + rope_d) ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    c = rms_norm(jnp.einsum("bsd,dl->bsl", x, p["w_dkv"].astype(x.dtype)),
+                 p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(jnp.einsum("bsd,dr->bsr", x, p["w_kpe"].astype(x.dtype)),
+                      positions, cfg.rope_theta, has_heads=False)
+
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c.astype(cache["c"].dtype), pos, axis=1)
+        cpe = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), pos, axis=1)
+        cc = shard_act(cc, ("batch", "kv_seq", "lora"))
+        new_cache = {"c": cc, "k_pe": cpe}
+        T = cc.shape[1]
+        q_pos = pos + jnp.arange(S)
+        mask = (q_pos[:, None] >= jnp.arange(T)[None, :])[None, None, :, :]
+        # Absorbed attention: never materialize per-head K/V at full length.
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"].astype(x.dtype))
+        if S == 1:
+            # seq-parallel decode: replicate the tiny absorbed q, keep the
+            # compressed cache kv_seq-sharded (perf iteration #2)
+            q_abs = shard_act(q_abs, ("batch", None, None, None))
+            q_pe = shard_act(q_pe, ("batch", None, None, None))
+        logits = (jnp.einsum("bshl,btl->bhst", q_abs.astype(jnp.float32), cc.astype(jnp.float32))
+                  + jnp.einsum("bshr,btr->bhst", q_pe.astype(jnp.float32), cpe.astype(jnp.float32))) * scale
+        if S == 1:
+            logits = shard_act(logits, ("batch", None, None, "kv_seq"))
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btl->bshl", probs, cc.astype(x.dtype))
+        out = jnp.einsum("bshl,lhv->bshv", ctx, p["w_uv"].astype(x.dtype))
+    else:
+        new_cache = None
+        k_nope = jnp.einsum("bsl,lhn->bshn", c, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsl,lhv->bshv", c, p["w_uv"].astype(x.dtype))
+        k_nope = shard_act(k_nope, ("batch", "seq", "heads", None))
+        v = shard_act(v, ("batch", "seq", "heads", None))
+        logits = (jnp.einsum("bshn,bthn->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+                  + jnp.einsum("bshr,btr->bhst", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32))) * scale
+        if causal:
+            mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+            logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthv->bshv", probs, v)
+    out = shard_act(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_act(y, ("batch", "seq", "d_model")), new_cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    return {
+        "c": jax.ShapeDtypeStruct((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "k_pe": jax.ShapeDtypeStruct((batch, seq_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_cache_axes():
+    return {"c": ("batch", "kv_seq", "lora"), "k_pe": ("batch", "kv_seq", None)}
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (vision / encoder-decoder)
+# ----------------------------------------------------------------------------
+
+
+def init_cross(pf: ParamFactory, cfg: ModelConfig, *, gated: bool = False) -> None:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    pf.param("wq", (d, h, hd), ("d_model", "heads", "head_dim"))
+    pf.param("wk", (d, k, hd), ("d_model", "kv_heads", "head_dim"))
+    pf.param("wv", (d, k, hd), ("d_model", "kv_heads", "head_dim"))
+    pf.param("wo", (h, hd, d), ("heads", "head_dim", "d_model"))
+    if gated:
+        pf.param("gate", (), (), init="zeros")
+
+
+def cross_kv(p: dict, memory: jax.Array):
+    """Precompute K/V over the memory (image patches / encoder states)."""
+    k = jnp.einsum("bmd,dhk->bmhk", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("bmd,dhk->bmhk", memory, p["wv"].astype(memory.dtype))
+    return {"k": k, "v": v}
+
+
+def cross_forward(p: dict, x: jax.Array, kv: dict, *, gated: bool = False):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    out = _gqa_core(q, kv["k"].astype(x.dtype), kv["v"].astype(x.dtype), causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if gated:
+        y = y * jnp.tanh(p["gate"].astype(y.dtype))
+    return shard_act(y, ("batch", "seq", "d_model"))

@@ -1,0 +1,137 @@
+"""Residual block compositions used by every architecture family."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import ParamFactory, rms_norm, swiglu
+from repro.sharding import shard_act
+
+
+# -- dense FFN ----------------------------------------------------------------
+
+
+def init_ffn(pf: ParamFactory, d_model: int, d_ff: int) -> None:
+    pf.param("w_gate", (d_model, d_ff), ("d_model", "ffn"))
+    pf.param("w_up", (d_model, d_ff), ("d_model", "ffn"))
+    pf.param("w_down", (d_ff, d_model), ("ffn", "d_model"))
+
+
+def ffn_forward(p: dict, x: jax.Array) -> jax.Array:
+    h = swiglu(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype)),
+               jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)))
+    h = shard_act(h, ("batch", "seq", "ffn"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return shard_act(y, ("batch", "seq", "d_model"))
+
+
+# -- standard decoder block (GQA or MLA attention + dense FFN or MoE) ---------
+
+
+def init_decoder_block(pf: ParamFactory, cfg: ModelConfig, *, kind: str) -> None:
+    """kind: 'dense' | 'moe' | 'mla_dense' | 'mla_moe'."""
+    d = cfg.d_model
+    pf.param("ln_attn", (d,), ("d_model",), init="ones")
+    pf.param("ln_mlp", (d,), ("d_model",), init="ones")
+    with pf.scope("attn"):
+        if kind.startswith("mla"):
+            attn.init_mla(pf, cfg)
+        else:
+            attn.init_gqa(pf, cfg)
+    with pf.scope("mlp"):
+        if kind.endswith("moe"):
+            moe_mod.init_moe(pf, cfg)
+            if cfg.dense_residual:
+                with pf.scope("dense_res"):
+                    init_ffn(pf, d, cfg.d_ff)
+        else:
+            init_ffn(pf, d, cfg.d_ff)
+
+
+def decoder_block(p: dict, x: jax.Array, cfg: ModelConfig, positions, *,
+                  kind: str, cache: Optional[dict] = None, pos=None,
+                  causal: bool = True):
+    """Returns (y, new_cache, aux_loss)."""
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    attn_fn = attn.mla_forward if kind.startswith("mla") else attn.gqa_forward
+    a, new_cache = attn_fn(p["attn"], h, cfg, positions, cache=cache, pos=pos,
+                           causal=causal)
+    x = x + a
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind.endswith("moe"):
+        m, aux = moe_mod.moe_forward(p["mlp"], h, cfg)
+        if cfg.dense_residual:
+            m = m + ffn_forward(p["mlp"]["dense_res"], h)
+    else:
+        m = ffn_forward(p["mlp"], h)
+    return x + m, new_cache, aux
+
+
+# -- mamba2 block --------------------------------------------------------------
+
+
+def init_mamba_block(pf: ParamFactory, cfg: ModelConfig) -> None:
+    pf.param("ln", (cfg.d_model,), ("d_model",), init="ones")
+    with pf.scope("mixer"):
+        ssm_mod.init_mamba2(pf, cfg)
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[dict] = None, decode: bool = False):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if decode:
+        y, new_cache = ssm_mod.mamba2_decode_step(p["mixer"], h, cfg, cache)
+    else:
+        y, new_cache = ssm_mod.mamba2_forward(p["mixer"], h, cfg, cache=cache)
+    return x + y, new_cache
+
+
+# -- zamba2 shared attention block ---------------------------------------------
+# The shared block consumes concat(hidden, initial_embedding) (Zamba trick),
+# projects back to d_model, then runs a full transformer block with weights
+# shared across all applications.
+
+
+def init_zamba_shared(pf: ParamFactory, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    pf.param("w_concat", (2 * d, d), ("d_model", None))
+    pf.param("ln_in", (2 * d,), ("d_model",), init="ones")
+    init_decoder_block(pf, cfg, kind="dense")
+
+
+def zamba_shared_block(p: dict, x: jax.Array, x0: jax.Array, cfg: ModelConfig,
+                       positions, *, cache=None, pos=None, causal=True):
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(h, p["ln_in"], cfg.norm_eps)
+    h = jnp.einsum("bse,ed->bsd", h, p["w_concat"].astype(x.dtype))
+    y, new_cache, _ = decoder_block(p, h, cfg, positions, kind="dense",
+                                    cache=cache, pos=pos, causal=causal)
+    return x + (y - h), new_cache  # residual on the block's delta
+
+
+# -- cross-attention block (vision / enc-dec) -----------------------------------
+
+
+def init_cross_block(pf: ParamFactory, cfg: ModelConfig, *, gated: bool) -> None:
+    d = cfg.d_model
+    pf.param("ln", (d,), ("d_model",), init="ones")
+    with pf.scope("xattn"):
+        attn.init_cross(pf, cfg, gated=gated)
+    pf.param("ln_mlp", (d,), ("d_model",), init="ones")
+    with pf.scope("mlp"):
+        init_ffn(pf, d, cfg.d_ff)
+
+
+def cross_block(p: dict, x: jax.Array, kv: dict, cfg: ModelConfig, *,
+                gated: bool) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    x = x + attn.cross_forward(p["xattn"], h, kv, gated=gated)
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    return x + ffn_forward(p["mlp"], h)

@@ -1,0 +1,216 @@
+"""Shared model primitives: parameter factory with logical sharding axes,
+norms, rotary embeddings, initializers, losses.
+
+Parameters are plain nested dicts of jnp arrays. Alongside the value tree,
+:class:`ParamFactory` builds a parallel tree of *logical axis names* (one
+tuple per leaf, same structure) which ``repro.sharding.rules`` later maps to
+mesh ``PartitionSpec``s. This keeps model code declarative about parallelism
+without ever hard-coding a mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# ----------------------------------------------------------------------------
+# Parameter factory
+# ----------------------------------------------------------------------------
+
+
+class ParamFactory:
+    """Accumulates (value, logical-axes) parameter trees under nested scopes.
+
+    Usage::
+
+        pf = ParamFactory(rng, dtype=jnp.float32)
+        with pf.scope("attn"):
+            wq = pf.param("wq", (d, h, hd), ("d_model", "heads", "head_dim"))
+        params, axes = pf.build()
+    """
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32, abstract: bool = False):
+        self._rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict = {}
+        self.axes: dict = {}
+        self._path: list[str] = []
+
+    # -- scoping -------------------------------------------------------------
+    def scope(self, name: str):
+        factory = self
+
+        class _Scope:
+            def __enter__(self):
+                factory._path.append(name)
+
+            def __exit__(self, *exc):
+                factory._path.pop()
+
+        return _Scope()
+
+    def _insert(self, tree: dict, name: str, leaf):
+        node = tree
+        for p in self._path:
+            node = node.setdefault(p, {})
+        if name in node:
+            raise ValueError(f"duplicate param {'/'.join(self._path + [name])}")
+        node[name] = leaf
+
+    def _next_rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    # -- creation ------------------------------------------------------------
+    def param(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        logical_axes: tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ) -> jax.Array:
+        assert len(shape) == len(logical_axes), (name, shape, logical_axes)
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(shape, self.dtype)
+        else:
+            value = _initialize(self._next_rng(), shape, self.dtype, init, scale)
+        self._insert(self.params, name, value)
+        self._insert(self.axes, name, tuple(logical_axes))
+        return value
+
+    def build(self) -> tuple[dict, dict]:
+        return self.params, self.axes
+
+
+def _initialize(rng, shape, dtype, init: str, scale: Optional[float]):
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "normal":
+        # fan-in scaled truncated normal; fan_in = prod of all but the last
+        # dim (correct for conv HWIO and fused [in, heads, hd] projections)
+        fan_in = 1
+        for d in shape[:-1]:
+            fan_in *= d
+        if len(shape) < 2:
+            fan_in = shape[-1] if shape else 1
+        std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+    if init == "embed":
+        std = scale if scale is not None else 0.02
+        return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+    if init == "ssm_dt":
+        # dt bias init: softplus^-1 of uniform in [1e-3, 1e-1]
+        lo, hi = 1e-3, 1e-1
+        u = jax.random.uniform(rng, shape, jnp.float32, lo, hi)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    if init == "ssm_a":
+        # A_log init: log of uniform in [1, 16]
+        u = jax.random.uniform(rng, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    raise ValueError(f"unknown init {init}")
+
+
+def map_axes(axes_tree: Pytree, fn: Callable[[tuple], tuple]) -> Pytree:
+    """tree.map over an axes tree whose leaves are tuples of axis names."""
+    return jax.tree.map(fn, axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_stacked(init_fn: Callable, rng: jax.Array, n: int, dtype, *args) -> tuple[dict, dict]:
+    """Initialize ``n`` stacked copies of a block along a leading 'layers' axis.
+
+    ``init_fn(pf, *args)`` registers a single block's params on a
+    :class:`ParamFactory`. Returns (stacked params, axes with 'layers'
+    prepended). Stacked layers are consumed with ``lax.scan``.
+    """
+
+    def one(r):
+        pf = ParamFactory(r, dtype)
+        init_fn(pf, *args)
+        return pf.params
+
+    params = jax.vmap(one)(jax.random.split(rng, n))
+    pf_abs = ParamFactory(rng, dtype, abstract=True)
+    init_fn(pf_abs, *args)
+    axes = map_axes(pf_abs.axes, lambda a: ("layers",) + tuple(a))
+    return params, axes
+
+
+# ----------------------------------------------------------------------------
+# Norms / activations
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               has_heads: bool = True) -> jax.Array:
+    """x: [..., S, H, hd] (has_heads) or [..., S, hd]; positions [S] or [B, S].
+
+    Applies rotary embedding over the final dim (split-half convention).
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    if has_heads:
+        angles = angles[..., :, None, :]  # broadcast over the heads axis
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Losses / metrics
+# ----------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Mean next-token cross entropy. logits [..., V] fp32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def count_params(params: Pytree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

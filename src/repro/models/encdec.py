@@ -1,0 +1,183 @@
+"""Encoder-decoder LM (seamless-m4t family). The audio frontend is a stub per
+the assignment: ``input_specs()`` provides precomputed frame embeddings
+[B, S, d_model]; the transformer backbone (encoder self-attn, decoder
+self+cross attn) is real.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import blocks as blk
+from repro.models.common import (
+    ParamFactory,
+    init_stacked,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.sharding import shard_act
+
+Pytree = Any
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """Layer scan; fully unrolled when cfg.unroll_layers (see launch/dryrun)."""
+    return jax.lax.scan(body, carry, xs,
+                        unroll=True if cfg.unroll_layers else 1)
+
+
+def _init_dec_block(pf: ParamFactory, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    pf.param("ln_self", (d,), ("d_model",), init="ones")
+    with pf.scope("self"):
+        attn.init_gqa(pf, cfg)
+    pf.param("ln_cross", (d,), ("d_model",), init="ones")
+    with pf.scope("cross"):
+        attn.init_cross(pf, cfg, gated=False)
+    pf.param("ln_mlp", (d,), ("d_model",), init="ones")
+    with pf.scope("mlp"):
+        blk.init_ffn(pf, d, cfg.d_ff)
+
+
+def _dec_block(p: dict, x, enc_kv, cfg: ModelConfig, positions, *,
+               cache=None, pos=None):
+    h = rms_norm(x, p["ln_self"], cfg.norm_eps)
+    a, new_cache = attn.gqa_forward(p["self"], h, cfg, positions, cache=cache,
+                                    pos=pos, causal=True)
+    x = x + a
+    h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+    x = x + attn.cross_forward(p["cross"], h, enc_kv, gated=False)
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    return x + blk.ffn_forward(p["mlp"], h), new_cache
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+        self.cdtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.compute_dtype]
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: jax.Array):
+        cfg = self.cfg
+        r_e, r_enc, r_dec, r_h = jax.random.split(rng, 4)
+        pf = ParamFactory(r_e, self.pdtype)
+        pf.param("tok_embed", (cfg.vocab_size, cfg.d_model), ("vocab", "d_model"),
+                 init="embed")
+        pf.param("ln_enc", (cfg.d_model,), ("d_model",), init="ones")
+        pf.param("ln_f", (cfg.d_model,), ("d_model",), init="ones")
+        pf.param("head", (cfg.d_model, cfg.vocab_size), ("d_model", "vocab"))
+        params, axes = pf.params, pf.axes
+        enc, enc_axes = init_stacked(
+            lambda pf_: blk.init_decoder_block(pf_, cfg, kind="dense"),
+            r_enc, cfg.enc_layers, self.pdtype)
+        dec, dec_axes = init_stacked(
+            lambda pf_: _init_dec_block(pf_, cfg), r_dec, cfg.dec_layers,
+            self.pdtype)
+        params["encoder"], axes["encoder"] = enc, enc_axes
+        params["decoder"], axes["decoder"] = dec, dec_axes
+        return params, axes
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = frames.astype(self.cdtype)
+        x = shard_act(x, ("batch", "seq", "d_model"))
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, inp):
+            p_i, = inp
+            y, _, _ = blk.decoder_block(p_i, x, cfg, positions, kind="dense",
+                                        causal=False)
+            return y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = _scan(cfg, body, x, (params["encoder"],))
+        return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    # ------------------------------------------------------------- full pass
+    def apply(self, params, batch: dict, *, make_cache: bool = False,
+              cache_len: Optional[int] = None):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["tok_embed"], tokens, axis=0).astype(self.cdtype)
+        x = shard_act(x, ("batch", "seq", "d_model"))
+        positions = jnp.arange(S)
+        cache_len = cache_len or S
+
+        def body(x, inp):
+            p_i, c_i = inp
+            kv = attn.cross_kv(p_i["cross"], enc_out)
+            y, nc = _dec_block(p_i, x, kv, cfg, positions, cache=c_i,
+                               pos=0 if make_cache else None)
+            return y, nc
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        caches_in = None
+        if make_cache:
+            one = attn.gqa_cache_shape(cfg, B, cache_len, self.cdtype)
+            caches_in = jax.tree.map(
+                lambda s: jnp.zeros((cfg.dec_layers,) + s.shape, s.dtype), one)
+        x, new_caches = _scan(cfg, body, x, (params["decoder"], caches_in))
+        logits = self._head(params, x)
+        caches = None
+        if make_cache:
+            cross = jax.vmap(lambda p: attn.cross_kv(p["cross"], enc_out))(
+                params["decoder"])
+            caches = {"self": new_caches, "cross": cross}
+        return logits, caches, jnp.zeros((), jnp.float32)
+
+    def _head(self, params, x):
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+        return shard_act(logits, ("batch", "seq", "vocab"))
+
+    def loss(self, params, batch: dict):
+        logits, _, aux = self.apply(params, batch)
+        targets = batch["targets"]
+        mask = targets >= 0
+        ce = softmax_cross_entropy(logits, jnp.maximum(targets, 0), mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def cache_struct(self, batch: int, cache_len: int, enc_len: int):
+        cfg = self.cfg
+        cdt = self.cdtype
+        one = attn.gqa_cache_shape(cfg, batch, cache_len, cdt)
+        self_struct = {k: jax.ShapeDtypeStruct((cfg.dec_layers,) + v.shape, v.dtype)
+                       for k, v in one.items()}
+        self_axes = {k: ("layers",) + tuple(v)
+                     for k, v in attn.gqa_cache_axes().items()}
+        kv = {
+            "k": jax.ShapeDtypeStruct((cfg.dec_layers, batch, enc_len,
+                                       cfg.n_kv_heads, cfg.hd()), cdt),
+            "v": jax.ShapeDtypeStruct((cfg.dec_layers, batch, enc_len,
+                                       cfg.n_kv_heads, cfg.hd()), cdt),
+        }
+        kv_axes = {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+                   "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+        return ({"self": self_struct, "cross": kv},
+                {"self": self_axes, "cross": kv_axes})
+
+    def decode_step(self, params, caches, tokens: jax.Array, pos: jax.Array):
+        cfg = self.cfg
+        x = jnp.take(params["tok_embed"], tokens, axis=0).astype(self.cdtype)
+        positions = pos + jnp.arange(1)
+
+        def body(x, inp):
+            p_i, c_i, kv_i = inp
+            y, nc = _dec_block(p_i, x, kv_i, cfg, positions, cache=c_i, pos=pos)
+            return y, (nc, kv_i)
+
+        x, (new_self, kvs) = _scan(cfg, 
+            body, x, (params["decoder"], caches["self"], caches["cross"]))
+        logits = self._head(params, x)
+        return logits, {"self": new_self, "cross": kvs}

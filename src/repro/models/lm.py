@@ -1,0 +1,424 @@
+"""Decoder-only language model covering the dense / moe / ssm / hybrid / vlm
+families. Layers are stacked and executed with ``lax.scan`` so HLO size (and
+compile time) is O(1) in depth; interleaved structures (zamba2 hybrid chunks,
+vision cross-attention) scan over homogeneous *chunks*.
+
+API (functional):
+    lm = DecoderLM(cfg)
+    params, axes = lm.init(rng)
+    logits, aux = lm.apply(params, batch)                  # train/prefill
+    loss, metrics = lm.loss(params, batch)
+    cache, cache_axes = lm.cache_struct(batch, cache_len)  # ShapeDtypeStructs
+    logits, cache = lm.decode_step(params, cache, tokens, pos, ...)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import blocks as blk
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ParamFactory,
+    init_stacked,
+    map_axes,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.sharding import shard_act
+
+Pytree = Any
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def block_kind(cfg: ModelConfig) -> str:
+    mla = "mla_" if cfg.kv_lora_rank else ""
+    return f"{mla}moe" if cfg.n_experts else f"{mla}dense" if mla else "dense"
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """Layer scan; fully unrolled when cfg.unroll_layers (the roofline-exact
+    lowering — XLA cost_analysis counts while bodies once; see launch/dryrun)."""
+    return jax.lax.scan(body, carry, xs,
+                        unroll=True if cfg.unroll_layers else 1)
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdtype = _dtype(cfg.param_dtype)
+        self.cdtype = _dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: jax.Array) -> tuple[Pytree, Pytree]:
+        cfg = self.cfg
+        r_embed, r_layers, r_head, r_shared = jax.random.split(rng, 4)
+        pf = ParamFactory(r_embed, self.pdtype)
+        pf.param("tok_embed", (cfg.vocab_size, cfg.d_model), ("vocab", "d_model"),
+                 init="embed")
+        pf.param("ln_f", (cfg.d_model,), ("d_model",), init="ones")
+        if not cfg.tie_embeddings:
+            pf.param("head", (cfg.d_model, cfg.vocab_size), ("d_model", "vocab"))
+        params, axes = pf.params, pf.axes
+
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            kind = block_kind(cfg)
+            n_stacked = cfg.n_layers - cfg.first_dense_layers
+            first = []
+            first_axes = []
+            rr = r_layers
+            dense_kind = kind.replace("moe", "dense")
+            for _ in range(cfg.first_dense_layers):
+                rr, sub = jax.random.split(rr)
+                pf1 = ParamFactory(sub, self.pdtype)
+                blk.init_decoder_block(pf1, cfg, kind=dense_kind)
+                first.append(pf1.params)
+                first_axes.append(pf1.axes)
+            stack, stack_axes = init_stacked(
+                lambda pf_: blk.init_decoder_block(pf_, cfg, kind=kind),
+                rr, n_stacked, self.pdtype)
+            params["layers"] = {"first": first, "stack": stack}
+            axes["layers"] = {"first": first_axes, "stack": stack_axes}
+        elif fam == "ssm":
+            stack, stack_axes = init_stacked(
+                lambda pf_: blk.init_mamba_block(pf_, cfg),
+                r_layers, cfg.n_layers, self.pdtype)
+            params["layers"] = {"stack": stack}
+            axes["layers"] = {"stack": stack_axes}
+        elif fam == "hybrid":
+            n_chunks = cfg.n_layers // cfg.attn_period
+            stack, stack_axes = init_stacked(
+                lambda pf_: blk.init_mamba_block(pf_, cfg),
+                r_layers, cfg.n_layers, self.pdtype)
+            # reshape [L, ...] -> [n_chunks, period, ...]
+            stack = jax.tree.map(
+                lambda x: x.reshape(n_chunks, cfg.attn_period, *x.shape[1:]), stack)
+            stack_axes = map_axes(stack_axes, lambda a: ("layers",) + tuple(a))
+            pf_s = ParamFactory(r_shared, self.pdtype)
+            blk.init_zamba_shared(pf_s, cfg)
+            params["layers"] = {"stack": stack, "shared": pf_s.params}
+            axes["layers"] = {"stack": stack_axes, "shared": pf_s.axes}
+        elif fam == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_period
+            stack, stack_axes = init_stacked(
+                lambda pf_: blk.init_decoder_block(pf_, cfg, kind="dense"),
+                r_layers, cfg.n_layers, self.pdtype)
+            stack = jax.tree.map(
+                lambda x: x.reshape(n_cross, cfg.cross_attn_period, *x.shape[1:]),
+                stack)
+            stack_axes = map_axes(stack_axes, lambda a: ("layers",) + tuple(a))
+            cross, cross_axes = init_stacked(
+                lambda pf_: blk.init_cross_block(pf_, cfg, gated=True),
+                r_shared, n_cross, self.pdtype)
+            params["layers"] = {"stack": stack, "cross": cross}
+            axes["layers"] = {"stack": stack_axes, "cross": cross_axes}
+        else:
+            raise ValueError(f"DecoderLM does not handle family {fam}")
+        return params, axes
+
+    # --------------------------------------------------------------- helpers
+    def _embed(self, params, tokens):
+        emb = params["tok_embed"]
+        x = jnp.take(emb, tokens, axis=0).astype(self.cdtype)
+        return shard_act(x, ("batch", "seq", "d_model"))
+
+    def _head(self, params, x):
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["tok_embed"].astype(x.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+        return shard_act(logits, ("batch", "seq", "vocab"))
+
+    # ---------------------------------------------------- full-sequence pass
+    def apply(self, params: Pytree, batch: dict, *, make_cache: bool = False,
+              cache_len: Optional[int] = None):
+        """batch: {'tokens': [B,S] int32, optional 'patches': [B,P,D]}.
+        Returns (logits, caches_or_None, aux_loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        positions = jnp.arange(S)
+        cache_len = cache_len or S
+        aux0 = jnp.zeros((), jnp.float32)
+
+        fam = cfg.family
+        caches = None
+        if fam in ("dense", "moe"):
+            kind = block_kind(cfg)
+            dense_kind = kind.replace("moe", "dense")
+            aux = aux0
+            first_caches = []
+            for p_i in params["layers"]["first"]:
+                c_i = self._attn_cache_zeros(B, cache_len) if make_cache else None
+                x, nc, a = blk.decoder_block(p_i, x, cfg, positions, kind=dense_kind,
+                                             cache=c_i, pos=0 if make_cache else None)
+                aux += a
+                first_caches.append(nc)
+
+            def body(carry, inp):
+                x, aux = carry
+                p_i, c_i = inp
+                y, nc, a = blk.decoder_block(p_i, x, cfg, positions, kind=kind,
+                                             cache=c_i, pos=0 if make_cache else None)
+                return (y, aux + a), nc
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            n_stacked = cfg.n_layers - cfg.first_dense_layers
+            stack_caches = (self._attn_cache_zeros(B, cache_len, n=n_stacked)
+                            if make_cache else None)
+            (x, aux), new_stack = _scan(cfg, 
+                body, (x, aux), (params["layers"]["stack"], stack_caches))
+            if make_cache:
+                caches = {"first": first_caches, "stack": new_stack}
+        elif fam == "ssm":
+            def body(x, inp):
+                p_i, = inp
+                y, nc = blk.mamba_block(p_i, x, cfg,
+                                        cache={} if make_cache else None)
+                return y, nc
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, new_stack = _scan(cfg, body, x, (params["layers"]["stack"],))
+            aux = aux0
+            if make_cache:
+                caches = {"stack": new_stack}
+        elif fam == "hybrid":
+            x0 = x
+            shared_p = params["layers"]["shared"]
+
+            def chunk_body(x, inp):
+                p_chunk, = inp
+
+                def inner(x, p_i):
+                    y, nc = blk.mamba_block(p_i, x, cfg,
+                                            cache={} if make_cache else None)
+                    return y, nc
+
+                x, mamba_caches = _scan(cfg, inner, x, p_chunk)
+                y, kv = blk.zamba_shared_block(
+                    shared_p, x, x0, cfg, positions,
+                    cache=self._gqa_cache_zeros(x.shape[0], cache_len) if make_cache else None,
+                    pos=0 if make_cache else None)
+                return y, (mamba_caches, kv)
+
+            if cfg.remat:
+                chunk_body = jax.checkpoint(chunk_body)
+            x, (mamba_caches, shared_kv) = _scan(cfg, 
+                chunk_body, x, (params["layers"]["stack"],))
+            aux = aux0
+            if make_cache:
+                caches = {"stack": mamba_caches, "shared": shared_kv}
+        elif fam == "vlm":
+            memory = batch["patches"].astype(self.cdtype)
+
+            def chunk_body(x, inp):
+                p_self, p_cross, c_self = inp
+                kv = attn.cross_kv(p_cross["xattn"], memory)
+                x = blk.cross_block(p_cross, x, kv, cfg, gated=True)
+
+                def inner(carry, inp2):
+                    x = carry
+                    p_i, c_i = inp2
+                    y, nc, _ = blk.decoder_block(p_i, x, cfg, positions,
+                                                 kind="dense", cache=c_i,
+                                                 pos=0 if make_cache else None)
+                    return y, nc
+
+                x, ncs = _scan(cfg, inner, x, (p_self, c_self))
+                return x, (ncs, kv)
+
+            if cfg.remat:
+                chunk_body = jax.checkpoint(chunk_body)
+            n_cross = cfg.n_layers // cfg.cross_attn_period
+            c_self = (self._attn_cache_zeros(B, cache_len,
+                                             n=(n_cross, cfg.cross_attn_period))
+                      if make_cache else None)
+            x, (self_caches, cross_kvs) = _scan(cfg, 
+                chunk_body, x, (params["layers"]["stack"],
+                                params["layers"]["cross"], c_self))
+            aux = aux0
+            if make_cache:
+                caches = {"stack": self_caches, "cross": cross_kvs}
+        else:
+            raise ValueError(fam)
+
+        logits = self._head(params, x)
+        return logits, caches, aux
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params: Pytree, batch: dict):
+        logits, _, aux = self.apply(params, batch)
+        targets = batch["targets"]
+        mask = (targets >= 0)
+        ce = softmax_cross_entropy(logits, jnp.maximum(targets, 0), mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ----------------------------------------------------------- cache utils
+    def _attn_cache_zeros(self, B, T, n=None):
+        cfg = self.cfg
+        if cfg.kv_lora_rank:
+            struct = attn.mla_cache_shape(cfg, B, T, self.cdtype)
+        else:
+            struct = attn.gqa_cache_shape(cfg, B, T, self.cdtype)
+        if n is not None:
+            ns = n if isinstance(n, tuple) else (n,)
+            struct = {k: jax.ShapeDtypeStruct(ns + v.shape, v.dtype)
+                      for k, v in struct.items()}
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+    def _gqa_cache_zeros(self, B, T):
+        struct = attn.gqa_cache_shape(self.cfg, B, T, self.cdtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+    def cache_struct(self, batch: int, cache_len: int):
+        """ShapeDtypeStruct cache tree + logical axes tree (for the dry-run)."""
+        cfg = self.cfg
+        cdt = self.cdtype
+        stackdim = lambda s, n: {k: jax.ShapeDtypeStruct((n,) + v.shape, v.dtype)
+                                 for k, v in s.items()}
+        add_axes = lambda a: {k: ("layers",) + tuple(v) for k, v in a.items()}
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            if cfg.kv_lora_rank:
+                one = attn.mla_cache_shape(cfg, batch, cache_len, cdt)
+                ax = attn.mla_cache_axes()
+            else:
+                one = attn.gqa_cache_shape(cfg, batch, cache_len, cdt)
+                ax = attn.gqa_cache_axes()
+            n_stacked = cfg.n_layers - cfg.first_dense_layers
+            struct = {"first": [one] * cfg.first_dense_layers,
+                      "stack": stackdim(one, n_stacked)}
+            axes = {"first": [ax] * cfg.first_dense_layers,
+                    "stack": add_axes(ax)}
+        elif fam == "ssm":
+            one = ssm_mod.mamba2_cache_shape(cfg, batch, cdt)
+            ax = ssm_mod.mamba2_cache_axes()
+            struct = {"stack": stackdim(one, cfg.n_layers)}
+            axes = {"stack": add_axes(ax)}
+        elif fam == "hybrid":
+            n_chunks = cfg.n_layers // cfg.attn_period
+            m_one = ssm_mod.mamba2_cache_shape(cfg, batch, cdt)
+            m_ax = ssm_mod.mamba2_cache_axes()
+            m_struct = {k: jax.ShapeDtypeStruct((n_chunks, cfg.attn_period) + v.shape, v.dtype)
+                        for k, v in m_one.items()}
+            m_axes = {k: ("layers", "layers") + tuple(v) for k, v in m_ax.items()}
+            a_one = attn.gqa_cache_shape(cfg, batch, cache_len, cdt)
+            a_ax = attn.gqa_cache_axes()
+            struct = {"stack": m_struct, "shared": stackdim(a_one, n_chunks)}
+            axes = {"stack": m_axes, "shared": add_axes(a_ax)}
+        elif fam == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_period
+            one = attn.gqa_cache_shape(cfg, batch, cache_len, cdt)
+            ax = attn.gqa_cache_axes()
+            s_struct = {k: jax.ShapeDtypeStruct((n_cross, cfg.cross_attn_period) + v.shape, v.dtype)
+                        for k, v in one.items()}
+            s_axes = {k: ("layers", "layers") + tuple(v) for k, v in ax.items()}
+            kv_one = {  # precomputed cross K/V over patches
+                "k": jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.n_kv_heads, cfg.hd()), cdt),
+                "v": jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.n_kv_heads, cfg.hd()), cdt),
+            }
+            kv_ax = {"k": ("batch", "patches", "kv_heads", None),
+                     "v": ("batch", "patches", "kv_heads", None)}
+            struct = {"stack": s_struct, "cross": stackdim(kv_one, n_cross)}
+            axes = {"stack": s_axes, "cross": add_axes(kv_ax)}
+        else:
+            raise ValueError(fam)
+        return struct, axes
+
+    # ----------------------------------------------------------- decode step
+    def decode_step(self, params: Pytree, caches: Pytree, tokens: jax.Array,
+                    pos: jax.Array):
+        """tokens [B, 1]; pos scalar int32 (write index). Returns
+        (logits [B,1,V], new_caches)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = self._embed(params, tokens)
+        positions = pos + jnp.arange(1)
+
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            kind = block_kind(cfg)
+            dense_kind = kind.replace("moe", "dense")
+            new_first = []
+            for p_i, c_i in zip(params["layers"]["first"], caches["first"]):
+                x, nc, _ = blk.decoder_block(p_i, x, cfg, positions,
+                                             kind=dense_kind, cache=c_i, pos=pos)
+                new_first.append(nc)
+
+            def body(x, inp):
+                p_i, c_i = inp
+                y, nc, _ = blk.decoder_block(p_i, x, cfg, positions, kind=kind,
+                                             cache=c_i, pos=pos)
+                return y, nc
+
+            x, new_stack = _scan(cfg, 
+                body, x, (params["layers"]["stack"], caches["stack"]))
+            new_caches = {"first": new_first, "stack": new_stack}
+        elif fam == "ssm":
+            def body(x, inp):
+                p_i, c_i = inp
+                y, nc = blk.mamba_block(p_i, x, cfg, cache=c_i, decode=True)
+                return y, nc
+
+            x, new_stack = _scan(cfg, 
+                body, x, (params["layers"]["stack"], caches["stack"]))
+            new_caches = {"stack": new_stack}
+        elif fam == "hybrid":
+            x0 = x
+            shared_p = params["layers"]["shared"]
+
+            def chunk_body(x, inp):
+                p_chunk, c_chunk, kv_i = inp
+
+                def inner(x, inp2):
+                    p_i, c_i = inp2
+                    y, nc = blk.mamba_block(p_i, x, cfg, cache=c_i, decode=True)
+                    return y, nc
+
+                x, m_caches = _scan(cfg, inner, x, (p_chunk, c_chunk))
+                y, kv = blk.zamba_shared_block(shared_p, x, x0, cfg, positions,
+                                               cache=kv_i, pos=pos)
+                return y, (m_caches, kv)
+
+            x, (m_caches, kvs) = _scan(cfg, 
+                chunk_body, x, (params["layers"]["stack"], caches["stack"],
+                                caches["shared"]))
+            new_caches = {"stack": m_caches, "shared": kvs}
+        elif fam == "vlm":
+            def chunk_body(x, inp):
+                p_self, p_cross, c_self, kv_i = inp
+                x = blk.cross_block(p_cross, x, kv_i, cfg, gated=True)
+
+                def inner(x, inp2):
+                    p_i, c_i = inp2
+                    y, nc, _ = blk.decoder_block(p_i, x, cfg, positions,
+                                                 kind="dense", cache=c_i, pos=pos)
+                    return y, nc
+
+                x, ncs = _scan(cfg, inner, x, (p_self, c_self))
+                return x, (ncs, kv_i)
+
+            x, (self_caches, kvs) = _scan(cfg, 
+                chunk_body, x, (params["layers"]["stack"], params["layers"]["cross"],
+                                caches["stack"], caches["cross"]))
+            new_caches = {"stack": self_caches, "cross": kvs}
+        else:
+            raise ValueError(fam)
+
+        logits = self._head(params, x)
+        return logits, new_caches

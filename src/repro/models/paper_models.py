@@ -1,0 +1,191 @@
+"""The paper's four client models (IV-A2), reimplemented in pure JAX.
+
+Parameter counts match the paper exactly where the architecture is fully
+determined by the text:
+
+  - MNIST 2-layer CNN (valid padding, fc 512, 10 classes)  -> 582,026 params
+  - FEMNIST 2-layer CNN (same padding, fc 2048, 62 classes) -> 6,603,710
+  - Shakespeare: embed(82->8) + 2x LSTM(256) + dense(82)    -> 818,402
+  - Google Speech: 2 conv blocks (32/64 ch) + avgpool + 35  -> 67,267
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, softmax_cross_entropy
+
+Pytree = Any
+
+
+def _conv(pf: ParamFactory, name: str, k: int, cin: int, cout: int):
+    pf.param(f"{name}_w", (k, k, cin, cout), (None, None, None, "ffn"))
+    pf.param(f"{name}_b", (cout,), ("ffn",), init="zeros")
+
+
+def _apply_conv(p, name, x, padding: str):
+    y = jax.lax.conv_general_dilated(
+        x, p[f"{name}_w"].astype(x.dtype), window_strides=(1, 1),
+        padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p[f"{name}_b"].astype(x.dtype)
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+class _ClassifierBase:
+    n_classes: int = 10
+
+    def loss(self, params, batch):
+        logits = self.predict(params, batch["x"])
+        ce = softmax_cross_entropy(logits, batch["y"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+        return ce, {"ce": ce, "acc": acc}
+
+    def accuracy(self, params, batch):
+        logits = self.predict(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+class MnistCNN(_ClassifierBase):
+    """28x28x1, conv5x5(32) VALID + pool, conv5x5(64) VALID + pool, fc512, 10."""
+
+    n_classes = 10
+    input_shape = (28, 28, 1)
+
+    def init(self, rng):
+        pf = ParamFactory(rng, jnp.float32)
+        _conv(pf, "c1", 5, 1, 32)
+        _conv(pf, "c2", 5, 32, 64)
+        pf.param("fc1_w", (4 * 4 * 64, 512), ("d_model", "ffn"))
+        pf.param("fc1_b", (512,), ("ffn",), init="zeros")
+        pf.param("fc2_w", (512, 10), ("ffn", "vocab"))
+        pf.param("fc2_b", (10,), ("vocab",), init="zeros")
+        return pf.params, pf.axes
+
+    def predict(self, p, x):
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c1", x, "VALID")))   # 24->12
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c2", x, "VALID")))   # 8->4
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"])
+        return x @ p["fc2_w"] + p["fc2_b"]
+
+
+class FemnistCNN(_ClassifierBase):
+    """28x28x1, conv5x5(32) SAME + pool, conv5x5(64) SAME + pool, fc2048, 62."""
+
+    n_classes = 62
+    input_shape = (28, 28, 1)
+
+    def init(self, rng):
+        pf = ParamFactory(rng, jnp.float32)
+        _conv(pf, "c1", 5, 1, 32)
+        _conv(pf, "c2", 5, 32, 64)
+        pf.param("fc1_w", (7 * 7 * 64, 2048), ("d_model", "ffn"))
+        pf.param("fc1_b", (2048,), ("ffn",), init="zeros")
+        pf.param("fc2_w", (2048, 62), ("ffn", "vocab"))
+        pf.param("fc2_b", (62,), ("vocab",), init="zeros")
+        return pf.params, pf.axes
+
+    def predict(self, p, x):
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c1", x, "SAME")))    # 28->14
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c2", x, "SAME")))    # 14->7
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"])
+        return x @ p["fc2_w"] + p["fc2_b"]
+
+
+class SpeechCNN(_ClassifierBase):
+    """32x32x1 spectrogram, 2 blocks of (conv3x3, conv3x3, pool, dropout),
+    global average pool, 35 classes."""
+
+    n_classes = 35
+    input_shape = (32, 32, 1)
+
+    def init(self, rng):
+        pf = ParamFactory(rng, jnp.float32)
+        _conv(pf, "c1", 3, 1, 32)
+        _conv(pf, "c2", 3, 32, 32)
+        _conv(pf, "c3", 3, 32, 64)
+        _conv(pf, "c4", 3, 64, 64)
+        pf.param("fc_w", (64, 35), ("ffn", "vocab"))
+        pf.param("fc_b", (35,), ("vocab",), init="zeros")
+        return pf.params, pf.axes
+
+    def predict(self, p, x):
+        x = jax.nn.relu(_apply_conv(p, "c1", x, "SAME"))
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c2", x, "SAME")))    # 32->16
+        x = jax.nn.relu(_apply_conv(p, "c3", x, "SAME"))
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c4", x, "SAME")))    # 16->8
+        x = jnp.mean(x, axis=(1, 2))                                   # GAP -> 64
+        return x @ p["fc_w"] + p["fc_b"]
+
+
+class ShakespeareLSTM:
+    """Next-char model: embed(82->8), 2x LSTM(256), dense(82). Input [B, 80]."""
+
+    n_classes = 82
+    vocab = 82
+    seq_len = 80
+
+    def init(self, rng):
+        pf = ParamFactory(rng, jnp.float32)
+        pf.param("embed", (self.vocab, 8), ("vocab", "d_model"), init="embed")
+        for name, din in (("lstm1", 8), ("lstm2", 256)):
+            pf.param(f"{name}_wx", (din, 4 * 256), ("d_model", "ffn"))
+            pf.param(f"{name}_wh", (256, 4 * 256), ("d_model", "ffn"))
+            pf.param(f"{name}_b", (4 * 256,), ("ffn",), init="zeros")
+        pf.param("out_w", (256, self.vocab), ("d_model", "vocab"))
+        pf.param("out_b", (self.vocab,), ("vocab",), init="zeros")
+        return pf.params, pf.axes
+
+    @staticmethod
+    def _lstm(p, name, xs):
+        """xs: [S, B, din] -> hs [S, B, 256]."""
+        B = xs.shape[1]
+        h0 = jnp.zeros((B, 256), xs.dtype)
+        c0 = jnp.zeros((B, 256), xs.dtype)
+
+        def step(carry, x):
+            h, c = carry
+            gates = x @ p[f"{name}_wx"] + h @ p[f"{name}_wh"] + p[f"{name}_b"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+        return hs
+
+    def predict(self, p, x):
+        """x: [B, 80] int32 -> logits [B, 82] (next char)."""
+        e = jnp.take(p["embed"], x, axis=0).swapaxes(0, 1)   # [S, B, 8]
+        h = self._lstm(p, "lstm1", e)
+        h = self._lstm(p, "lstm2", h)
+        return h[-1] @ p["out_w"] + p["out_b"]
+
+    def loss(self, params, batch):
+        logits = self.predict(params, batch["x"])
+        ce = softmax_cross_entropy(logits, batch["y"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+        return ce, {"ce": ce, "acc": acc}
+
+    def accuracy(self, params, batch):
+        logits = self.predict(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+PAPER_MODELS = {
+    "paper-mnist": MnistCNN,
+    "paper-femnist": FemnistCNN,
+    "paper-shakespeare": ShakespeareLSTM,
+    "paper-speech": SpeechCNN,
+}
+
+
+def build_paper_model(name: str):
+    return PAPER_MODELS[name]()

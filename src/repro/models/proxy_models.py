@@ -1,0 +1,101 @@
+"""Bench-scale proxy client models.
+
+The paper's exact models (repro.models.paper_models) cost ~150 s per
+simulated round on this 1-core CPU container — fine for unit tests, far too
+slow for the 6-strategy x 4-dataset benchmark grid. These proxies keep the
+same API/loss surface and non-IID learning dynamics at ~100x less compute
+(benchmarks pass ``--fidelity paper`` to use the exact models instead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, softmax_cross_entropy
+from repro.models.paper_models import _ClassifierBase, _apply_conv, _conv, _maxpool
+
+
+class ProxyCNN(_ClassifierBase):
+    """Small 2-conv CNN on 8x8x1 inputs."""
+
+    def __init__(self, n_classes: int, c1: int = 8, c2: int = 16, fc: int = 32):
+        self.n_classes = n_classes
+        self.input_shape = (8, 8, 1)
+        self.c1, self.c2, self.fc = c1, c2, fc
+
+    def init(self, rng):
+        pf = ParamFactory(rng, jnp.float32)
+        _conv(pf, "c1", 3, 1, self.c1)
+        _conv(pf, "c2", 3, self.c1, self.c2)
+        pf.param("fc1_w", (2 * 2 * self.c2, self.fc), ("d_model", "ffn"))
+        pf.param("fc1_b", (self.fc,), ("ffn",), init="zeros")
+        pf.param("fc2_w", (self.fc, self.n_classes), ("ffn", "vocab"))
+        pf.param("fc2_b", (self.n_classes,), ("vocab",), init="zeros")
+        return pf.params, pf.axes
+
+    def predict(self, p, x):
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c1", x, "SAME")))   # 8->4
+        x = _maxpool(jax.nn.relu(_apply_conv(p, "c2", x, "SAME")))   # 4->2
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"])
+        return x @ p["fc2_w"] + p["fc2_b"]
+
+
+class ProxyLSTM:
+    """Next-char model on short sequences: embed -> LSTM(h) -> dense(vocab)."""
+
+    def __init__(self, vocab: int = 82, seq_len: int = 20, emb: int = 8,
+                 hidden: int = 64):
+        self.vocab = vocab
+        self.n_classes = vocab
+        self.seq_len = seq_len
+        self.emb = emb
+        self.hidden = hidden
+
+    def init(self, rng):
+        pf = ParamFactory(rng, jnp.float32)
+        pf.param("embed", (self.vocab, self.emb), ("vocab", "d_model"), init="embed")
+        pf.param("wx", (self.emb, 4 * self.hidden), ("d_model", "ffn"))
+        pf.param("wh", (self.hidden, 4 * self.hidden), ("d_model", "ffn"))
+        pf.param("b", (4 * self.hidden,), ("ffn",), init="zeros")
+        pf.param("out_w", (self.hidden, self.vocab), ("d_model", "vocab"))
+        pf.param("out_b", (self.vocab,), ("vocab",), init="zeros")
+        return pf.params, pf.axes
+
+    def predict(self, p, x):
+        e = jnp.take(p["embed"], x, axis=0).swapaxes(0, 1)  # [S, B, emb]
+        B = e.shape[1]
+        h0 = jnp.zeros((B, self.hidden), e.dtype)
+        c0 = jnp.zeros((B, self.hidden), e.dtype)
+
+        def step(carry, xt):
+            h, c = carry
+            gates = xt @ p["wx"] + h @ p["wh"] + p["b"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        (h, _), _ = jax.lax.scan(step, (h0, c0), e)
+        return h @ p["out_w"] + p["out_b"]
+
+    def loss(self, params, batch):
+        logits = self.predict(params, batch["x"])
+        ce = softmax_cross_entropy(logits, batch["y"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+        return ce, {"ce": ce, "acc": acc}
+
+    def accuracy(self, params, batch):
+        logits = self.predict(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+def build_bench_model(dataset: str, fidelity: str = "proxy"):
+    """Model for a (paper) dataset at the requested fidelity."""
+    if fidelity == "paper":
+        from repro.models.paper_models import build_paper_model
+        return build_paper_model(f"paper-{dataset}")
+    n_classes = {"mnist": 10, "femnist": 62, "speech": 35}
+    if dataset == "shakespeare":
+        return ProxyLSTM(vocab=82, seq_len=20)
+    return ProxyCNN(n_classes[dataset])

@@ -1,0 +1,200 @@
+"""Mamba2 (state-space duality) layer: chunked SSD for train/prefill, O(1)
+recurrent step for decode.
+
+Follows the ssd_minimal discrete formulation of Dao & Gu (arXiv:2405.21060):
+within a chunk the dual (attention-like) quadratic form is used; across
+chunks the SSM state is carried with ``lax.scan``. ngroups=1 (B/C shared
+across heads) as in the published mamba2-370m config.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamFactory, rms_norm
+from repro.sharding import shard_act
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_headdim
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba2(pf: ParamFactory, cfg: ModelConfig) -> None:
+    D, di, H = cfg.d_model, d_inner(cfg), n_ssm_heads(cfg)
+    cd, W = conv_dim(cfg), cfg.ssm_conv
+    d_proj = 2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state + H
+    pf.param("in_proj", (D, d_proj), ("d_model", "ffn"))
+    pf.param("conv_w", (W, cd), (None, "ffn"))
+    pf.param("conv_b", (cd,), ("ffn",), init="zeros")
+    pf.param("dt_bias", (H,), ("ssm_heads",), init="ssm_dt")
+    pf.param("A_log", (H,), ("ssm_heads",), init="ssm_a")
+    pf.param("D_skip", (H,), ("ssm_heads",), init="ones")
+    pf.param("norm_w", (di,), ("ffn",), init="ones")
+    pf.param("out_proj", (di, D), ("ffn", "d_model"))
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di, H, gn = d_inner(cfg), n_ssm_heads(cfg), cfg.ssm_ngroups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array):
+    """Depthwise causal conv, window W (unrolled; W=4). xBC [B,S,Cd]."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = b.astype(xBC.dtype)
+    acc = jnp.zeros_like(xBC) + out
+    for i in range(W):
+        acc = acc + pad[:, i:i + S, :] * w[i].astype(xBC.dtype)
+    return jax.nn.silu(acc)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] log-decays -> [..., Q, Q] lower-triangular segment sums,
+    L[q, s] = sum_{j=s+1..q} a_j for q >= s, -inf above diagonal."""
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    Q = a.shape[-1]
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xd: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, h0: Optional[jax.Array] = None):
+    """xd [B,S,H,P] (already dt-discretized), a [B,S,H] log decay (dt*A),
+    Bm/Cm [B,S,N] (ngroups=1). Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    Bb, S, H, Pd = xd.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    r = lambda t: t.reshape(Bb, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xd_c, a_c, B_c, C_c = r(xd), r(a), r(Bm), r(Cm)   # leading chunk axis for scan
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+
+    def body(h, inp):
+        x_i, a_i, b_i, c_i = inp                       # [B,Q,H,P],[B,Q,H],[B,Q,N],[B,Q,N]
+        a_i = a_i.astype(jnp.float32)
+        cs = jnp.cumsum(a_i, axis=1)                   # [B,Q,H]
+        L = jnp.exp(_segsum(a_i.transpose(0, 2, 1)))   # [B,H,Q,Q]
+        xf = x_i.astype(jnp.float32)
+        bf, cf = b_i.astype(jnp.float32), c_i.astype(jnp.float32)
+        y_diag = jnp.einsum("bqn,bkn,bhqk,bkhp->bqhp", cf, bf, L, xf)
+        decay_states = jnp.exp(cs[:, -1:, :] - cs)     # [B,Q,H]
+        state_c = jnp.einsum("bkn,bkh,bkhp->bhpn", bf, decay_states, xf)
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", cf, h, jnp.exp(cs))
+        h_new = h * jnp.exp(cs[:, -1, :])[:, :, None, None] + state_c
+        return h_new, (y_diag + y_off).astype(xd.dtype)
+
+    h_final, ys = jax.lax.scan(body, h0, (xd_c, a_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, Pd)
+    return y, h_final
+
+
+def ssd_reference(xd, a, Bm, Cm):
+    """O(S^2) dual-form oracle for tests: y_t = sum_{s<=t} C_t.B_s exp(sum a) x_s."""
+    Bb, S, H, Pd = xd.shape
+    af = a.astype(jnp.float32).transpose(0, 2, 1)           # [B,H,S]
+    L = jnp.exp(_segsum(af))                                 # [B,H,S,S]
+    return jnp.einsum("bqn,bkn,bhqk,bkhp->bqhp",
+                      Cm.astype(jnp.float32), Bm.astype(jnp.float32), L,
+                      xd.astype(jnp.float32)).astype(xd.dtype)
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                   cache: Optional[dict] = None):
+    """Full-sequence path (train/prefill). Returns (y, new_cache or None).
+
+    When ``cache`` is given its final SSM/conv states are produced so decode
+    can continue (prefill -> decode handoff).
+    """
+    B, S, D = x.shape
+    di, H, Pd, N = d_inner(cfg), n_ssm_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xBC_raw, dt = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, S, H, Pd)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = dt * A                                               # [B,S,H] log decay
+    xd = xs * dt.astype(xs.dtype)[..., None]
+    xd = shard_act(xd, ("batch", "seq", "ssm_heads", None))
+    # largest chunk <= configured that divides S (odd lengths degrade
+    # gracefully toward the pure recurrence instead of asserting)
+    chunk = min(cfg.ssm_chunk, S)
+    while S % chunk:
+        chunk -= 1
+    y, h_final = ssd_chunked(xd, a, Bm, Cm, chunk)
+    y = y + xs * p["D_skip"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = shard_act(out, ("batch", "seq", "d_model"))
+    new_cache = None
+    if cache is not None:
+        # conv cache stores the raw (pre-activation) trailing window inputs
+        W = cfg.ssm_conv
+        conv_tail = xBC_raw[:, max(0, S - (W - 1)):, :]
+        if conv_tail.shape[1] < W - 1:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (W - 1 - conv_tail.shape[1], 0), (0, 0)))
+        new_cache = {"h": h_final, "conv": conv_tail}
+    return out, new_cache
+
+
+def mamba2_decode_step(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict):
+    """x: [B, 1, D]; cache: {'h': [B,H,P,N] fp32, 'conv': [B, W-1, Cd]}."""
+    B = x.shape[0]
+    di, H, Pd, N, W = d_inner(cfg), n_ssm_heads(cfg), cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xBC_raw, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([cache["conv"], xBC_raw], axis=1)    # [B, W, Cd]
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype)) \
+        + p["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(conv_out)                                    # [B, Cd]
+    xs = xBC[..., :di].reshape(B, H, Pd)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * A)                                       # [B,H]
+    xf = xs.astype(jnp.float32)
+    h_new = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm.astype(jnp.float32), dtv, xf)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h_new)
+    y = (y + xf * p["D_skip"].astype(jnp.float32)[None, :, None]).astype(x.dtype)
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_conv = window[:, 1:, :]
+    return out, {"h": h_new, "conv": new_conv}
+
+
+def mamba2_cache_shape(cfg: ModelConfig, batch: int, dtype):
+    H, Pd, N, W = n_ssm_heads(cfg), cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jax.ShapeDtypeStruct((batch, H, Pd, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, W - 1, conv_dim(cfg)), dtype),
+    }
+
+
+def mamba2_cache_axes():
+    return {"h": ("batch", "ssm_heads", None, "state"),
+            "conv": ("batch", None, "ffn")}

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adam,
+    apply_updates,
+    build_optimizer,
+    momentum,
+    sgd,
+)

@@ -1,0 +1,131 @@
+"""Minimal optax-style optimizers over pytrees: SGD, momentum, Adam,
+Adafactor (factored second moment — used for the 480B MoE where Adam's fp32
+moments do not fit HBM even fully sharded).
+
+All states are pytrees mirroring the parameter tree so the sharding rule
+engine (``repro.sharding``) can derive optimizer-state shardings (ZeRO-1)
+from the parameter logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+    name: str
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        return jax.tree.map(lambda m_: -lr * m_, m), {"m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        upd = jax.tree.map(
+            lambda m_, v_: -lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30, clip: float = 1.0) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern). Rank>=2 leaves keep only
+    row/col statistics -> O(n+m) state instead of O(n*m); no first moment."""
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"s": jax.tree.map(one, params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -0.8
+
+        def one(g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                row = beta * s["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * s["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                r = (row / jnp.maximum(row_mean, eps))[..., None]
+                c = col[..., None, :]
+                vhat = r * c
+                upd = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                new_s = {"row": row, "col": col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS <= clip)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip)
+            return -lr * upd, new_s
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        outs = [one(g, s) for g, s in zip(flat_g, flat_s)]
+        upd = tdef.unflatten([o[0] for o in outs])
+        new_s = tdef.unflatten([o[1] for o in outs])
+        return upd, {"s": new_s, "t": t}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def build_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adam":
+        return adam(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(f"unknown optimizer {name}")

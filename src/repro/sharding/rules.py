@@ -1,0 +1,167 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model code never names mesh axes. It tags parameters and activations with
+*logical* axis names ("batch", "ffn", "heads", "experts", ...). A rules table
+maps logical names to mesh axes; specs are derived with divisibility checks so
+a rule silently degrades to replication when a dim does not divide (e.g. GQA
+kv=8 over a 16-way model axis) instead of relying on uneven-shard padding.
+
+The active (mesh, rules) pair is installed with the ``axis_rules`` context
+manager; ``shard_act`` is a no-op outside of it, so the same model code runs
+un-meshed on one CPU device and fully sharded under the production mesh.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rule = Union[None, str, tuple]
+
+# Logical axis -> preferred mesh axes (tuples try to use all listed axes).
+DEFAULT_RULES: dict[str, Rule] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,          # decode KV caches: overridden per shape
+    "d_model": None,
+    "head_dim": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "vocab": "model",
+    "state": None,           # SSM state dim
+    "ssm_heads": "model",
+    "layers": None,
+    "lora": None,
+    "patches": None,
+    "frames": None,
+    "stats": None,
+}
+
+# Shape-kind specific overrides (see launch/dryrun.py):
+#  - long-context decode (global_batch=1): shard the cache sequence instead of batch
+#  - decode: shard KV cache sequence over the model axis (kv heads rarely divide)
+DECODE_RULES = dict(DEFAULT_RULES, kv_seq="model")
+LONGCTX_RULES = dict(DEFAULT_RULES, batch=None, kv_seq=("data", "model"), seq=("data", "model"))
+
+_ctx = threading.local()
+
+
+@contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, dict(rules or DEFAULT_RULES)) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def _mesh_axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve_rule(rule: Rule, mesh: Mesh, dim: int, used: set[str]):
+    """Return a tuple of mesh axes for one dim, or None (replicate)."""
+    if rule is None:
+        return None
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    axes = [a for a in axes if a in mesh.shape and a not in used]
+    # Greedy: drop leading axes until the product divides the dim.
+    while axes and (dim % _mesh_axis_size(mesh, axes) != 0):
+        axes = axes[1:]
+    if not axes:
+        return None
+    used.update(axes)
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def logical_spec(names: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: dict) -> P:
+    """Build a PartitionSpec for one array from logical dim names."""
+    used: set[str] = set()
+    parts = []
+    for name, dim in zip(names, shape):
+        rule = rules.get(name) if name else None
+        parts.append(_resolve_rule(rule, mesh, dim, used))
+    # trim trailing Nones (cosmetic)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard_act(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a with_sharding_constraint from logical names; no-op un-meshed."""
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    spec = logical_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------------
+# Parameter / optimizer-state shardings
+# ----------------------------------------------------------------------------
+
+
+def param_specs(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+                rules: Optional[dict] = None) -> Any:
+    """axes_tree: tuples-of-names tree (see models.common.ParamFactory).
+    shapes_tree: matching tree of arrays or ShapeDtypeStructs."""
+    rules = dict(rules or DEFAULT_RULES)
+    is_leaf = lambda x: isinstance(x, tuple)
+    return jax.tree.map(
+        lambda names, arr: logical_spec(names, arr.shape, mesh, rules),
+        axes_tree,
+        shapes_tree,
+        is_leaf=is_leaf,
+    )
+
+
+def make_param_sharding(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+                        rules: Optional[dict] = None) -> Any:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(axes_tree, shapes_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def zero1_extend(spec: P, shape: Sequence[int], mesh: Mesh,
+                 axis: str = "data") -> P:
+    """ZeRO-1: additionally shard an optimizer-state array over the data axis.
+
+    Picks the largest dim not already sharded whose size divides the data-axis
+    extent; replicates (returns spec unchanged) if none qualifies.
+    """
+    if axis not in mesh.shape:
+        return spec
+    n = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for p in parts if p for a in ((p,) if isinstance(p, str) else p)}
+    if axis in used:
+        return spec
+    best, best_dim = -1, 0
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None and dim % n == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best < 0:
+        return spec
+    parts[best] = axis
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests see exactly ONE CPU device (the dry-run's 512-device flag must never
+# leak here — see launch/dryrun.py).
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,83 @@
+"""Tests for staleness-weighted asynchronous aggregation (paper III-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    incremental_aggregate,
+    staleness_weights,
+    weighted_aggregate,
+)
+
+
+def _trees(k, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"a": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+             "b": {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}}
+            for _ in range(k)]
+
+
+def test_weighted_aggregate_matches_manual():
+    ups = _trees(3)
+    w = np.array([0.5, 0.3, 0.2], np.float32)
+    out = weighted_aggregate(ups, w)
+    manual = sum(wi * np.asarray(u["a"]) for wi, u in zip(w, ups))
+    np.testing.assert_allclose(np.asarray(out["a"]), manual, rtol=1e-6)
+
+
+def test_uniform_weights_equal_mean():
+    ups = _trees(4)
+    w = np.full(4, 0.25, np.float32)
+    out = weighted_aggregate(ups, w)
+    mean = np.mean([np.asarray(u["b"]["w"]) for u in ups], axis=0)
+    np.testing.assert_allclose(np.asarray(out["b"]["w"]), mean, rtol=1e-6)
+
+
+def test_staleness_weights_normalized():
+    w = staleness_weights(rounds=[10, 9, 7], cardinalities=[100, 50, 200],
+                          current_round=10)
+    assert w.sum() == pytest.approx(1.0, rel=1e-6)
+    assert (w > 0).all()
+
+
+def test_staleness_damps_older_updates():
+    # same cardinality: current-round update must outweigh stale one
+    w = staleness_weights(rounds=[10, 5], cardinalities=[100, 100],
+                          current_round=10)
+    assert w[0] > w[1]
+    assert w[0] / w[1] == pytest.approx(np.sqrt(6), rel=1e-6)
+
+
+def test_cardinality_weighting():
+    w = staleness_weights(rounds=[10, 10], cardinalities=[300, 100],
+                          current_round=10)
+    assert w[0] / w[1] == pytest.approx(3.0, rel=1e-6)
+
+
+def test_eq1_option():
+    w = staleness_weights(rounds=[4, 2], cardinalities=[1, 1],
+                          current_round=4, fn="eq1")
+    assert w[0] / w[1] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_incremental_matches_batch():
+    ups = _trees(5, seed=3)
+    w = np.array([0.1, 0.2, 0.3, 0.25, 0.15], np.float32)
+    batch = weighted_aggregate(ups, w)
+    acc = None
+    for u, wi in zip(ups, w):
+        acc = incremental_aggregate(acc, u, float(wi))
+    np.testing.assert_allclose(np.asarray(acc["a"]),
+                               np.asarray(batch["a"]), rtol=1e-5, atol=1e-7)
+
+
+def test_kernel_path_matches_xla_path():
+    from repro.kernels import ops
+    ups = _trees(3, seed=7)
+    w = np.array([0.6, 0.3, 0.1], np.float32)
+    a = weighted_aggregate(ups, w)
+    b = ops.aggregate_pytree(ups, w, interpret=True)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,61 @@
+"""Checkpoint manager: atomicity, retention, dtype fidelity, resume."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+def _tree():
+    return {
+        "dense": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                  "b": jnp.ones(4, jnp.bfloat16)},
+        "scalars": (jnp.int32(7), jnp.float32(0.5)),
+        "list": [jnp.zeros(2), jnp.ones(2)],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ckpt"))
+    r = restore_pytree(str(tmp_path / "ckpt"))
+    np.testing.assert_array_equal(r["dense"]["w"], np.asarray(t["dense"]["w"]))
+    assert r["dense"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(r["dense"]["b"].astype(np.float32),
+                                  np.ones(4, np.float32))
+    assert isinstance(r["scalars"], tuple)
+    assert int(r["scalars"][0]) == 7
+    assert isinstance(r["list"], list)
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 5, 9):
+        mgr.save(step, {"w": jnp.full(3, float(step))}, extra={"round": step})
+    assert mgr.steps() == [5, 9]  # step 1 garbage-collected
+    tree, extra, step = mgr.restore()
+    assert step == 9 and extra["round"] == 9
+    np.testing.assert_array_equal(tree["w"], np.full(3, 9.0, np.float32))
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, {"w": jnp.zeros(2)})
+    mgr.save(2, {"w": jnp.ones(2)})
+    tree, _, step = mgr.restore(1)
+    assert step == 1
+    np.testing.assert_array_equal(tree["w"], np.zeros(2, np.float32))
+
+
+def test_no_tmp_dirs_left_behind(tmp_path):
+    save_pytree(_tree(), str(tmp_path / "c"))
+    save_pytree(_tree(), str(tmp_path / "c"))  # overwrite path
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore()

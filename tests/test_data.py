@@ -1,0 +1,66 @@
+"""Data pipeline tests: non-IID partitioners + synthetic federated datasets."""
+import numpy as np
+import pytest
+
+from repro.data.partition import (
+    dirichlet_partition,
+    label_shard_partition,
+    lognormal_cardinalities,
+)
+from repro.data.synthetic import make_federated_dataset
+
+
+def test_label_shards_give_label_skew(rng):
+    labels = rng.integers(0, 10, 6000)
+    parts = label_shard_partition(labels, n_clients=30, shards_per_client=2,
+                                  rng=rng)
+    assert len(parts) == 30
+    # 2 shards of sorted labels -> at most ~4 distinct classes per client
+    n_classes = [len(np.unique(labels[p])) for p in parts]
+    assert np.median(n_classes) <= 4
+    # full cover, no overlap
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(set(allidx.tolist()))
+
+
+def test_dirichlet_partition_sizes(rng):
+    labels = rng.integers(0, 5, 4000)
+    card = np.full(20, 100)
+    parts = dirichlet_partition(labels, 20, alpha=0.3, rng=rng,
+                                cardinalities=card)
+    sizes = np.array([len(p) for p in parts])
+    np.testing.assert_array_equal(sizes, card)
+
+
+def test_lognormal_cardinalities_bounds(rng):
+    card = lognormal_cardinalities(500, mean=200, lo=20, rng=rng)
+    assert card.min() >= 20 and card.max() <= 1200
+    assert 100 < np.median(card) < 400
+
+
+@pytest.mark.parametrize("name", ["mnist", "femnist", "speech", "shakespeare"])
+def test_federated_dataset_shapes(name):
+    data = make_federated_dataset(name, n_clients=12, scale=0.1, seed=0)
+    assert data.n_clients == 12
+    assert data.X.shape[0] == 12 and data.y.shape[0] == 12
+    assert (data.n >= 1).all() and (data.n <= data.X.shape[1]).all()
+    assert len(data.eval_x) > 100
+    # labels within class range
+    assert data.y.max() < {"mnist": 10, "femnist": 62, "speech": 35,
+                           "shakespeare": 82}[name]
+
+
+def test_mnist_shard_scheme_label_skew():
+    data = make_federated_dataset("mnist", n_clients=20, scale=0.2, seed=1)
+    distinct = []
+    for c in range(20):
+        labels = data.y[c, :data.n[c]]
+        distinct.append(len(np.unique(labels)))
+    assert np.median(distinct) <= 4  # shard-induced label skew
+
+
+def test_dataset_deterministic_by_seed():
+    a = make_federated_dataset("speech", n_clients=6, scale=0.1, seed=5)
+    b = make_federated_dataset("speech", n_clients=6, scale=0.1, seed=5)
+    np.testing.assert_array_equal(a.X, b.X)
+    np.testing.assert_array_equal(a.n, b.n)

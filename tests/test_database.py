@@ -1,0 +1,74 @@
+"""Database record semantics + crash-safe persistence."""
+import numpy as np
+import pytest
+
+from repro.core.database import ClientRecord, Database, ResultRecord
+
+
+def _mkdb():
+    db = Database()
+    for cid in range(4):
+        db.register_client(ClientRecord(client_id=cid, hardware="cpu1",
+                                        data_cardinality=50 + cid,
+                                        batch_size=10, local_epochs=5))
+    return db
+
+
+def test_running_clients_marked_busy():
+    db = _mkdb()
+    db.mark_running(1, round_=0)
+    assert db.clients[1].status == "running"
+    db.mark_complete(1, duration=12.5)
+    assert db.clients[1].status == "idle"
+    assert db.clients[1].durations == [12.5]
+
+
+def test_pending_results_staleness_window():
+    db = _mkdb()
+    for r in (1, 3, 5):
+        db.put_update(ResultRecord(client_id=0, round=r, n_samples=10,
+                                   train_duration=1.0, t_available=0.0),
+                      {"w": np.ones(3, np.float32)})
+    pend = db.pending_results(max_staleness=2, current_round=5)
+    assert sorted(p.round for p in pend) == [3, 5]
+
+
+def test_aggregated_results_freed():
+    db = _mkdb()
+    rec = ResultRecord(client_id=0, round=0, n_samples=10, train_duration=1.0,
+                       t_available=0.0)
+    db.put_update(rec, {"w": np.ones(3, np.float32)})
+    assert rec.update_key in db.blobs
+    db.mark_aggregated([rec])
+    assert rec.update_key not in db.blobs
+    assert not db.pending_results(5, 0)
+
+
+def test_save_load_roundtrip(tmp_path):
+    db = _mkdb()
+    db.mark_running(2, 0)
+    db.mark_complete(2, 7.0)
+    db.clients[2].booster = 1.44
+    rec = ResultRecord(client_id=2, round=0, n_samples=10, train_duration=7.0,
+                       t_available=7.0)
+    db.put_update(rec, {"w": np.arange(6, dtype=np.float32).reshape(2, 3)})
+    db.put_global_model(0, {"w": np.full((2, 3), 2.0, np.float32)})
+    db.round = 1
+    db.save(str(tmp_path / "db"))
+
+    db2 = Database.load(str(tmp_path / "db"))
+    assert db2.round == 1
+    assert db2.clients[2].booster == pytest.approx(1.44)
+    assert db2.clients[2].durations == [7.0]
+    np.testing.assert_array_equal(db2.blobs[rec.update_key]["w"],
+                                  np.arange(6, dtype=np.float32).reshape(2, 3))
+    np.testing.assert_array_equal(db2.latest_global()["w"],
+                                  np.full((2, 3), 2.0, np.float32))
+
+
+def test_global_model_retention():
+    db = _mkdb()
+    for r in range(6):
+        db.put_global_model(r, {"w": np.full(2, float(r), np.float32)})
+    assert len(db.global_models) == 3  # keeps only recent history
+    assert db.latest_global()["w"][0] == 5.0

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import staleness_weights, weighted_aggregate
+from repro.core.scoring import calculate_score
+from repro.core.staleness import eq2_apodotiko
+
+import jax.numpy as jnp
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+@given(st.integers(0, 1000), st.integers(0, 50))
+@settings(**SETTINGS)
+def test_eq2_in_unit_interval(t, staleness):
+    w = eq2_apodotiko(t, t + staleness)
+    assert 0 < w <= 1.0
+    if staleness == 0:
+        assert w == 1.0
+
+
+@given(st.lists(st.floats(0.5, 1e4), min_size=1, max_size=12),
+       st.floats(1.0, 3.0), st.integers(1, 10_000))
+@settings(**SETTINGS)
+def test_score_positive_and_linear_in_booster(durations, booster, card):
+    s1 = calculate_score(1.0, durations, card, 5, 10, 0.8)
+    sb = calculate_score(booster, durations, card, 5, 10, 0.8)
+    assert s1 > 0
+    assert sb == pytest.approx(booster * s1, rel=1e-9)
+
+
+@given(st.lists(st.floats(1.0, 100.0), min_size=1, max_size=8))
+@settings(**SETTINGS)
+def test_score_bounded_by_best_and_worst_round(durations):
+    """Weighted average of per-round scores lies within their range."""
+    card, E, B = 100, 5, 10
+    per_round = [card * (card * E / B) / d for d in durations]
+    s = calculate_score(1.0, durations, card, E, B, 0.8)
+    assert min(per_round) - 1e-6 <= s <= max(per_round) + 1e-6
+
+
+@given(st.lists(st.tuples(st.integers(0, 20), st.integers(1, 1000)),
+                min_size=1, max_size=10),
+       st.integers(20, 25))
+@settings(**SETTINGS)
+def test_staleness_weights_form_distribution(pairs, T):
+    rounds = [p[0] for p in pairs]
+    cards = [p[1] for p in pairs]
+    w = staleness_weights(rounds, cards, T)
+    assert w.shape == (len(pairs),)
+    assert abs(float(w.sum()) - 1.0) < 1e-5
+    assert (w >= 0).all()
+
+
+@given(st.integers(1, 6), st.integers(1, 32))
+@settings(max_examples=20, deadline=None)
+def test_aggregation_convex_hull(k, n):
+    """With weights summing to 1, each output element lies within the
+    [min, max] envelope of the inputs (convex combination)."""
+    rng = np.random.default_rng(k * 100 + n)
+    ups = [{"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+           for _ in range(k)]
+    w = rng.dirichlet(np.ones(k)).astype(np.float32)
+    out = np.asarray(weighted_aggregate(ups, w)["w"])
+    stack = np.stack([np.asarray(u["w"]) for u in ups])
+    assert (out <= stack.max(0) + 1e-5).all()
+    assert (out >= stack.min(0) - 1e-5).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_quantization_roundtrip_error_bound(seed):
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, rng.uniform(0.1, 10),
+                               size=(8 * 256,)), jnp.float32)
+    q, s = ops.quantize_q8(x, interpret=True)
+    d = ops.dequantize_q8(q, s, interpret=True)
+    err = np.abs(np.asarray(d) - np.asarray(x)).reshape(-1, 256)
+    assert (err <= np.asarray(s)[:, None] * 0.5 + 1e-6).all()
+
+
+@given(st.integers(1, 40), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_selection_respects_pool_and_busy(n_clients, per_round):
+    from repro.core.database import ClientRecord, Database
+    from repro.core.selection import select_clients
+    db = Database()
+    rng = np.random.default_rng(n_clients)
+    busy = set(rng.choice(n_clients, size=n_clients // 3, replace=False).tolist())
+    for cid in range(n_clients):
+        rec = ClientRecord(client_id=cid, hardware="cpu1", data_cardinality=10,
+                           batch_size=5, local_epochs=1)
+        rec.n_invocations = int(rng.integers(0, 3))
+        if rec.n_invocations:
+            rec.durations = [float(rng.uniform(1, 50))]
+        if cid in busy:
+            rec.status = "running"
+        db.register_client(rec)
+    sel = select_clients(db, per_round, rng)
+    assert len(sel) == len(set(sel))
+    assert len(sel) <= per_round
+    assert not (set(sel) & busy)

@@ -1,0 +1,83 @@
+"""Unit tests for the roofline extraction (HLO collective parsing, terms)."""
+import pytest
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.roofline import (
+    Roofline,
+    _shape_bytes,
+    active_params,
+    collective_bytes_per_device,
+    model_flops,
+    ssd_inner_scan_correction,
+)
+
+HLO = """
+ENTRY %main {
+  %ar = bf16[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4,256]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[2,256]{1,0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+  %cp = bf16[8]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,1024]") == 16 * 1024 * 2
+    assert _shape_bytes("f32[4,256]") == 4 * 256 * 4
+    assert _shape_bytes("(f32[8], bf16[4])") == 8 * 4 + 4 * 2
+
+
+def test_collective_parse_kinds_and_factors():
+    out = collective_bytes_per_device(HLO, n_devices=16)
+    # all-reduce: group 4 -> 2*(3/4)*payload
+    assert out["all-reduce"] == pytest.approx(16 * 1024 * 2 * 2 * 3 / 4)
+    # all-gather iota groups [2,8] -> group size 8 -> (7/8)*payload
+    assert out["all-gather"] == pytest.approx(4 * 256 * 4 * 7 / 8)
+    # reduce-scatter group 2 -> (1/2)*payload
+    assert out["reduce-scatter"] == pytest.approx(2 * 256 * 4 * 1 / 2)
+    assert out["collective-permute"] == pytest.approx(8 * 2)
+    assert out["total"] == pytest.approx(
+        out["all-reduce"] + out["all-gather"] + out["reduce-scatter"]
+        + out["all-to-all"] + out["collective-permute"])
+
+
+def test_dot_ops_not_counted():
+    out = collective_bytes_per_device("  %d = f32[8,8] dot(%a, %b)\n", 4)
+    assert out["total"] == 0.0
+
+
+def test_bottleneck_selection():
+    r = Roofline("a", "s", "m", 256, flops_per_device=197e12,  # 1 s compute
+                 bytes_per_device=819e9 * 0.5,                  # 0.5 s memory
+                 coll_bytes_per_device=50e9 * 2,                # 2 s collective
+                 coll_breakdown={}, peak_memory_per_device=0,
+                 model_flops_global=197e12 * 256)
+    assert r.bottleneck == "collective"
+    assert r.step_time_s == pytest.approx(2.0)
+    assert r.useful_ratio == pytest.approx(1.0)
+
+
+def test_moe_active_params_smaller_than_total():
+    cfg = get_config("arctic-480b")
+    total = 477_000_000_000
+    act = active_params(cfg, total)
+    assert act < total / 10  # 2-of-128 experts active
+    dense = get_config("granite-8b")
+    assert active_params(dense, 8_000_000_000) == 8_000_000_000
+
+
+def test_model_flops_monotone_in_tokens():
+    cfg = get_config("granite-8b")
+    t4k = model_flops(cfg, SHAPES["train_4k"], 8e9)
+    pre = model_flops(cfg, SHAPES["prefill_32k"], 8e9)
+    dec = model_flops(cfg, SHAPES["decode_32k"], 8e9)
+    assert t4k > pre > dec > 0
+
+
+def test_ssd_correction_only_for_ssm_families():
+    mamba = get_config("mamba2-370m")
+    dense = get_config("granite-8b")
+    assert ssd_inner_scan_correction(mamba, SHAPES["train_4k"], "train") > 0
+    assert ssd_inner_scan_correction(dense, SHAPES["train_4k"], "train") == 0
+    assert ssd_inner_scan_correction(mamba, SHAPES["decode_32k"], "decode") == 0

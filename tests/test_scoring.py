@@ -1,0 +1,63 @@
+"""Unit tests for Algorithm 2 (Client Efficiency Scoring)."""
+import numpy as np
+import pytest
+
+from repro.core.scoring import calculate_score, decay_rate, n_updates, promotion_rate
+
+
+def test_n_updates_matches_paper_formula():
+    # #updates = N_c * E / B  (Algorithm 2 line 2)
+    assert n_updates(200, 5, 10) == 100
+    assert n_updates(64, 1, 32) == 2
+
+
+def test_score_single_round():
+    # one round: score = beta * N_c * (#updates / T)
+    s = calculate_score(1.0, [10.0], data_cardinality=100, epochs=5,
+                        batch_size=10, decay=0.8)
+    assert s == pytest.approx(100 * (50 / 10.0))
+
+
+def test_faster_clients_score_higher():
+    fast = calculate_score(1.0, [5.0], 100, 5, 10, 0.8)
+    slow = calculate_score(1.0, [50.0], 100, 5, 10, 0.8)
+    assert fast > slow
+
+
+def test_larger_datasets_score_higher_at_equal_throughput():
+    # CEF multiplies by N_c to favor data-rich clients (paper III-C)
+    small = calculate_score(1.0, [10.0], 100, 5, 10, 0.8)
+    # 2x data at 2x duration = identical steps/sec per sample, more data
+    large = calculate_score(1.0, [20.0], 200, 5, 10, 0.8)
+    assert large > small
+
+
+def test_exponential_decay_prefers_recent_rounds():
+    # newest-first ordering: improving client (fast recent round) must beat
+    # degrading client (slow recent round) with the same multiset of durations
+    improving = calculate_score(1.0, [5.0, 50.0], 100, 5, 10, 0.8)
+    degrading = calculate_score(1.0, [50.0, 5.0], 100, 5, 10, 0.8)
+    assert improving > degrading
+
+
+def test_booster_scales_score_linearly():
+    base = calculate_score(1.0, [10.0], 100, 5, 10, 0.8)
+    boosted = calculate_score(1.44, [10.0], 100, 5, 10, 0.8)
+    assert boosted == pytest.approx(1.44 * base)
+
+
+def test_weighted_average_normalization():
+    # equal durations -> score independent of history length
+    s1 = calculate_score(1.0, [10.0], 100, 5, 10, 0.8)
+    s3 = calculate_score(1.0, [10.0, 10.0, 10.0], 100, 5, 10, 0.8)
+    assert s1 == pytest.approx(s3)
+
+
+def test_rates_from_adjustment_rate():
+    # lambda = 1 - rho, promotion = 1 + rho (default rho = 0.2)
+    assert decay_rate(0.2) == pytest.approx(0.8)
+    assert promotion_rate(0.2) == pytest.approx(1.2)
+
+
+def test_empty_history_scores_zero():
+    assert calculate_score(1.0, [], 100, 5, 10, 0.8) == 0.0

@@ -1,0 +1,80 @@
+"""Tests for Algorithm 3 (probabilistic client selection + booster)."""
+import numpy as np
+import pytest
+
+from repro.core.database import ClientRecord, Database
+from repro.core.selection import select_clients
+
+
+def _db(n=10, invoked=0, busy=(), durations=None):
+    db = Database()
+    for cid in range(n):
+        rec = ClientRecord(client_id=cid, hardware="cpu1",
+                           data_cardinality=100, batch_size=10, local_epochs=5)
+        if cid < invoked:
+            rec.n_invocations = 1
+            rec.durations = [durations[cid] if durations else 10.0]
+        if cid in busy:
+            rec.status = "running"
+        db.register_client(rec)
+    return db
+
+
+def test_uninvoked_clients_prioritized():
+    db = _db(n=10, invoked=0)
+    sel = select_clients(db, 5, np.random.default_rng(0))
+    assert len(sel) == 5
+    assert len(set(sel)) == 5
+
+
+def test_partial_uninvoked_pool_fills_from_scored():
+    db = _db(n=10, invoked=8)
+    sel = select_clients(db, 5, np.random.default_rng(0))
+    # the two uninvoked clients (8, 9) must be included first
+    assert {8, 9} <= set(sel)
+    assert len(sel) == 5
+
+
+def test_busy_clients_never_selected():
+    db = _db(n=10, invoked=10, busy={0, 1, 2})
+    for seed in range(5):
+        sel = select_clients(db, 5, np.random.default_rng(seed))
+        assert not ({0, 1, 2} & set(sel))
+
+
+def test_fast_clients_selected_more_often():
+    # clients 0-4 are 20x faster than 5-9 -> far higher selection probability
+    durations = [1.0] * 5 + [20.0] * 5
+    counts = np.zeros(10)
+    for seed in range(200):
+        db = _db(n=10, invoked=10, durations=durations)
+        sel = select_clients(db, 3, np.random.default_rng(seed))
+        counts[sel] += 1
+    assert counts[:5].sum() > 2.5 * counts[5:].sum()
+
+
+def test_booster_reset_on_selection_and_promoted_otherwise():
+    db = _db(n=6, invoked=6)
+    sel = select_clients(db, 3, np.random.default_rng(0),
+                         adjustment_rate=0.2)
+    for cid, rec in db.clients.items():
+        if cid in sel:
+            assert rec.booster == pytest.approx(1.0)
+        else:
+            assert rec.booster == pytest.approx(1.2)
+
+
+def test_booster_compounds_for_repeatedly_skipped():
+    durations = [1.0] * 5 + [1000.0] * 5  # 5-9 are heavy stragglers
+    db = _db(n=10, invoked=10, durations=durations)
+    for seed in range(4):
+        select_clients(db, 2, np.random.default_rng(seed + 1))
+    # some straggler never selected: booster grew ~1.2^k, k>=1
+    max_boost = max(db.clients[c].booster for c in range(5, 10))
+    assert max_boost >= 1.2 ** 2
+
+
+def test_selection_never_exceeds_pool():
+    db = _db(n=3, invoked=3)
+    sel = select_clients(db, 10, np.random.default_rng(0))
+    assert len(sel) == 3

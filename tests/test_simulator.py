@@ -1,0 +1,90 @@
+"""FaaS platform simulation tests: cold starts, scale-to-zero, costs, events."""
+import numpy as np
+import pytest
+
+from repro.faas.cost import CostModel
+from repro.faas.events import EventLoop
+from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
+from repro.faas.platform import FaaSPlatform
+
+
+def test_event_loop_ordering():
+    loop = EventLoop()
+    seen = []
+    loop.schedule(5.0, lambda: seen.append("b"))
+    loop.schedule(1.0, lambda: seen.append("a"))
+    loop.schedule(9.0, lambda: seen.append("c"))
+    loop.run_all()
+    assert seen == ["a", "b", "c"]
+    assert loop.now == pytest.approx(9.0)
+
+
+def test_event_loop_predicate_stop():
+    loop = EventLoop()
+    seen = []
+    for t in (1, 2, 3, 4):
+        loop.schedule(t, lambda t=t: seen.append(t))
+    loop.run_until(lambda: len(seen) >= 2)
+    assert seen == [1, 2]
+
+
+def test_first_invocation_is_cold():
+    p = FaaSPlatform(keep_warm=600, cold_start_s=8)
+    hw = HARDWARE_PROFILES["cpu1"]
+    rec = p.invoke(0, 0, now=0.0, train_steps=10, hw=hw, base_step_time=1.0)
+    assert rec.cold
+
+
+def test_warm_within_keep_warm_window():
+    p = FaaSPlatform(keep_warm=600, cold_start_s=8)
+    hw = HARDWARE_PROFILES["cpu1"]
+    r1 = p.invoke(0, 0, now=0.0, train_steps=10, hw=hw, base_step_time=1.0)
+    r2 = p.invoke(0, 1, now=r1.t_completed + 100, train_steps=10, hw=hw,
+                  base_step_time=1.0)
+    assert not r2.cold
+
+
+def test_cold_after_scale_to_zero():
+    p = FaaSPlatform(keep_warm=600, cold_start_s=8)
+    hw = HARDWARE_PROFILES["cpu1"]
+    r1 = p.invoke(0, 0, now=0.0, train_steps=10, hw=hw, base_step_time=1.0)
+    r2 = p.invoke(0, 1, now=r1.t_completed + 601, train_steps=10, hw=hw,
+                  base_step_time=1.0)
+    assert r2.cold
+    assert p.cold_start_ratio() == pytest.approx(1.0)
+
+
+def test_gpu_clients_faster_than_cpu():
+    p = FaaSPlatform(seed=1)
+    cpu_rec = p.invoke(0, 0, 0.0, 1000, HARDWARE_PROFILES["cpu1"], 0.1)
+    gpu_rec = p.invoke(1, 0, 0.0, 1000, HARDWARE_PROFILES["gpu"], 0.1)
+    assert gpu_rec.duration < cpu_rec.duration / 4
+
+
+def test_paper_fleet_mix():
+    fleet = paper_fleet(200)
+    names = [h.name for h in fleet]
+    assert len(fleet) == 200
+    assert names.count("cpu1") == 130
+    assert names.count("cpu2") == 50
+    assert names.count("gpu") == 20
+
+
+def test_cost_model_gpu_premium():
+    cm = CostModel()
+    p = FaaSPlatform(seed=0)
+    cpu = p.invoke(0, 0, 0.0, 1000, HARDWARE_PROFILES["cpu1"], 0.1)
+    gpu = p.invoke(1, 0, 0.0, 1000, HARDWARE_PROFILES["gpu"], 0.1)
+    c_cpu = cm.invocation_cost(cpu, HARDWARE_PROFILES["cpu1"])
+    c_gpu = cm.invocation_cost(gpu, HARDWARE_PROFILES["gpu"])
+    assert c_cpu > 0 and c_gpu > 0
+    # GPU costs more per second (hourly P100 fraction dominates)
+    assert c_gpu / gpu.duration > c_cpu / cpu.duration
+
+
+def test_failures_injected():
+    p = FaaSPlatform(seed=0, failure_rate=0.5)
+    hw = HARDWARE_PROFILES["cpu1"]
+    recs = [p.invoke(i, 0, 0.0, 100, hw, 0.1) for i in range(50)]
+    fails = sum(r.failed for r in recs)
+    assert 10 < fails < 40

@@ -1,0 +1,37 @@
+"""Tests for the staleness weighting functions (paper Eq. 1 / Eq. 2, Fig. 2)."""
+import numpy as np
+import pytest
+
+from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko
+
+
+def test_eq2_current_round_weight_is_one():
+    for t in (0, 1, 5, 100):
+        assert eq2_apodotiko(t, t) == pytest.approx(1.0)
+
+
+def test_eq2_monotonically_decreasing_in_staleness():
+    w = [eq2_apodotiko(10 - s, 10) for s in range(6)]
+    assert all(a > b for a, b in zip(w, w[1:]))
+
+
+def test_eq2_formula():
+    # 1 / sqrt(T - t_i + 1)
+    assert eq2_apodotiko(8, 10) == pytest.approx(1 / np.sqrt(3))
+
+
+def test_eq2_consistent_along_equal_staleness_diagonal():
+    # the paper's Fig. 2b argument: weight depends only on T - t_i
+    assert eq2_apodotiko(3, 5) == pytest.approx(eq2_apodotiko(33, 35))
+    assert eq2_apodotiko(0, 5) == pytest.approx(eq2_apodotiko(95, 100))
+
+
+def test_eq1_inconsistent_along_diagonal():
+    # the paper's Fig. 2a criticism: one-round-late weight grows with T
+    early = eq1_fedlesscan(1, 2)
+    late = eq1_fedlesscan(99, 100)
+    assert late > early
+
+
+def test_eq1_formula():
+    assert eq1_fedlesscan(8, 10) == pytest.approx(0.8)

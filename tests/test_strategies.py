@@ -1,0 +1,92 @@
+"""Strategy behaviour tests (selection policy, gating, staleness windows)."""
+import numpy as np
+import pytest
+
+from repro.core.database import ClientRecord, Database, ResultRecord
+from repro.core.strategies.base import STRATEGIES, StrategyConfig, build_strategy
+
+
+def _db(n=20, invoked=None, durations=None):
+    db = Database()
+    for cid in range(n):
+        rec = ClientRecord(client_id=cid, hardware="cpu1",
+                           data_cardinality=100, batch_size=10, local_epochs=5)
+        if invoked and cid in invoked:
+            rec.n_invocations = 2
+            rec.durations = [durations.get(cid, 10.0)] if durations else [10.0]
+        db.register_client(rec)
+    return db
+
+
+def _cfg(**kw):
+    return StrategyConfig(clients_per_round=8, **kw)
+
+
+def test_all_six_strategies_registered():
+    assert set(STRATEGIES) == {"fedavg", "fedprox", "scaffold", "fedlesscan",
+                               "fedbuff", "apodotiko"}
+
+
+@pytest.mark.parametrize("name", list(STRATEGIES))
+def test_selection_count_and_uniqueness(name):
+    s = build_strategy(name, _cfg())
+    db = _db(20, invoked=set(range(20)))
+    sel = s.select(db, round_=3)
+    assert len(sel) == 8 and len(set(sel)) == 8
+
+
+def test_sync_strategies_need_all_results():
+    for name in ("fedavg", "fedprox", "scaffold"):
+        s = build_strategy(name, _cfg())
+        assert not s.is_async
+        assert s.results_needed() == 8
+
+
+def test_async_strategies_gate_on_concurrency_ratio():
+    for name in ("fedbuff", "apodotiko"):
+        s = build_strategy(name, _cfg(concurrency_ratio=0.3))
+        assert s.is_async
+        assert s.results_needed() == int(np.ceil(8 * 0.3))
+
+
+def test_sync_usable_only_current_round():
+    s = build_strategy("fedavg", _cfg())
+    cur = ResultRecord(0, round=5, n_samples=10, train_duration=1, t_available=0)
+    old = ResultRecord(1, round=4, n_samples=10, train_duration=1, t_available=0)
+    assert s.usable(cur, 5) and not s.usable(old, 5)
+
+
+def test_async_usable_within_staleness_window():
+    s = build_strategy("apodotiko", _cfg(max_staleness=5))
+    assert s.usable(ResultRecord(0, round=3, n_samples=1, train_duration=1,
+                                 t_available=0), 8)
+    assert not s.usable(ResultRecord(0, round=2, n_samples=1, train_duration=1,
+                                     t_available=0), 8)
+
+
+def test_apodotiko_weight_combines_staleness_and_cardinality():
+    s = build_strategy("apodotiko", _cfg())
+    fresh = ResultRecord(0, round=10, n_samples=100, train_duration=1, t_available=0)
+    stale = ResultRecord(1, round=8, n_samples=100, train_duration=1, t_available=0)
+    assert s.result_weight(fresh, 10) / s.result_weight(stale, 10) == \
+        pytest.approx(np.sqrt(3))
+
+
+def test_fedlesscan_prefers_fast_cluster():
+    durations = {cid: (1.0 if cid < 10 else 500.0) for cid in range(20)}
+    s = build_strategy("fedlesscan", _cfg())
+    db = _db(20, invoked=set(range(20)), durations=durations)
+    sel = s.select(db, round_=3)
+    fast = sum(1 for c in sel if c < 10)
+    assert fast >= 6  # fills from the fastest duration tier first
+
+
+def test_fedprox_has_proximal_term():
+    s = build_strategy("fedprox", _cfg(prox_mu=0.05))
+    assert s.prox_mu == pytest.approx(0.05)
+    assert build_strategy("fedavg", _cfg()).prox_mu == 0.0
+
+
+def test_scaffold_flags_control_variates():
+    assert build_strategy("scaffold", _cfg()).needs_scaffold
+    assert not build_strategy("apodotiko", _cfg()).needs_scaffold
