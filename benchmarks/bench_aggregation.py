@@ -31,9 +31,17 @@ def run() -> list[dict]:
            for _ in range(K)]
     w = (np.ones(K) / K).astype(np.float32)
 
-    us = _time(weighted_aggregate, ups, w)
+    us = _time(weighted_aggregate, ups, w, path="xla")
     rows.append({"name": "aggregate/xla_fused", "us_per_call": us,
                  "derived": f"GBps={(K * N * 4 / (us / 1e6)) / 1e9:.2f}"})
+
+    # default dispatch: Pallas below the interpret-mode size cap, XLA above
+    # (on CPU at this N the guard picks XLA; on TPU it compiles the kernel)
+    us = _time(weighted_aggregate, ups, w)
+    from repro.core import aggregation
+    rows.append({"name": "aggregate/default_dispatch", "us_per_call": us,
+                 "derived": f"path={aggregation.last_path()};"
+                            f"GBps={(K * N * 4 / (us / 1e6)) / 1e9:.2f}"})
 
     stacked = jnp.stack([u["w"] for u in ups])
     us = _time(ops.staleness_agg, stacked, jnp.asarray(w), interpret=True)

@@ -1,4 +1,4 @@
-"""Benchmark runner — one module per paper table/figure.
+"""Benchmark runner — one module per paper table/figure, plus sweep mode.
 
 Prints ``name,us_per_call,derived`` CSV lines (plus section markers). Scale
 is bench-sized by default (1-core container); set BENCH_FULL=1 for the
@@ -6,12 +6,27 @@ paper-scale grid (hours).
 
   PYTHONPATH=src python -m benchmarks.run            # all benches
   PYTHONPATH=src python -m benchmarks.run fig4 cost  # substring filter
+
+Sweep mode hands off to the strategy-sweep engine (``repro.sweep``) and
+prints the paper's comparison tables (speedup vs FedAvg, cold starts, cost):
+
+  python benchmarks/run.py --sweep paper_mnist       # Tables IV-VI, MNIST
+  python benchmarks/run.py --sweep smoke             # CI-sized check
+  SWEEP_WORKERS=4 python benchmarks/run.py --sweep paper_tables
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
+
+# Runnable both as ``python -m benchmarks.run`` and as a plain script with
+# no PYTHONPATH: make the repo root (benchmarks pkg) and src/ importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 BENCHES = [
     ("fig2_staleness", "benchmarks.bench_staleness"),
@@ -26,8 +41,41 @@ BENCHES = [
     ("aggregation_kernels", "benchmarks.bench_aggregation"),
 ]
 
+SWEEP_COLUMNS = ("dataset", "scenario", "strategy", "seed", "target_acc",
+                 "time_to_target_s", "speedup_vs_fedavg", "final_acc",
+                 "cold_starts", "cold_start_reduction_vs_fedavg", "cost_usd",
+                 "cost_vs_fedavg")
+
+
+def run_sweep_mode(argv: list[str]) -> None:
+    from repro.sweep import get_preset, run_sweep
+
+    i = argv.index("--sweep")
+    name = argv[i + 1] if i + 1 < len(argv) else "paper_mnist"
+    try:
+        spec = get_preset(name)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        sys.exit(2)
+    print(f"# sweep {name}: {spec.n_runs} runs "
+          f"({len(spec.strategies)} strategies x {len(spec.datasets)} "
+          f"datasets), scale={spec.scale.n_clients} clients", flush=True)
+    t0 = time.time()
+    table = run_sweep(spec, progress=lambda i, n, r, m: print(
+        f"#   [{i + 1}/{n}] {r.key}"
+        + (f" FAILED: {m['error']}" if "error" in m else ""), flush=True))
+    print(f"# sweep done in {time.time() - t0:.1f}s\n", flush=True)
+    print(table.to_markdown(columns=SWEEP_COLUMNS))
+    for s in sorted({r["strategy"] for r in table.rows}):
+        if s != "fedavg":
+            print(f"# mean speedup vs fedavg [{s}]: {table.mean_speedup(s)}")
+    sys.exit(1 if any(r["error"] for r in table.rows) else 0)
+
 
 def main() -> None:
+    if "--sweep" in sys.argv:
+        run_sweep_mode(sys.argv)
+        return
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
     print("name,us_per_call,derived")
     failures = 0

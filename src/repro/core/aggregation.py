@@ -11,17 +11,30 @@ implementation (the raw paper formula shrinks the model norm whenever any
 update is stale).
 
 The hot loop — a K-way weighted reduction over every parameter — is exactly
-the paper's serverless aggregation function. Three execution paths:
-  * ``weighted_aggregate``: jit'd XLA path (default, used by the controller);
-  * ``kernels.ops.staleness_agg``: Pallas TPU kernel (VMEM-tiled fused
-    multiply-accumulate; validated in interpret mode);
-  * sharded path: on a mesh, stacked updates [K, ...] are sharded over the
+the paper's serverless aggregation function. Three execution paths
+(DESIGN.md §2):
+
+  * **Pallas** (default): the K update pytrees are raveled and concatenated
+    into one ``[K, N]`` fp32 buffer (K padded to the fp32 sublane multiple,
+    N padded to the kernel block), then reduced by the fused
+    ``kernels/staleness_agg.py`` multiply-accumulate kernel — interpret mode
+    on CPU/GPU, compiled Mosaic on TPU. A one-time numerical-equivalence
+    self-check against the XLA path gates the dispatch; any mismatch or
+    kernel failure falls back to XLA for the rest of the process.
+  * **XLA** (``_weighted_sum_stacked``): jit'd per-leaf stacked reduction.
+    Fallback path, and forced via ``path="xla"`` or ``REPRO_AGG_PATH=xla``.
+  * **Sharded**: on a mesh, stacked updates [K, ...] are sharded over the
     ``pod``/``data`` axes and the reduce lowers to a weighted psum — this is
-    how the FaaS aggregation pattern maps onto TPU collectives (DESIGN.md §2).
+    how the FaaS aggregation pattern maps onto TPU collectives (DESIGN.md §4).
+
+Dispatch policy: ``path`` argument > ``REPRO_AGG_PATH`` env var > ``auto``
+(Pallas when the self-check passes, XLA otherwise). ``last_path()`` reports
+which path produced the most recent result (observability + tests).
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Optional, Sequence
 
 import jax
@@ -29,8 +42,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.staleness import STALENESS_FNS
+from repro.kernels import ops as kernel_ops
+from repro.kernels.staleness_agg import BLOCK_N
 
 Pytree = Any
+
+_PALLAS_OK: Optional[bool] = None   # equivalence self-check; False = disabled
+_LAST_PATH = "none"
+# In interpret mode (no TPU) the kernel is a correctness path, ~100x slower
+# than XLA at large N; ``auto`` only takes it below this parameter count.
+# Compiled TPU dispatch ignores the cap. Env-tunable for experiments.
+_INTERP_MAX_N = int(os.environ.get("REPRO_AGG_PALLAS_MAX_INTERP_N",
+                                   str(1 << 18)))
+
+
+def last_path() -> str:
+    """Which execution path ('pallas' | 'xla') produced the last aggregate."""
+    return _LAST_PATH
 
 
 def staleness_weights(rounds: Sequence[int], cardinalities: Sequence[int],
@@ -46,6 +74,7 @@ def staleness_weights(rounds: Sequence[int], cardinalities: Sequence[int],
     return (w / total).astype(np.float32)
 
 
+# --------------------------------------------------------------- XLA path
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _weighted_sum_stacked(stacked: Pytree, weights: jax.Array) -> Pytree:
     def one(x):
@@ -56,15 +85,75 @@ def _weighted_sum_stacked(stacked: Pytree, weights: jax.Array) -> Pytree:
     return jax.tree.map(one, stacked)
 
 
-def weighted_aggregate(updates: Sequence[Pytree], weights: np.ndarray,
-                       out_dtype=None) -> Pytree:
-    """updates: list of K pytrees -> weighted average pytree.
+# ------------------------------------------------------------ Pallas path
+# The ravel -> [K, N] buffer -> kernel -> unravel plumbing (including the
+# sublane/block padding) lives in kernels/ops.aggregate_pytree; this module
+# only owns the dispatch policy around it.
+def _pallas_validated() -> bool:
+    """One-time numerical-equivalence check of the kernel path vs. XLA.
 
-    Stacks on a leading K axis then runs one fused jit reduction (the
-    benchmarked aggregation path)."""
+    Runs a deterministic ragged pytree that exercises both pad paths (K not
+    a sublane multiple, N not a block multiple). On mismatch or any kernel
+    error the process permanently falls back to XLA."""
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        try:
+            rng = np.random.default_rng(0)
+            ups = [{"a": jnp.asarray(rng.normal(size=(BLOCK_N,)), jnp.float32),
+                    "b": jnp.asarray(rng.normal(size=(17,)), jnp.float32)}
+                   for _ in range(3)]
+            w = staleness_weights([2, 1, 0], [5, 3, 2], 2)
+            got = kernel_ops.aggregate_pytree(ups, w, restore_dtype=False)
+            stack = {k: np.stack([np.asarray(u[k], np.float64) for u in ups])
+                     for k in ("a", "b")}
+            w64 = np.asarray(w, np.float64)
+            _PALLAS_OK = all(
+                np.allclose(np.asarray(got[k]),
+                            np.einsum("k,kn->n", w64, stack[k]),
+                            rtol=1e-5, atol=1e-6)
+                for k in ("a", "b"))
+        except Exception:  # noqa: BLE001 — any kernel failure disables path
+            _PALLAS_OK = False
+    return _PALLAS_OK
+
+
+# --------------------------------------------------------------- dispatch
+def weighted_aggregate(updates: Sequence[Pytree], weights: np.ndarray,
+                       out_dtype=None, path: Optional[str] = None) -> Pytree:
+    """updates: list of K pytrees -> weighted average pytree (fp32 leaves
+    unless ``out_dtype`` is given).
+
+    ``path``: "auto" (default — Pallas kernel when its equivalence
+    self-check passes; off-TPU the interpreter is only taken up to
+    ``REPRO_AGG_PALLAS_MAX_INTERP_N`` params), "pallas" (force kernel;
+    raises on failure), or "xla". ``REPRO_AGG_PATH`` overrides the
+    default."""
+    global _LAST_PATH
     assert len(updates) == len(weights) and len(updates) > 0
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *updates)
-    out = _weighted_sum_stacked(stacked, jnp.asarray(weights))
+    path = path or os.environ.get("REPRO_AGG_PATH", "auto")
+    if path not in ("auto", "pallas", "xla"):
+        raise ValueError(f"unknown aggregation path {path!r}")
+
+    global _PALLAS_OK
+    n_params = sum(int(np.prod(l.shape)) if l.shape else 1
+                   for l in jax.tree.leaves(updates[0]))
+    auto_pallas = (_pallas_validated()
+                   and (kernel_ops.on_tpu() or n_params <= _INTERP_MAX_N))
+    out = None
+    if path == "pallas" or (path == "auto" and auto_pallas):
+        try:
+            out = kernel_ops.aggregate_pytree(updates, weights,
+                                              restore_dtype=False)
+            _LAST_PATH = "pallas"
+        except Exception:  # noqa: BLE001 — fall back unless forced
+            if path == "pallas":
+                raise
+            _PALLAS_OK = False  # runtime failure: disable for the process
+            out = None
+    if out is None:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *updates)
+        out = _weighted_sum_stacked(stacked, jnp.asarray(weights))
+        _LAST_PATH = "xla"
     if out_dtype is not None:
         out = jax.tree.map(lambda x: x.astype(out_dtype), out)
     return out

@@ -44,30 +44,48 @@ Pytree = Any
 
 @dataclass
 class FLConfig:
-    n_clients: int = 200
-    clients_per_round: int = 100
-    rounds: int = 50
-    target_accuracy: Optional[float] = None
-    local_epochs: int = 5
-    batch_size: int = 10
-    optimizer: str = "adam"
-    lr: float = 1e-3
-    strategy: str = "apodotiko"
-    concurrency_ratio: float = 0.3
-    adjustment_rate: float = 0.2
-    max_staleness: int = 5
-    round_timeout: float = 300.0
-    keep_warm: float = 600.0
-    cold_start_s: float = 8.0
+    """Experiment configuration. Each field maps to a paper quantity
+    (symbol / section noted inline) or a simulator knob.
+
+    Paper defaults (IV-A): 200 clients, 100 per round, E=5 local epochs,
+    batch 10 (MNIST), Adam 1e-3, CR=0.3, rho=0.2, staleness cap 5."""
+
+    # -- population & schedule -------------------------------------------------
+    n_clients: int = 200           # total registered clients (paper IV-A3: 200)
+    clients_per_round: int = 100   # |clients| invoked per round ("100/round")
+    rounds: int = 50               # max global rounds T
+    target_accuracy: Optional[float] = None  # early stop (Alg. 1 line 3)
+    # -- Client_Update (Alg. 2) ------------------------------------------------
+    local_epochs: int = 5          # E, local epochs per invocation
+    batch_size: int = 10           # B, local minibatch size
+    optimizer: str = "adam"        # client-side optimizer (paper: Adam/SGD)
+    lr: float = 1e-3               # client learning rate eta
+    # -- strategy (Alg. 1 / Alg. 3) --------------------------------------------
+    strategy: str = "apodotiko"    # repro.core.strategies.STRATEGIES key
+    concurrency_ratio: float = 0.3  # CR: aggregate at ceil(CR x clientsPerRound)
+    #                                 results (Alg. 1 line 9; Fig. 6 sweeps it)
+    adjustment_rate: float = 0.2   # rho: booster step for the CEF score
+    #                                 (Alg. 3; score = booster x CEF, §III-A)
+    max_staleness: int = 5         # staleness cap: results from at most this
+    #                                 many previous rounds aggregate (§III-B)
+    round_timeout: float = 300.0   # sync-strategy round deadline, sim-seconds
+    # -- FaaS platform simulation (§IV-A) --------------------------------------
+    keep_warm: float = 600.0       # provider keep-warm window before
+    #                                 scale-to-zero, sim-seconds
+    cold_start_s: float = 8.0      # container cold-start penalty, sim-seconds
     base_step_time: float = 0.05   # 1vCPU-seconds per optimizer step
-    prox_mu: float = 0.01
-    staleness_fn: str = "eq2"
-    eval_every: int = 1
-    seed: int = 0
-    failure_rate: float = 0.0
-    max_sim_time: float = 1e8
-    checkpoint_dir: Optional[str] = None
-    checkpoint_every: int = 0
+    #                                 (hardware profiles scale this, Fig. 1/3)
+    failure_rate: float = 0.0      # P(invocation crash) — fault tolerance
+    # -- aggregation (§III-B) --------------------------------------------------
+    prox_mu: float = 0.01          # mu, FedProx proximal coefficient
+    staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2,
+    #                                 Apodotiko) | "eq1" = t_i/T (FedLesScan)
+    # -- harness ---------------------------------------------------------------
+    eval_every: int = 1            # evaluate global model every k rounds
+    seed: int = 0                  # RNG seed: selection, init, platform noise
+    max_sim_time: float = 1e8      # simulated wall-clock budget, seconds
+    checkpoint_dir: Optional[str] = None  # database checkpoint location
+    checkpoint_every: int = 0      # checkpoint every k rounds (0 = off)
 
 
 @dataclass

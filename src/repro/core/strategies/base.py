@@ -21,14 +21,22 @@ from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko
 
 @dataclass
 class StrategyConfig:
-    clients_per_round: int = 100
-    concurrency_ratio: float = 0.3     # Apodotiko CR / FedBuff buffer ratio
-    adjustment_rate: float = 0.2       # rho
-    max_staleness: int = 5             # paper: at most five previous rounds
-    round_timeout: float = 300.0       # sync strategies
-    prox_mu: float = 0.01
-    staleness_fn: str = "eq2"
-    seed: int = 0
+    """Strategy-facing slice of ``FLConfig`` (paper symbols noted inline)."""
+
+    clients_per_round: int = 100   # clients invoked per round (paper: 100)
+    concurrency_ratio: float = 0.3  # CR (Alg. 1 line 9): async strategies
+    #                                  aggregate once ceil(CR x clientsPerRound)
+    #                                  results land; doubles as FedBuff's
+    #                                  buffer-size ratio. Fig. 6 sweeps it.
+    adjustment_rate: float = 0.2   # rho (Alg. 3): booster adjustment step for
+    #                                  the CEF-score probabilistic selection
+    max_staleness: int = 5         # staleness cap (§III-B): accept results
+    #                                  from at most this many previous rounds
+    round_timeout: float = 300.0   # sync-strategy round deadline (sim-seconds)
+    prox_mu: float = 0.01          # mu: FedProx proximal term coefficient
+    staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2) |
+    #                                  "eq1" = t_i/T (Eq. 1, FedLesScan)
+    seed: int = 0                  # selection RNG seed
 
 
 class Strategy:

@@ -41,18 +41,31 @@ def _ravel(tree: Pytree):
     return flat, leaves
 
 
-def _unravel(flat: jax.Array, like_leaves, treedef) -> Pytree:
+def _unravel(flat: jax.Array, like_leaves, treedef,
+             restore_dtype: bool = True) -> Pytree:
     out, off = [], 0
     for l in like_leaves:
         n = int(np.prod(l.shape)) if l.shape else 1
-        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        x = flat[off:off + n].reshape(l.shape)
+        out.append(x.astype(l.dtype) if restore_dtype else x)
         off += n
     return jax.tree.unflatten(treedef, out)
 
 
+SUBLANE = 8  # fp32 TPU sublane; aggregate_pytree pads K to a multiple
+
+
 def aggregate_pytree(updates: Sequence[Pytree], weights,
-                     interpret: Optional[bool] = None) -> Pytree:
-    """Kernel-path equivalent of core.aggregation.weighted_aggregate."""
+                     interpret: Optional[bool] = None, *,
+                     restore_dtype: bool = True) -> Pytree:
+    """Kernel-path aggregation over K parameter pytrees: ravel ->
+    [K, N] buffer -> staleness_agg -> unravel. The default-dispatch
+    target of ``core.aggregation.weighted_aggregate``.
+
+    K pads to the fp32 sublane multiple with zero-weight rows (exact
+    no-ops) so round-to-round K jitter reuses compiled shapes; N pads to
+    the kernel block. ``restore_dtype=False`` keeps fp32 leaves
+    (``weighted_aggregate``'s contract)."""
     interpret = default_interpret() if interpret is None else interpret
     treedef = jax.tree.structure(updates[0])
     flats = []
@@ -62,12 +75,15 @@ def aggregate_pytree(updates: Sequence[Pytree], weights,
         leaves0 = leaves0 or leaves
         flats.append(f)
     stacked = jnp.stack(flats, 0)
-    N = stacked.shape[1]
-    pad = (-N) % 1024
-    if pad:
-        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
-    agg = staleness_agg(stacked, jnp.asarray(weights), interpret=interpret)
-    return _unravel(agg[:N], leaves0, treedef)
+    w = jnp.asarray(weights, jnp.float32)
+    K, N = stacked.shape
+    pad_k = (-K) % SUBLANE
+    pad_n = (-N) % 1024
+    if pad_k or pad_n:
+        stacked = jnp.pad(stacked, ((0, pad_k), (0, pad_n)))
+        w = jnp.pad(w, (0, pad_k))
+    agg = staleness_agg(stacked, w, interpret=interpret)
+    return _unravel(agg[:N], leaves0, treedef, restore_dtype=restore_dtype)
 
 
 def compress_update(update: Pytree, error_feedback: Optional[Pytree] = None,

@@ -1,0 +1,30 @@
+"""Declarative strategy-sweep engine (paper Tables IV-VI; DESIGN.md §6).
+
+Expand a strategy x seed x config grid, execute the cells concurrently on
+the serverless simulator with shared data/model/fleet setup, and derive the
+paper's comparison columns (time-to-accuracy, speedup vs. FedAvg, cold
+starts, cost)::
+
+    from repro.sweep import get_preset, run_sweep
+    table = run_sweep(get_preset("paper_mnist"))
+    print(table.to_markdown())
+"""
+from repro.sweep.engine import run_sweep
+from repro.sweep.grid import (
+    BENCH_SCALE,
+    PAPER_SCALE,
+    SMOKE_SCALE,
+    RunSpec,
+    SweepScale,
+    SweepSpec,
+    expand_grid,
+)
+from repro.sweep.presets import ALL_STRATEGIES, PRESETS, get_preset
+from repro.sweep.results import SCHEMA, ResultTable
+from repro.sweep.runner import LocalRunner
+
+__all__ = [
+    "ALL_STRATEGIES", "BENCH_SCALE", "LocalRunner", "PAPER_SCALE", "PRESETS",
+    "ResultTable", "RunSpec", "SCHEMA", "SMOKE_SCALE", "SweepScale",
+    "SweepSpec", "expand_grid", "get_preset", "run_sweep",
+]

@@ -1,0 +1,106 @@
+"""Declarative sweep grids: strategy x seed x dataset x scenario x CR.
+
+A ``SweepSpec`` names the axes of a comparison experiment (the paper's
+tables are strategy x dataset grids on a fixed hardware mix); ``expand_grid``
+enumerates it into an ordered, deterministic list of ``RunSpec`` cells. Every
+cell shares one ``SweepScale`` — the knobs that trade fidelity for wall-clock
+(client counts, rounds, data size; DESIGN.md §7) — so results within a sweep
+are directly comparable.
+
+Determinism contract: ``expand_grid`` is a pure function of the spec — same
+spec, same list, same order — and each cell's ``seed`` flows into
+``FLConfig.seed`` (strategy selection RNG, platform noise, model init) while
+the *data* partition seed is shared sweep-wide, so strategies compete on the
+identical federated dataset.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from itertools import product
+from typing import Any, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """One cell of a sweep grid (one Controller.run())."""
+    dataset: str
+    strategy: str
+    scenario: str = "heterogeneous"
+    seed: int = 0
+    concurrency_ratio: float = 0.3       # CR (paper Alg. 1); async only
+    staleness_fn: str = "eq2"            # Eq. 2 (Apodotiko) | Eq. 1
+    overrides: Tuple[Tuple[str, Any], ...] = ()  # extra FLConfig fields
+
+    @property
+    def key(self) -> str:
+        ov = ";".join(f"{k}={v}" for k, v in self.overrides)
+        return (f"{self.dataset}/{self.scenario}/{self.strategy}"
+                f"/cr={self.concurrency_ratio:g}/{self.staleness_fn}"
+                f"/seed={self.seed}" + (f"/{ov}" if ov else ""))
+
+    @property
+    def group(self) -> tuple:
+        """Comparison group: strategies within one group share a baseline
+        (FedAvg) for speedup / cold-start / cost ratios."""
+        return (self.dataset, self.scenario, self.seed, self.overrides)
+
+
+@dataclass(frozen=True)
+class SweepScale:
+    """Sweep-wide scale knobs, shared by every cell (DESIGN.md §7)."""
+    n_clients: int = 16
+    clients_per_round: int = 8
+    rounds: int = 48
+    data_scale: float = 0.12        # fraction of the proxy dataset per sweep
+    local_epochs: int = 3
+    batch_size: int = 5
+    sim_budget: Optional[float] = None  # None -> per-dataset default
+    eval_every: int = 2
+    data_seed: int = 0              # shared across cells: same partition
+
+
+# Bench scale keeps the paper's *structure* (client mix, non-IID scheme, CR)
+# at 1-core-container cost; paper scale is the real Table IV-VI grid (hours).
+BENCH_SCALE = SweepScale()
+PAPER_SCALE = SweepScale(n_clients=200, clients_per_round=100, rounds=500,
+                         data_scale=0.5, local_epochs=5, batch_size=10)
+SMOKE_SCALE = SweepScale(n_clients=8, clients_per_round=4, rounds=6,
+                         data_scale=0.06, local_epochs=1, sim_budget=400.0)
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A full comparison experiment: the cross product of its axes."""
+    name: str
+    datasets: Sequence[str] = ("mnist",)
+    strategies: Sequence[str] = ("fedavg", "fedprox", "scaffold",
+                                 "fedlesscan", "fedbuff", "apodotiko")
+    seeds: Sequence[int] = (0,)
+    scenarios: Sequence[str] = ("heterogeneous",)
+    concurrency_ratios: Sequence[float] = (0.3,)
+    staleness_fns: Sequence[str] = ("eq2",)
+    scale: SweepScale = field(default=BENCH_SCALE)
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def n_runs(self) -> int:
+        return (len(self.datasets) * len(self.strategies) * len(self.seeds)
+                * len(self.scenarios) * len(self.concurrency_ratios)
+                * len(self.staleness_fns))
+
+
+def expand_grid(spec: SweepSpec) -> list[RunSpec]:
+    """Enumerate the grid in deterministic (dataset-major) order."""
+    runs = [
+        RunSpec(dataset=ds, strategy=strat, scenario=sc, seed=seed,
+                concurrency_ratio=cr, staleness_fn=fn,
+                overrides=tuple(spec.overrides))
+        for ds, sc, seed, cr, fn, strat in product(
+            spec.datasets, spec.scenarios, spec.seeds,
+            spec.concurrency_ratios, spec.staleness_fns, spec.strategies)
+    ]
+    keys = [r.key for r in runs]
+    if len(set(keys)) != len(keys):
+        dupes = sorted({k for k in keys if keys.count(k) > 1})
+        raise ValueError(f"sweep {spec.name!r} has duplicate cells: {dupes}")
+    return runs

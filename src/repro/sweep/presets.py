@@ -1,0 +1,61 @@
+"""Named sweeps reproducing the paper's comparison tables.
+
+Each preset is a ``SweepSpec`` at bench scale (1-core container,
+minutes); set ``SWEEP_FULL=1`` to lift any preset to the paper-scale grid
+(200 clients, 100/round — hours). Entry points:
+
+    python benchmarks/run.py --sweep paper_mnist
+    PYTHONPATH=src python examples/sweep_paper_tables.py [preset]
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import replace
+
+from repro.sweep.grid import PAPER_SCALE, SMOKE_SCALE, SweepSpec
+
+ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
+                  "apodotiko")
+
+PRESETS: dict[str, SweepSpec] = {
+    # Tables IV-VI, one dataset at a time (all six strategies, paper's
+    # heterogeneous 65/25/10 hardware mix)
+    "paper_mnist": SweepSpec(name="paper_mnist", datasets=("mnist",)),
+    "paper_femnist": SweepSpec(name="paper_femnist", datasets=("femnist",)),
+    "paper_shakespeare": SweepSpec(name="paper_shakespeare",
+                                   datasets=("shakespeare",)),
+    "paper_speech": SweepSpec(name="paper_speech", datasets=("speech",)),
+    # the full Table IV-VI grid
+    "paper_tables": SweepSpec(name="paper_tables",
+                              datasets=("mnist", "femnist", "shakespeare",
+                                        "speech")),
+    # Fig 1/3 hardware scenarios: does the speedup survive homogeneity?
+    "hardware_scenarios": SweepSpec(
+        name="hardware_scenarios", datasets=("mnist",),
+        strategies=("fedavg", "fedlesscan", "apodotiko"),
+        scenarios=("heterogeneous", "two-tier", "homogeneous")),
+    # Fig 6: concurrency-ratio sensitivity of the async strategies
+    "cr_sweep": SweepSpec(
+        name="cr_sweep", datasets=("mnist",),
+        strategies=("fedavg", "fedbuff", "apodotiko"),
+        concurrency_ratios=(0.3, 0.5, 0.7)),
+    # Eq. 1 vs Eq. 2 staleness damping ablation (paper §III-B)
+    "staleness_ablation": SweepSpec(
+        name="staleness_ablation", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko"), staleness_fns=("eq1", "eq2")),
+    # CI-sized end-to-end check (two strategies, seconds)
+    "smoke": SweepSpec(name="smoke", datasets=("mnist",),
+                       strategies=("fedavg", "apodotiko"),
+                       scale=SMOKE_SCALE),
+}
+
+
+def get_preset(name: str) -> SweepSpec:
+    try:
+        spec = PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown sweep preset {name!r}; available: "
+                       f"{', '.join(sorted(PRESETS))}") from None
+    if os.environ.get("SWEEP_FULL"):
+        spec = replace(spec, scale=PAPER_SCALE)
+    return spec

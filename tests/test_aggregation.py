@@ -81,3 +81,72 @@ def test_kernel_path_matches_xla_path():
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y),
                                    rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- Pallas default dispatch
+def _ragged_trees(k, seed=0):
+    """Pytrees with ragged leaf shapes (incl. a scalar) whose total size is
+    NOT a multiple of the kernel block — exercises both pad paths."""
+    rng = np.random.default_rng(seed)
+    return [{"conv": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32),
+             "bias": jnp.asarray(rng.normal(size=(7,)), jnp.float32),
+             "scale": jnp.asarray(rng.normal(), jnp.float32),
+             "head": {"w": jnp.asarray(rng.normal(size=(2, 3, 4)),
+                                       jnp.float32)}}
+            for _ in range(k)]
+
+
+def test_default_path_is_pallas():
+    from repro.core import aggregation
+    ups = _ragged_trees(3, seed=1)
+    w = np.array([0.5, 0.3, 0.2], np.float32)
+    weighted_aggregate(ups, w)
+    assert aggregation.last_path() == "pallas"
+
+
+@pytest.mark.parametrize("k", [1, 3, 5, 9])  # crosses the sublane multiple
+def test_pallas_matches_xla_on_ragged_pytree(k):
+    rng = np.random.default_rng(k)
+    ups = _ragged_trees(k, seed=k)
+    w = rng.dirichlet(np.ones(k)).astype(np.float32)
+    a = weighted_aggregate(ups, w, path="pallas")
+    b = weighted_aggregate(ups, w, path="xla")
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.shape == y.shape
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_respects_out_dtype():
+    ups = _ragged_trees(2, seed=3)
+    w = np.array([0.7, 0.3], np.float32)
+    out = weighted_aggregate(ups, w, out_dtype=jnp.bfloat16, path="pallas")
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(out))
+
+
+def test_unknown_path_rejected():
+    ups = _ragged_trees(2)
+    with pytest.raises(ValueError, match="unknown aggregation path"):
+        weighted_aggregate(ups, np.array([0.5, 0.5], np.float32),
+                           path="cuda")
+
+
+def test_auto_size_guard_off_tpu(monkeypatch):
+    """Off-TPU, auto dispatch falls back to XLA above the interpret-mode
+    size cap (the kernel stays available via path="pallas")."""
+    from repro.core import aggregation
+    monkeypatch.setattr(aggregation, "_INTERP_MAX_N", 10)
+    ups = _ragged_trees(2, seed=9)  # 44 params > 10
+    w = np.array([0.5, 0.5], np.float32)
+    weighted_aggregate(ups, w)
+    assert aggregation.last_path() == "xla"
+    weighted_aggregate(ups, w, path="pallas")
+    assert aggregation.last_path() == "pallas"
+
+
+def test_env_var_forces_xla(monkeypatch):
+    from repro.core import aggregation
+    monkeypatch.setenv("REPRO_AGG_PATH", "xla")
+    ups = _ragged_trees(2, seed=5)
+    weighted_aggregate(ups, np.array([0.4, 0.6], np.float32))
+    assert aggregation.last_path() == "xla"

@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on the system's core invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.aggregation import staleness_weights, weighted_aggregate
 from repro.core.scoring import calculate_score

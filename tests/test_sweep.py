@@ -1,0 +1,208 @@
+"""Sweep engine: grid expansion, deterministic seeding, result-table
+schema/derivations, concurrent-vs-serial equivalence, and a tiny real
+end-to-end sweep."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.sweep import (
+    PRESETS,
+    SCHEMA,
+    LocalRunner,
+    ResultTable,
+    RunSpec,
+    SweepScale,
+    SweepSpec,
+    expand_grid,
+    get_preset,
+    run_sweep,
+)
+
+
+def small_spec(**kw):
+    base = dict(name="t", datasets=("mnist", "speech"),
+                strategies=("fedavg", "fedbuff", "apodotiko"),
+                seeds=(0, 1), scale=SweepScale(rounds=4))
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+class FakeRunner:
+    """Deterministic canned metrics: apodotiko converges 2x faster than
+    fedavg, fedbuff 1.25x; cold starts and cost scale the same way."""
+
+    SPEED = {"fedavg": 1.0, "fedbuff": 1.25, "apodotiko": 2.0}
+
+    def __init__(self, fail_on=()):
+        self.calls = []
+        self.fail_on = set(fail_on)
+
+    def __call__(self, run: RunSpec) -> dict:
+        self.calls.append(run.key)
+        if run.strategy in self.fail_on:
+            raise RuntimeError("boom")
+        v = self.SPEED[run.strategy]
+        hist = [(t * 100.0 / v, r, 0.1 * (t + 1)) for t, r in
+                zip(range(8), range(8))]
+        return {"strategy": run.strategy, "rounds": 8,
+                "final_accuracy": 0.8, "history": hist,
+                "total_time": 800.0 / v, "total_cost_usd": 4.0 / v,
+                "cold_start_ratio": 0.4 / v, "n_invocations": 100}
+
+
+# ------------------------------------------------------------------- grid
+def test_expand_grid_full_product_unique_keys():
+    spec = small_spec()
+    runs = expand_grid(spec)
+    assert len(runs) == spec.n_runs == 2 * 3 * 2
+    keys = [r.key for r in runs]
+    assert len(set(keys)) == len(keys)
+
+
+def test_expand_grid_deterministic():
+    a = expand_grid(small_spec())
+    b = expand_grid(small_spec())
+    assert a == b  # same cells, same order
+
+
+def test_seeds_flow_into_cells_and_config():
+    runs = expand_grid(small_spec(seeds=(7, 13)))
+    assert sorted({r.seed for r in runs}) == [7, 13]
+    runner = LocalRunner(SweepScale(n_clients=6, clients_per_round=3))
+    run = next(r for r in runs if r.seed == 13 and r.strategy == "apodotiko")
+    cfg = runner.config(run)
+    assert cfg.seed == 13 and cfg.strategy == "apodotiko"
+    assert cfg.n_clients == 6 and cfg.clients_per_round == 3
+    # data partition seed is sweep-wide, not per-cell
+    assert runner.scale.data_seed == 0
+
+
+def test_overrides_reach_flconfig():
+    spec = small_spec(overrides=(("failure_rate", 0.1), ("local_epochs", 2)))
+    run = expand_grid(spec)[0]
+    cfg = LocalRunner(spec.scale).config(run)
+    assert cfg.failure_rate == 0.1 and cfg.local_epochs == 2
+
+
+# ------------------------------------------------------------------ table
+def test_result_table_schema_and_speedups():
+    spec = small_spec(seeds=(0,))
+    table = run_sweep(spec, runner=FakeRunner())
+    assert len(table.rows) == spec.n_runs
+    for row in table.rows:
+        assert set(row) == set(SCHEMA)
+        assert row["error"] is None
+    for row in table.rows:
+        if row["strategy"] == "fedavg":
+            assert row["speedup_vs_fedavg"] == pytest.approx(1.0)
+            assert row["cost_vs_fedavg"] == pytest.approx(1.0)
+        if row["strategy"] == "apodotiko":
+            assert row["speedup_vs_fedavg"] == pytest.approx(2.0, rel=0.01)
+            assert row["cold_start_reduction_vs_fedavg"] == pytest.approx(
+                2.0, rel=0.01)
+    assert table.mean_speedup("fedbuff") == pytest.approx(1.25, rel=0.01)
+
+
+def test_concurrent_matches_serial():
+    spec = small_spec()
+    serial = run_sweep(spec, runner=FakeRunner(), max_workers=1)
+    threaded = run_sweep(spec, runner=FakeRunner(), max_workers=4)
+    assert serial.rows == threaded.rows
+
+
+def test_empty_history_run_does_not_poison_target():
+    """A run that never completed an eval (sim budget blown in round 1)
+    must not drag the group's common-accuracy target to 0."""
+
+    class EmptyHistoryRunner(FakeRunner):
+        def __call__(self, run):
+            m = super().__call__(run)
+            if run.strategy == "fedbuff":
+                m["history"] = []
+                m["rounds"] = 0
+            return m
+
+    table = run_sweep(small_spec(seeds=(0,)), runner=EmptyHistoryRunner())
+    by_strat = {r["strategy"]: r for r in table.rows
+                if r["dataset"] == "mnist"}
+    assert by_strat["fedavg"]["target_acc"] > 0
+    assert by_strat["fedbuff"]["time_to_target_s"] is None
+    assert by_strat["fedbuff"]["speedup_vs_fedavg"] is None
+    # the healthy strategies keep a meaningful comparison
+    assert by_strat["apodotiko"]["speedup_vs_fedavg"] == pytest.approx(
+        2.0, rel=0.01)
+
+
+def test_failed_cell_keeps_row():
+    spec = small_spec(seeds=(0,))
+    table = run_sweep(spec, runner=FakeRunner(fail_on={"fedbuff"}))
+    bad = [r for r in table.rows if r["strategy"] == "fedbuff"]
+    good = [r for r in table.rows if r["strategy"] != "fedbuff"]
+    assert all("boom" in r["error"] for r in bad)
+    assert all(r["time_to_target_s"] is None for r in bad)
+    assert all(r["error"] is None for r in good)
+
+
+def test_renderers():
+    table = run_sweep(small_spec(seeds=(0,)), runner=FakeRunner())
+    md = table.to_markdown(columns=("dataset", "strategy",
+                                    "speedup_vs_fedavg"))
+    assert "apodotiko" in md and md.count("\n") == len(table.rows) + 2
+    csv = table.to_csv()
+    lines = csv.strip().split("\n")
+    assert lines[0].split(",") == list(SCHEMA)
+    assert len(lines) == len(table.rows) + 1
+    sub = table.select(dataset="mnist", strategy="apodotiko")
+    assert len(sub.rows) == 1
+
+
+def test_presets_registry():
+    assert "paper_mnist" in PRESETS and "paper_tables" in PRESETS
+    spec = get_preset("paper_mnist")
+    assert len(spec.strategies) == 6
+    with pytest.raises(KeyError, match="unknown sweep preset"):
+        get_preset("nope")
+
+
+def test_preset_specs_are_immutable():
+    spec = get_preset("smoke")
+    with pytest.raises(Exception):
+        spec.name = "hacked"
+    assert copy.deepcopy(spec) == spec
+
+
+# ------------------------------------------------------------ end-to-end
+def test_tiny_real_sweep_end_to_end():
+    """Two strategies, real training on the simulator, real table."""
+    spec = SweepSpec(name="e2e", datasets=("mnist",),
+                     strategies=("fedavg", "apodotiko"),
+                     scale=SweepScale(n_clients=6, clients_per_round=3,
+                                      rounds=3, data_scale=0.05,
+                                      local_epochs=1, sim_budget=300.0,
+                                      eval_every=1))
+    table = run_sweep(spec, max_workers=2)
+    assert [r["strategy"] for r in table.rows] == ["fedavg", "apodotiko"]
+    for row in table.rows:
+        assert row["error"] is None
+        assert row["rounds"] >= 1
+        assert row["sim_time_s"] > 0
+        assert 0.0 <= row["final_acc"] <= 1.0
+        assert row["cost_usd"] > 0
+        assert row["n_invocations"] >= 3
+    assert table.rows[0]["speedup_vs_fedavg"] == pytest.approx(1.0)
+
+
+def test_local_runner_shares_setup():
+    scale = SweepScale(n_clients=6, clients_per_round=3, rounds=2,
+                       data_scale=0.05, local_epochs=1)
+    runner = LocalRunner(scale)
+    runs = expand_grid(SweepSpec(name="s", datasets=("mnist",),
+                                 strategies=("fedavg", "apodotiko"),
+                                 scale=scale))
+    runner.warm(runs)
+    assert runner.data("mnist") is runner.data("mnist")
+    assert runner.model("mnist") is runner.model("mnist")
+    f1, f2 = runner.fleet("heterogeneous"), runner.fleet("heterogeneous")
+    assert f1 is f2
+    assert np.sum([p.is_gpu for p in f1]) >= 0  # built from paper mix
