@@ -1,0 +1,141 @@
+"""Round hot-path benchmark: blob transport vs. the device-resident update
+plane (DESIGN.md §2, "update plane").
+
+Measures the aggregation+transfer component of one controller round — the
+path between cohort training finishing and the new global model existing —
+at K ∈ {10, 100} clients x N ∈ {1e4, 1e6} parameters:
+
+  * **blob** (legacy, ``REPRO_UPDATE_PLANE=blob``): copy the [K, ...] cohort
+    output to host, slice K per-client pytrees, store them as blobs, then
+    re-upload every blob and run ``weighted_aggregate`` (ravel + stack +
+    kernel + unravel).
+  * **plane** (default): flatten to [K, N] rows inside jit, scatter into the
+    persistent ``UpdateStore`` buffer, then ``weighted_aggregate_rows``
+    (index gather -> kernel -> one unravel). Zero host round-trips.
+
+Emits ``BENCH_round.json`` next to the repo root and ``name,us,derived``
+CSV lines like every other bench. ``--smoke`` runs only the smallest cell
+with few iterations (the CI invocation); ``--json PATH`` overrides the
+output location.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows
+from repro.core.update_store import UpdateStore
+from repro.kernels.ops import RavelSpec
+
+ITEMSIZE = 4  # fp32
+
+
+def _cohort_output(K: int, N: int, seed: int = 0):
+    """Stand-in for CohortTrainer's stacked device output: [K, ...] leaves.
+    Two ragged leaves so the ravel/unravel work is exercised honestly."""
+    rng = np.random.default_rng(seed)
+    n_b = min(257, N // 2)
+    tree = {"w": jnp.asarray(rng.normal(size=(K, N - n_b)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(K, n_b)), jnp.float32)}
+    jax.block_until_ready(tree)
+    return tree
+
+
+def _blob_round(stacked, weights, template) -> tuple[object, int]:
+    """The legacy path _invoke_round + _aggregate perform per round."""
+    host = jax.tree.map(np.asarray, stacked)                 # device -> host
+    down = sum(l.nbytes for l in jax.tree.leaves(host))
+    K = weights.shape[0]
+    blobs = [jax.tree.map(lambda x: x[k], host) for k in range(K)]
+    ups = [jax.tree.map(jnp.asarray, b) for b in blobs]      # host -> device
+    up = sum(l.nbytes for u in ups for l in jax.tree.leaves(u))
+    out = weighted_aggregate(ups, weights, out_dtype=jnp.float32)
+    jax.block_until_ready(out)
+    return out, down + up
+
+
+def _plane_round(stacked, weights, spec, store) -> tuple[object, int]:
+    """The update-plane path: rows stay on device end-to-end. The ravel +
+    scatter into the donated buffer happens in one fused jit (the same
+    write the controller's cohort fn performs in-program)."""
+    ids = store.put_stacked(stacked)
+    out = weighted_aggregate_rows(store.buffer, ids, weights, spec,
+                                  out_dtype=jnp.float32)
+    jax.block_until_ready(out)
+    store.free(ids)
+    return out, 0
+
+
+def bench_cell(K: int, N: int, iters: int) -> dict:
+    stacked = _cohort_output(K, N)
+    template = jax.tree.map(lambda x: x[0], stacked)
+    spec = RavelSpec(template)
+    weights = (np.ones(K) / K).astype(np.float32)
+    store = UpdateStore(spec.n_params, capacity=K)
+
+    def run(fn, *args):
+        fn(*args)  # warmup/compile
+        times = []
+        byts = 0
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            _, byts = fn(*args)
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times)), byts
+
+    blob_s, blob_bytes = run(_blob_round, stacked, weights, template)
+    plane_s, plane_bytes = run(_plane_round, stacked, weights, spec, store)
+
+    # correctness guard: both transports must agree on the aggregate
+    a, _ = _blob_round(stacked, weights, template)
+    b, _ = _plane_round(stacked, weights, spec, store)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+
+    return {"K": K, "N": N, "blob_s": blob_s, "plane_s": plane_s,
+            "speedup": blob_s / plane_s if plane_s > 0 else float("inf"),
+            "blob_host_bytes": int(blob_bytes),
+            "plane_host_bytes": int(plane_bytes)}
+
+
+def run(smoke: bool = False, json_path: str = "") -> list[dict]:
+    cells = ([(10, 10_000)] if smoke
+             else [(10, 10_000), (100, 10_000),
+                   (10, 1_000_000), (100, 1_000_000)])
+    iters = 3 if smoke else 5
+    results = []
+    for K, N in cells:
+        cell = bench_cell(K, N, iters)
+        results.append(cell)
+        print(f"round/K{K}_N{N}/blob,{cell['blob_s'] * 1e6:.0f},"
+              f"bytes={cell['blob_host_bytes']}")
+        print(f"round/K{K}_N{N}/plane,{cell['plane_s'] * 1e6:.0f},"
+              f"bytes={cell['plane_host_bytes']} "
+              f"speedup={cell['speedup']:.2f}x")
+    out = {"bench": "round_update_plane", "smoke": smoke,
+           "backend": jax.default_backend(), "cells": results}
+    path = json_path or os.path.join(_ROOT, "BENCH_round.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    jp = ""
+    if "--json" in sys.argv:
+        jp = sys.argv[sys.argv.index("--json") + 1]
+    run(smoke=smoke, json_path=jp)

@@ -1,1 +1,7 @@
-from repro.checkpoint.manager import CheckpointManager, restore_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    restore_pytree,
+    restore_update_store,
+    save_pytree,
+    save_update_store,
+)

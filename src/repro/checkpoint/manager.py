@@ -108,6 +108,30 @@ def restore_pytree(directory: str) -> Pytree:
     return _rebuild(meta["treedef"], leaves_by_path)
 
 
+# ------------------------------------------------- update-plane checkpoints
+def save_update_store(store, row_ids, directory: str) -> None:
+    """Serialize the live (un-aggregated) rows of a device-resident
+    ``UpdateStore`` so an async run can resume with its in-flight updates
+    intact. Only the referenced rows are written — one host transfer per
+    checkpoint, not per round — together with their ids so record handles
+    (``ResultRecord.update_row``) stay valid after rehydration."""
+    ids = np.asarray(row_ids, np.int64)
+    rows = (np.asarray(store.gather(ids)) if ids.size
+            else np.zeros((0, store.row_width), np.float32))
+    save_pytree({"ids": ids, "rows": rows,
+                 "n_params": np.int64(store.n_params)}, directory)
+
+
+def restore_update_store(directory: str) -> tuple[np.ndarray, np.ndarray, int]:
+    """Returns (row_ids, rows [L, N], n_params) saved by
+    ``save_update_store``; the caller writes them back into a fresh store at
+    the original ids (``UpdateStore.write_at``) for a bit-exact resume."""
+    tree = restore_pytree(directory)
+    return (np.asarray(tree["ids"], np.int64),
+            np.asarray(tree["rows"], np.float32),
+            int(tree["n_params"]))
+
+
 class CheckpointManager:
     """step-indexed checkpoints with retention + atomic latest resolution."""
 

@@ -2,5 +2,6 @@ from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko  # noqa: F401
 from repro.core.scoring import calculate_score  # noqa: F401
 from repro.core.selection import select_clients  # noqa: F401
 from repro.core.database import Database, ClientRecord, ResultRecord  # noqa: F401
-from repro.core.aggregation import weighted_aggregate  # noqa: F401
+from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows  # noqa: F401
+from repro.core.update_store import UpdateStore  # noqa: F401
 from repro.core.controller import Controller, FLConfig  # noqa: F401

@@ -30,6 +30,11 @@ the paper's serverless aggregation function. Three execution paths
 Dispatch policy: ``path`` argument > ``REPRO_AGG_PATH`` env var > ``auto``
 (Pallas when the self-check passes, XLA otherwise). ``last_path()`` reports
 which path produced the most recent result (observability + tests).
+
+``weighted_aggregate`` consumes a *list of pytrees* (the legacy blob path).
+``weighted_aggregate_rows`` is the device-resident update-plane fast path:
+it reads K rows straight out of an ``UpdateStore`` buffer by index and
+skips the ravel/stack work entirely (DESIGN.md §2, "update plane").
 """
 from __future__ import annotations
 
@@ -154,6 +159,65 @@ def weighted_aggregate(updates: Sequence[Pytree], weights: np.ndarray,
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *updates)
         out = _weighted_sum_stacked(stacked, jnp.asarray(weights))
         _LAST_PATH = "xla"
+    if out_dtype is not None:
+        out = jax.tree.map(lambda x: x.astype(out_dtype), out)
+    return out
+
+
+def weighted_aggregate_rows(buffer, row_idx, weights,
+                            spec: "kernel_ops.RavelSpec", out_dtype=None,
+                            path: Optional[str] = None) -> Pytree:
+    """Row-index fast path over the device-resident update plane.
+
+    ``buffer`` is an ``UpdateStore``'s persistent [capacity, N] fp32 device
+    buffer; ``row_idx`` selects the K pending updates; ``spec`` is the
+    ``RavelSpec`` of the global model. One device gather feeds
+    ``kernels/staleness_agg`` (or the XLA einsum fallback) directly — no
+    ravel, no stack, no per-leaf work — and the flat result unravels exactly
+    once to produce the new global pytree. Dispatch policy (``path`` arg,
+    ``REPRO_AGG_PATH``, self-check, interpret-mode size cap) is identical to
+    ``weighted_aggregate``."""
+    global _LAST_PATH
+    assert len(row_idx) == len(weights) and len(row_idx) > 0
+    path = path or os.environ.get("REPRO_AGG_PATH", "auto")
+    if path not in ("auto", "pallas", "xla"):
+        raise ValueError(f"unknown aggregation path {path!r}")
+
+    global _PALLAS_OK
+    auto_pallas = (_pallas_validated()
+                   and (kernel_ops.on_tpu()
+                        or spec.n_params <= _INTERP_MAX_N))
+    # The full-buffer sweep reads every row; once the reference set is a
+    # small fraction of a grown buffer (capacity only doubles, never
+    # shrinks), gathering just the K referenced rows is cheaper — and
+    # needs no finiteness guard, since it never touches freed rows.
+    sparse = (path != "pallas"
+              and buffer.shape[0] >= 4 * max(len(row_idx), kernel_ops.SUBLANE))
+    flat = None
+    if sparse:
+        flat = kernel_ops.aggregate_rows_gather(buffer, row_idx, weights)
+        _LAST_PATH = "xla"
+    elif path == "pallas" or (path == "auto" and auto_pallas):
+        try:
+            flat = kernel_ops.aggregate_rows(buffer, row_idx, weights)
+            _LAST_PATH = "pallas"
+        except Exception:  # noqa: BLE001 — fall back unless forced
+            if path == "pallas":
+                raise
+            _PALLAS_OK = False  # runtime failure: disable for the process
+            flat = None
+    if flat is None:
+        flat = kernel_ops.aggregate_rows_xla(buffer, row_idx, weights)
+        _LAST_PATH = "xla"
+    # Finiteness guard: the full-buffer sweep multiplies freed rows by
+    # weight 0, which is only exact for finite stale values (0 * inf = nan).
+    # A non-finite result triggers one exact recompute over just the
+    # referenced rows, so a diverged-then-pruned client can never poison a
+    # later aggregate. The check reads the [W] result, not the buffer.
+    if not sparse and not bool(jnp.all(jnp.isfinite(flat))):
+        flat = kernel_ops.aggregate_rows_gather(buffer, row_idx, weights)
+    # buffer rows are block-padded (W >= N); unravel exactly once per round
+    out = spec.unravel(flat[:spec.n_params], restore_dtype=False)
     if out_dtype is not None:
         out = jax.tree.map(lambda x: x.astype(out_dtype), out)
     return out

@@ -15,12 +15,15 @@ Supports the baseline strategies' client-side modifications:
 from __future__ import annotations
 
 import functools
+import itertools
+import weakref
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.update_store import scatter_rows
 from repro.optim import apply_updates, build_optimizer
 
 Pytree = Any
@@ -43,6 +46,23 @@ def _steps_bucket(steps: int) -> int:
 # reuse identical trainer configs; compiles are expensive on the 1-core host).
 _COMPILE_CACHE: dict[tuple, Any] = {}
 
+# Cache keys must identify the *model object* the compiled fn closed over.
+# ``id(model)`` is unsafe: ids are recycled after GC, so a new model at a
+# reused address would be served a stale compiled fn. A weak-keyed token is
+# stable for the object's lifetime and never reused afterwards, while still
+# letting every trainer built around the same shared model object (sweep
+# engine, benchmarks) hit the same compiled entry.
+_MODEL_TOKENS: "weakref.WeakKeyDictionary[Any, int]" = weakref.WeakKeyDictionary()
+_TOKEN_COUNTER = itertools.count()
+
+
+def _model_token(model) -> int:
+    tok = _MODEL_TOKENS.get(model)
+    if tok is None:
+        tok = next(_TOKEN_COUNTER)
+        _MODEL_TOKENS[model] = tok
+    return tok
+
 
 class CohortTrainer:
     """Vectorized local training over a cohort sharing one model/optimizer."""
@@ -59,7 +79,7 @@ class CohortTrainer:
         self._compiled: dict[int, Any] = {}
 
     # ----------------------------------------------------------- single fn
-    def _make_fn(self, max_steps: int):
+    def _make_fn(self, max_steps: int, flat_updates: bool = False):
         model, opt = self.model, self.opt
         B, mu, use_cv, lr = self.batch_size, self.prox_mu, self.scaffold, self.lr
 
@@ -103,15 +123,41 @@ class CohortTrainer:
             return params, ci_new, mean_loss
 
         v = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0, 0, None, 0))
-        return jax.jit(v)
+        if not flat_updates:
+            return jax.jit(v)
+
+        # Update-plane mode: the trained cohort never leaves the device —
+        # inside the same jitted program each [K, ...] output leaf lands in
+        # its column stripe of the UpdateStore buffer rows (canonical
+        # jax.tree.leaves order, the RavelSpec contract; tail pad lanes
+        # zeroed). The buffer is *donated* and the chained aliased scatters
+        # are in-place writes: zero host round-trips, no buffer copy, no
+        # concatenated [K, W] intermediate.
+        def cohort_flat(params0, X, y, n_i, steps, keys, cg, ci,
+                        buffer, row_ids):
+            out_params, ci_new, losses = v(params0, X, y, n_i, steps,
+                                           keys, cg, ci)
+            buffer = scatter_rows(buffer, row_ids,
+                                  jax.tree.leaves(out_params))
+            return buffer, ci_new, losses
+
+        return jax.jit(cohort_flat, donate_argnums=(8,))
 
     # --------------------------------------------------------------- train
     def train_cohort(self, global_params: Pytree, X: np.ndarray, y: np.ndarray,
                      n_i: np.ndarray, steps: np.ndarray,
                      c_global: Optional[Pytree] = None,
-                     c_clients: Optional[Pytree] = None):
+                     c_clients: Optional[Pytree] = None, *,
+                     update_sink=None):
         """X: [K, N_max, ...], y: [K, N_max], n_i/steps: [K].
-        Returns (params [K, ...] stacked, c_clients', mean losses [K])."""
+        Returns (params [K, ...] stacked, c_clients', mean losses [K]).
+
+        With ``update_sink`` (an ``UpdateStore``) the trained client models
+        instead stay on device: the jitted cohort fn flattens them to
+        [K, W] fp32 rows (RavelSpec leaf order) and scatters them into the
+        sink's donated buffer in the same program; the first return value
+        is then the [K] allocated row ids."""
+        flat_updates = update_sink is not None
         K = X.shape[0]
         # pad the cohort to a power-of-two bucket: one compile serves every
         # selection size in the bucket (padded entries run 0 active steps)
@@ -123,11 +169,12 @@ class CohortTrainer:
             n_i = padt(np.asarray(n_i))
             steps = np.concatenate([steps, np.zeros(Kp - K, steps.dtype)])
         max_steps = _steps_bucket(int(steps.max()))
-        cache_key = (id(self.model), self.opt.name, self.lr, self.batch_size,
-                     self.prox_mu, self.scaffold, Kp, max_steps,
-                     X.shape[1:], y.dtype)
+        cache_key = (_model_token(self.model), self.opt.name, self.lr,
+                     self.batch_size, self.prox_mu, self.scaffold, Kp,
+                     max_steps, X.shape[1:], y.dtype, flat_updates)
         if cache_key not in _COMPILE_CACHE:
-            _COMPILE_CACHE[cache_key] = self._make_fn(max_steps)
+            _COMPILE_CACHE[cache_key] = self._make_fn(
+                max_steps, flat_updates=flat_updates)
         fn = _COMPILE_CACHE[cache_key]
         self._key, sub = jax.random.split(self._key)
         keys = jax.random.split(sub, Kp)
@@ -140,8 +187,20 @@ class CohortTrainer:
                 lambda a: jnp.concatenate(
                     [a, jnp.zeros((Kp - K,) + a.shape[1:], a.dtype)], axis=0),
                 c_clients)
+        trim = lambda t: jax.tree.map(lambda a: a[:K], t)
+        if flat_updates:
+            # padded cohort entries run 0 active steps, so their rows hold
+            # the unchanged global model — written then recycled right away
+            ids = update_sink.alloc(Kp)
+            new_buffer, ci_new, losses = fn(
+                global_params, jnp.asarray(X), jnp.asarray(y),
+                jnp.asarray(n_i), jnp.asarray(steps), keys, c_global,
+                c_clients, update_sink.buffer, jnp.asarray(ids))
+            update_sink.buffer = new_buffer
+            if Kp != K:
+                update_sink.free(ids[K:])
+            return ids[:K], trim(ci_new), np.asarray(losses)[:K]
         out_params, ci_new, losses = fn(
             global_params, jnp.asarray(X), jnp.asarray(y), jnp.asarray(n_i),
             jnp.asarray(steps), keys, c_global, c_clients)
-        trim = lambda t: jax.tree.map(lambda a: a[:K], t)
         return trim(out_params), trim(ci_new), np.asarray(losses)[:K]

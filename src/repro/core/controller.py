@@ -22,6 +22,7 @@ Elasticity: clients may join/leave between rounds (add_clients/remove_clients).
 from __future__ import annotations
 
 import math
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -30,16 +31,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import weighted_aggregate
+from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows
 from repro.core.client import CohortTrainer
 from repro.core.database import ClientRecord, Database, ResultRecord
 from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
+from repro.core.update_store import UpdateStore
 from repro.faas.cost import CostModel
 from repro.faas.events import EventLoop
 from repro.faas.hardware import HardwareProfile
 from repro.faas.platform import FaaSPlatform
+from repro.kernels.ops import RavelSpec
 
 Pytree = Any
+
+UPDATE_STORE_DIRNAME = "update_store"
+
+
+def resolve_update_plane(mode: str) -> str:
+    """'device' (default) | 'blob' (legacy pytree-blob path).
+    Resolution: explicit config value > ``REPRO_UPDATE_PLANE`` > 'device'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_UPDATE_PLANE", "device")
+    if mode not in ("device", "blob"):
+        raise ValueError(f"unknown update plane {mode!r} "
+                         "(expected 'device', 'blob', or 'auto')")
+    return mode
 
 
 @dataclass
@@ -80,6 +96,12 @@ class FLConfig:
     prox_mu: float = 0.01          # mu, FedProx proximal coefficient
     staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2,
     #                                 Apodotiko) | "eq1" = t_i/T (FedLesScan)
+    update_plane: str = "auto"     # client-update transport: "device" keeps
+    #                                 updates as rows of one device-resident
+    #                                 [capacity, N] buffer (zero host
+    #                                 round-trips per round); "blob" is the
+    #                                 legacy host-pytree path; "auto" defers
+    #                                 to REPRO_UPDATE_PLANE (default device)
     # -- harness ---------------------------------------------------------------
     eval_every: int = 1            # evaluate global model every k rounds
     seed: int = 0                  # RNG seed: selection, init, platform noise
@@ -150,7 +172,54 @@ class Controller:
                                          self.params)
         self.history: list[RoundLog] = []
         self._eval_fn = jax.jit(model.accuracy)
+        self._eval_scan = None      # (jitted fn, padded arrays) built lazily
         self._completed_this_round: set[int] = set()
+
+        # -- update plane: device-resident flat-buffer client updates ------
+        self.update_plane = resolve_update_plane(cfg.update_plane)
+        self.spec = RavelSpec(self.params)
+        self.store: Optional[UpdateStore] = None
+        self.update_host_bytes = 0  # bytes moved host<->device for updates
+        if db is not None:
+            self._check_plane_compatible(db)
+        if self.update_plane == "device":
+            self.store = UpdateStore(
+                self.spec.n_params,
+                capacity=max(cfg.clients_per_round, 1))
+            if db is not None and cfg.checkpoint_dir:
+                self._rehydrate_store()
+
+    def _check_plane_compatible(self, db: Database) -> None:
+        """A checkpoint written under one update plane cannot feed pending
+        results to the other: blob records carry update_row=-1 (which would
+        silently index the last buffer row) and device records carry no
+        blob. Switching planes across a resume is fine once nothing is
+        in flight."""
+        saved = db.meta.get("update_plane")
+        if saved is None or saved == self.update_plane:
+            return
+        if any(not r.aggregated for r in db.results):
+            raise ValueError(
+                f"checkpoint was written with update_plane={saved!r} and "
+                f"has un-aggregated results; resuming with "
+                f"update_plane={self.update_plane!r} would corrupt them — "
+                f"set REPRO_UPDATE_PLANE={saved} (or cfg.update_plane) to "
+                f"resume, or aggregate before switching planes")
+
+    def _rehydrate_store(self) -> None:
+        """Resume path: reload the live un-aggregated update rows saved at
+        checkpoint time, at their original ids so ResultRecord handles in
+        the restored database stay valid."""
+        from repro.checkpoint import restore_update_store
+        d = os.path.join(self.cfg.checkpoint_dir, UPDATE_STORE_DIRNAME)
+        if not os.path.isdir(d):
+            return
+        ids, rows, n_params = restore_update_store(d)
+        if n_params != self.spec.n_params:
+            raise ValueError(
+                f"update-store checkpoint has N={n_params} params but the "
+                f"model has N={self.spec.n_params}")
+        self.store.write_at(ids, rows)
 
     # ---------------------------------------------------------------- elastic
     def add_clients(self, records: list[ClientRecord],
@@ -179,10 +248,20 @@ class Controller:
             ci_list = [self.c_clients.get(cid) or jax.tree.map(zeros, self.params)
                        for cid in selection]
             ci = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ci_list)
-        out_params, ci_new, losses = self.trainer.train_cohort(
+        device = self.update_plane == "device"
+        out, ci_new, losses = self.trainer.train_cohort(
             self.params, self.data.X[selection], self.data.y[selection],
-            n_i, steps, cg, ci)
-        out_params = jax.tree.map(np.asarray, out_params)  # host copies
+            n_i, steps, cg, ci,
+            update_sink=self.store if device else None)
+        if device:
+            # trained models never left the device: the jitted cohort fn
+            # scattered them into the store's persistent row buffer; only
+            # the [K] row handles come back
+            row_ids = out
+        else:
+            out = jax.tree.map(np.asarray, out)  # host copies
+            self.update_host_bytes += sum(
+                l.nbytes for l in jax.tree.leaves(out))
         if self.strategy.needs_scaffold:
             self._apply_scaffold_updates(selection, ci_new)
 
@@ -191,21 +270,30 @@ class Controller:
                                        float(steps[k]), self.hw[cid],
                                        cfg.base_step_time)
             self.db.mark_running(cid, round_)
-            update_k = jax.tree.map(lambda x: x[k], out_params)
+            update_k = (int(row_ids[k]) if device
+                        else jax.tree.map(lambda x: x[k], out))
             self.loop.schedule(rec.duration, self._completion_cb(
                 cid, round_, rec, update_k, int(n_i[k]), float(losses[k])))
 
     def _completion_cb(self, cid, round_, rec, update, n_samples, loss):
+        device = self.update_plane == "device"
+
         def cb():
             if rec.failed:
                 self.db.mark_failed(cid)
+                if device:
+                    self.store.free([update])  # recycle the orphaned row
                 return
             train_dur = rec.duration  # includes startup/load/upload
             self.db.mark_complete(cid, train_dur)
-            self.db.put_update(
-                ResultRecord(client_id=cid, round=round_, n_samples=n_samples,
-                             train_duration=train_dur,
-                             t_available=self.loop.now), update)
+            result = ResultRecord(client_id=cid, round=round_,
+                                  n_samples=n_samples,
+                                  train_duration=train_dur,
+                                  t_available=self.loop.now)
+            if device:
+                self.db.put_update_row(result, update)
+            else:
+                self.db.put_update(result, update)
             self._completed_this_round.add(cid)
         return cb
 
@@ -241,28 +329,83 @@ class Controller:
             weights = np.array([r.n_samples for r in pending], np.float64)
             total = weights.sum() or 1.0
         weights = (weights / total).astype(np.float32)
-        updates = [jax.tree.map(jnp.asarray, self.db.blobs[r.update_key])
-                   for r in pending]
-        self.params = weighted_aggregate(
-            updates, weights,
-            out_dtype=jax.tree.leaves(self.params)[0].dtype)
+        out_dtype = jax.tree.leaves(self.params)[0].dtype
+        if self.update_plane == "device":
+            # row-index fast path: gather rows out of the persistent device
+            # buffer, one kernel dispatch, one unravel — no host traffic
+            rows = [r.update_row for r in pending]
+            assert all(r >= 0 for r in rows), \
+                "pending result without a row handle on the device plane"
+            self.params = weighted_aggregate_rows(
+                self.store.buffer, rows, weights, self.spec,
+                out_dtype=out_dtype)
+            self.store.free(rows)
+        else:
+            updates = [jax.tree.map(jnp.asarray, self.db.blobs[r.update_key])
+                       for r in pending]
+            self.update_host_bytes += sum(
+                l.nbytes for u in updates for l in jax.tree.leaves(u))
+            self.params = weighted_aggregate(updates, weights,
+                                             out_dtype=out_dtype)
         n_stale = sum(1 for r in pending if r.round < round_)
         mean_dur = float(np.mean([r.train_duration for r in pending]))
         self.db.mark_aggregated(pending)
         # prune: results too stale to ever be usable again
         drop = [r for r in self.db.results
                 if not r.aggregated and round_ - r.round >= self.cfg.max_staleness]
+        if self.update_plane == "device":
+            self.store.free([r.update_row for r in drop if r.update_row >= 0])
         self.db.mark_aggregated(drop)
         return len(pending), n_stale, mean_dur
 
+    def _build_eval_scan(self):
+        """One jitted masked scan over the padded eval set: a single device
+        dispatch and a single scalar host transfer per evaluation, instead
+        of a Python loop of per-256-batch jit calls each synchronizing."""
+        xs = np.asarray(self.data.eval_x)
+        ys = np.asarray(self.data.eval_y)
+        n, bs = len(xs), 256
+        nb = max(1, math.ceil(n / bs))
+        pad = nb * bs - n
+        if pad:
+            xs = np.concatenate([xs, np.repeat(xs[:1], pad, axis=0)])
+            ys = np.concatenate([ys, np.repeat(ys[:1], pad, axis=0)])
+        mask = (np.arange(nb * bs) < n).reshape(nb, bs)
+        batches = (jnp.asarray(xs.reshape((nb, bs) + xs.shape[1:])),
+                   jnp.asarray(ys.reshape((nb, bs) + ys.shape[1:])),
+                   jnp.asarray(mask))
+        model = self.model
+
+        @jax.jit
+        def run(params, X, y, m):
+            def body(correct, inp):
+                xb, yb, mb = inp
+                pred = jnp.argmax(model.predict(params, xb), axis=-1)
+                return correct + jnp.sum((pred == yb) & mb), None
+            correct, _ = jax.lax.scan(body, jnp.zeros((), jnp.int32),
+                                      (X, y, m))
+            return correct.astype(jnp.float32) / n
+
+        return run, batches
+
     def _evaluate(self) -> float:
-        xs, ys = self.data.eval_x, self.data.eval_y
-        accs, bs = [], 256
-        for i in range(0, len(xs), bs):
-            accs.append(float(self._eval_fn(
-                self.params, {"x": jnp.asarray(xs[i:i + bs]),
-                              "y": jnp.asarray(ys[i:i + bs])})))
-        return float(np.mean(accs))
+        if not hasattr(self.model, "predict"):
+            # models exposing only ``accuracy`` (e.g. LM adapters with
+            # internal target masking) keep the legacy per-batch loop;
+            # batches are weighted by size so both paths report the same
+            # statistic (exact sample mean) on ragged tails
+            xs, ys = self.data.eval_x, self.data.eval_y
+            total, bs = 0.0, 256
+            for i in range(0, len(xs), bs):
+                xb, yb = xs[i:i + bs], ys[i:i + bs]
+                total += float(self._eval_fn(
+                    self.params, {"x": jnp.asarray(xb),
+                                  "y": jnp.asarray(yb)})) * len(xb)
+            return total / max(len(xs), 1)
+        if self._eval_scan is None:
+            self._eval_scan = self._build_eval_scan()
+        run, batches = self._eval_scan
+        return float(run(self.params, *batches))
 
     # -------------------------------------------------------------------- run
     def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
@@ -329,6 +472,8 @@ class Controller:
         count_arr = [counts.get(cid, 0) for cid in self.db.clients]
         return {
             "strategy": self.strategy.name,
+            "update_plane": self.update_plane,
+            "update_host_bytes": int(self.update_host_bytes),
             "rounds": len(self.history),
             "final_accuracy": self.history[-1].accuracy if self.history else 0.0,
             "total_time": self.loop.now,
@@ -350,9 +495,19 @@ class Controller:
     def checkpoint(self) -> None:
         if not self.cfg.checkpoint_dir:
             return
+        self.db.meta["update_plane"] = self.update_plane
         self.db.put_global_model(self.db.round,
                                  jax.tree.map(np.asarray, self.params))
         self.db.save(self.cfg.checkpoint_dir)
+        if self.update_plane == "device":
+            # persist the live un-aggregated rows so the async in-flight
+            # state survives a crash bit-exactly (handles stay valid)
+            from repro.checkpoint import save_update_store
+            ids = [r.update_row for r in self.db.results
+                   if not r.aggregated and r.update_row >= 0]
+            save_update_store(
+                self.store, ids,
+                os.path.join(self.cfg.checkpoint_dir, UPDATE_STORE_DIRNAME))
 
     @classmethod
     def resume(cls, cfg: FLConfig, model, data, fleet) -> "Controller":

@@ -45,6 +45,9 @@ class ResultRecord:
     t_available: float                 # sim time the update landed in the DB
     aggregated: bool = False
     update_key: str = ""               # key into the parameter blob store
+    update_row: int = -1               # row handle into the device-resident
+    #                                    UpdateStore (update-plane path); -1
+    #                                    when the update lives in a blob
 
 
 class Database:
@@ -84,6 +87,12 @@ class Database:
         key = f"u{rec.client_id}r{rec.round}n{len(self.results)}"
         rec.update_key = key
         self.blobs[key] = update
+        self.results.append(rec)
+
+    def put_update_row(self, rec: ResultRecord, row: int) -> None:
+        """Update-plane result: the parameters stay on device as a row of
+        the controller's UpdateStore; the database records only the handle."""
+        rec.update_row = int(row)
         self.results.append(rec)
 
     def pending_results(self, max_staleness: int, current_round: int):

@@ -1,0 +1,170 @@
+"""Device-resident update plane: a persistent row buffer for client updates.
+
+The paper's state store holds every un-aggregated client update until the
+CR-gated aggregation consumes it (Algorithm 1 lines 6-9). The legacy blob
+path materializes each update as a host-side numpy pytree — O(K*N) bytes
+copied device->host after training and host->device again at aggregation,
+every round. The ``UpdateStore`` keeps the same lifecycle entirely on
+device: all in-flight updates are rows of one ``[capacity, W]`` fp32
+buffer, written in place by the jitted cohort-train function (the buffer is
+*donated* into the jit and each leaf lands in its column stripe through
+chained aliased scatters — true in-place writes, no concatenated
+intermediate, no buffer copy) and consumed by the ``staleness_agg`` kernel
+via scattered per-row weights
+(``core.aggregation.weighted_aggregate_rows``) — zero host round-trips on
+the round hot path.
+
+Geometry invariants (so the aggregation kernel never pays a padding copy):
+``capacity`` is always a multiple of the fp32 sublane (8) and the row width
+``W`` is ``n_params`` rounded up to the kernel block (1024); every row
+write zeroes the tail pad lanes.
+
+Lifecycle: rows are allocated at invocation time, referenced by
+``ResultRecord.update_row`` handles in the database, and recycled through a
+free-list when results are aggregated, pruned past the staleness cap, or
+their invocation fails. Freeing does no device work: stale rows enter the
+full-buffer reduction with weight 0, and the only case where that is not
+exact (NaN/Inf left by a diverged client) is caught by the aggregation
+layer's finiteness guard, which recomputes via an explicit row gather. The
+buffer doubles when the free-list runs dry. Checkpointing serializes only
+the live rows (``checkpoint.manager.save_update_store``) and rehydrates
+them at their original row ids on resume, so record handles stay valid
+bit-exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import SUBLANE
+from repro.kernels.staleness_agg import BLOCK_N
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def scatter_rows(buffer, ids, leaves):
+    """Traceable column-stripe row write: each [K, ...]-stacked leaf lands
+    in its stripe of the buffer rows (RavelSpec leaf order), tail pad lanes
+    zeroed. When the buffer is donated into the enclosing jit, the chained
+    aliased scatters are in-place writes — no concatenated [K, W]
+    intermediate, no buffer copy. This is THE buffer-write contract: the
+    store's jitted entry points below and the cohort-train fn
+    (``core.client``) both trace through it."""
+    K = leaves[0].shape[0]
+    off = 0
+    for l in leaves:
+        seg = l.reshape(K, -1).astype(buffer.dtype)
+        buffer = buffer.at[ids, off:off + seg.shape[1]].set(seg)
+        off += seg.shape[1]
+    if off < buffer.shape[1]:
+        buffer = buffer.at[ids, off:].set(0.0)
+    return buffer
+
+
+_scatter_stacked = functools.partial(jax.jit, donate_argnums=(0,))(scatter_rows)
+
+
+class UpdateStore:
+    """Free-listed [capacity, W] fp32 device buffer of flat client updates."""
+
+    def __init__(self, n_params: int, capacity: int = 16,
+                 dtype=jnp.float32):
+        self.n_params = int(n_params)
+        self.row_width = _round_up(self.n_params, BLOCK_N)
+        self.dtype = dtype
+        self.capacity = 0
+        self.buffer: Optional[jnp.ndarray] = None
+        self._free: list[int] = []
+        self._live: set[int] = set()
+        self._ensure(max(int(capacity), 1))
+
+    # ------------------------------------------------------------ capacity
+    def _ensure(self, capacity: int) -> None:
+        if capacity <= self.capacity:
+            return
+        # double (at least) so amortized growth cost is O(1) per row; keep
+        # capacity a sublane multiple so the kernel path never pads rows
+        cap = _round_up(max(capacity, 2 * self.capacity), SUBLANE)
+        grown = jnp.zeros((cap - self.capacity, self.row_width), self.dtype)
+        self.buffer = (grown if self.buffer is None
+                       else jnp.concatenate([self.buffer, grown], axis=0))
+        self._free.extend(range(self.capacity, cap))
+        self.capacity = cap
+
+    def alloc(self, k: int) -> np.ndarray:
+        """Reserve k row ids (grows the buffer if the free-list runs dry)."""
+        if len(self._free) < k:
+            self._ensure(self.capacity + (k - len(self._free)))
+        ids = np.array([self._free.pop() for _ in range(k)], np.int32)
+        self._live.update(int(i) for i in ids)
+        return ids
+
+    # ---------------------------------------------------------------- rows
+    def put(self, rows: jnp.ndarray) -> np.ndarray:
+        """Scatter [K, n_params<=W] rows into freshly allocated slots;
+        returns ids. One donated device scatter — no host traffic."""
+        ids = self.alloc(rows.shape[0])
+        self.buffer = _scatter_stacked(self.buffer, jnp.asarray(ids), [rows])
+        return ids
+
+    def put_stacked(self, stacked_tree) -> np.ndarray:
+        """Write a [K, ...]-stacked pytree (cohort-train output layout)
+        straight into the buffer: per-leaf column-stripe scatters in one
+        donated jit (mirrors what the cohort fn does on the controller
+        path)."""
+        leaves = jax.tree.leaves(stacked_tree)
+        ids = self.alloc(leaves[0].shape[0])
+        self.buffer = _scatter_stacked(self.buffer, jnp.asarray(ids), leaves)
+        return ids
+
+    def write_at(self, ids: Sequence[int], rows) -> None:
+        """Write rows at specific ids (checkpoint rehydration), reserving
+        them. Accepts [L, n_params] or full [L, W] rows."""
+        ids = np.asarray(ids, np.int32)
+        if ids.size == 0:
+            return
+        self._ensure(int(ids.max()) + 1)
+        for i in ids:
+            i = int(i)
+            if i in self._free:
+                self._free.remove(i)
+            self._live.add(i)
+        self.buffer = _scatter_stacked(
+            self.buffer, jnp.asarray(ids), [jnp.asarray(rows, self.dtype)])
+
+    def gather(self, ids: Sequence[int]) -> jnp.ndarray:
+        """[len(ids), W] device gather (no host copy)."""
+        return self.buffer[jnp.asarray(np.asarray(ids, np.int32))]
+
+    def row(self, i: int) -> jnp.ndarray:
+        return self.buffer[int(i)]
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Recycle rows whose results were aggregated, pruned, or failed —
+        a pure free-list operation, no device work. Stale values linger
+        until the slot is rewritten; they enter full-buffer reductions with
+        weight 0, and the one case where that is not an exact no-op
+        (NaN/Inf from a diverged client) is caught by the aggregation
+        layer's finiteness guard (``weighted_aggregate_rows``)."""
+        for i in ids:
+            i = int(i)
+            if i in self._live:
+                self._live.discard(i)
+                self._free.append(i)
+
+    # ----------------------------------------------------------- inventory
+    @property
+    def live_count(self) -> int:
+        return len(self._live)
+
+    def live_rows(self) -> np.ndarray:
+        return np.array(sorted(self._live), np.int32)
+
+    def nbytes(self) -> int:
+        return self.capacity * self.row_width * np.dtype("float32").itemsize

@@ -5,14 +5,21 @@ kernels target TPU (Mosaic); on this CPU container they execute through the
 Pallas interpreter, validated against ``repro.kernels.ref`` oracles.
 
 Higher-level conveniences:
+  - ``RavelSpec``: the flattening contract (leaf order, shapes, dtypes,
+    offsets) shared by every pytree<->flat-buffer boundary: the aggregation
+    kernel path, the device-resident update plane, and checkpointing of
+    live update rows;
   - ``aggregate_pytree``: staleness-weighted aggregation over a list of
     parameter pytrees (ravel -> kernel -> unravel), the drop-in kernel path
     for ``repro.core.aggregation``;
+  - ``aggregate_rows``: index-gather entry point over a persistent [C, N]
+    row buffer (the update-plane hot path — no ravel, no stack);
   - ``compress_update`` / ``decompress_update``: int8 client-update
     compression with error feedback.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence
 
 import jax
@@ -22,7 +29,7 @@ import numpy as np
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.fused_adam import fused_adam  # noqa: F401
 from repro.kernels.quant8 import QBLOCK, ROWS, dequantize_q8, quantize_q8  # noqa: F401
-from repro.kernels.staleness_agg import staleness_agg  # noqa: F401
+from repro.kernels.staleness_agg import BLOCK_N, staleness_agg  # noqa: F401
 
 Pytree = Any
 
@@ -35,24 +42,126 @@ def default_interpret() -> bool:
     return not on_tpu()
 
 
-def _ravel(tree: Pytree):
-    leaves = jax.tree.leaves(tree)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    return flat, leaves
+class RavelSpec:
+    """Stable pytree <-> flat fp32 buffer contract.
 
+    Built once from a template pytree; thereafter any structurally identical
+    tree ravels into an ``[N]`` vector (or ``[K, N]`` rows for trees with a
+    leading stacked axis) in canonical ``jax.tree.leaves`` order, and any
+    ``[N]`` vector unravels back. All methods are jit-traceable; the spec
+    itself is static (shapes/dtypes/offsets captured at build time)."""
 
-def _unravel(flat: jax.Array, like_leaves, treedef,
-             restore_dtype: bool = True) -> Pytree:
-    out, off = [], 0
-    for l in like_leaves:
-        n = int(np.prod(l.shape)) if l.shape else 1
-        x = flat[off:off + n].reshape(l.shape)
-        out.append(x.astype(l.dtype) if restore_dtype else x)
-        off += n
-    return jax.tree.unflatten(treedef, out)
+    def __init__(self, template: Pytree):
+        leaves = jax.tree.leaves(template)
+        self.treedef = jax.tree.structure(template)
+        self.shapes = tuple(tuple(l.shape) for l in leaves)
+        self.dtypes = tuple(np.dtype(l.dtype) for l in leaves)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        self.n_params = int(sum(self.sizes))
+
+    def ravel(self, tree: Pytree) -> jax.Array:
+        """tree (template structure) -> flat [N] fp32."""
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def ravel_stacked(self, tree: Pytree) -> jax.Array:
+        """tree with [K, ...]-stacked leaves -> [K, N] fp32 rows."""
+        leaves = jax.tree.leaves(tree)
+        K = leaves[0].shape[0]
+        return jnp.concatenate(
+            [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unravel(self, flat: jax.Array, restore_dtype: bool = True) -> Pytree:
+        out, off = [], 0
+        for shape, dtype, n in zip(self.shapes, self.dtypes, self.sizes):
+            x = flat[off:off + n].reshape(shape)
+            out.append(x.astype(dtype) if restore_dtype else x)
+            off += n
+        return jax.tree.unflatten(self.treedef, out)
 
 
 SUBLANE = 8  # fp32 TPU sublane; aggregate_pytree pads K to a multiple
+
+
+# ----------------------------------------------------- row-buffer entry point
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _scatter_w_agg(buffer: jax.Array, idx: jax.Array, w: jax.Array,
+                   interpret: bool) -> jax.Array:
+    """Scatter the K weights to per-row weights over the FULL buffer and
+    reduce with the kernel — no row gather, no materialized [K, N] copy.
+    Free rows carry weight 0, an exact no-op for finite stale values; the
+    NaN/Inf case (0 * inf = nan) is handled by the caller's finiteness
+    guard, which falls back to ``aggregate_rows_gather``."""
+    C, N = buffer.shape
+    full_w = jnp.zeros((C,), jnp.float32).at[idx].add(w)
+    pad_c = (-C) % SUBLANE
+    pad_n = (-N) % BLOCK_N
+    if pad_c or pad_n:   # non-conforming caller buffer: pad (copies)
+        buffer = jnp.pad(buffer, ((0, pad_c), (0, pad_n)))
+        full_w = jnp.pad(full_w, (0, pad_c))
+    return staleness_agg(buffer, full_w, interpret=interpret)[:N]
+
+
+@jax.jit
+def _scatter_w_matvec(buffer: jax.Array, idx: jax.Array,
+                      w: jax.Array) -> jax.Array:
+    """XLA oracle/fallback for ``aggregate_rows`` (same scattered weights,
+    one matvec over the buffer)."""
+    full_w = jnp.zeros((buffer.shape[0],), jnp.float32).at[idx].add(w)
+    return full_w @ buffer.astype(jnp.float32)
+
+
+def _pad_rows(row_idx, weights) -> tuple[np.ndarray, np.ndarray]:
+    """Pad (idx, weights) to the sublane multiple with zero-weight repeats of
+    row 0 (exact no-ops under scatter-add) so round-to-round K jitter reuses
+    compiled shapes."""
+    idx = np.asarray(row_idx, np.int32)
+    w = np.asarray(weights, np.float32)
+    pad_k = (-len(idx)) % SUBLANE
+    if pad_k:
+        idx = np.concatenate([idx, np.repeat(idx[:1], pad_k)])
+        w = np.concatenate([w, np.zeros(pad_k, np.float32)])
+    return idx, w
+
+
+def aggregate_rows(buffer: jax.Array, row_idx, weights,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Kernel aggregation straight off a persistent row buffer:
+    ``sum_k weights[k] * buffer[row_idx[k], :]`` -> flat [W] fp32.
+
+    The update-plane hot path: the K weights scatter-add into a [capacity]
+    per-row weight vector and ``staleness_agg`` streams the whole buffer —
+    no per-leaf ravel, no row gather, no host round-trip. ``UpdateStore``
+    geometry (capacity % 8 == 0, width % 1024 == 0) makes this pad-free.
+    Unreferenced rows ride along with weight 0 — exact for finite values;
+    callers must guard the NaN/Inf case (0 * inf = nan) and recompute via
+    ``aggregate_rows_gather``, as ``weighted_aggregate_rows`` does."""
+    interpret = default_interpret() if interpret is None else interpret
+    idx, w = _pad_rows(row_idx, weights)
+    return _scatter_w_agg(buffer, jnp.asarray(idx), jnp.asarray(w), interpret)
+
+
+def aggregate_rows_xla(buffer: jax.Array, row_idx, weights) -> jax.Array:
+    """XLA fallback with identical semantics to ``aggregate_rows``."""
+    idx, w = _pad_rows(row_idx, weights)
+    return _scatter_w_matvec(buffer, jnp.asarray(idx), jnp.asarray(w))
+
+
+@jax.jit
+def _gather_weighted_sum(buffer: jax.Array, idx: jax.Array,
+                         w: jax.Array) -> jax.Array:
+    return jnp.einsum("k,kn->n", w.astype(jnp.float32),
+                      buffer[idx].astype(jnp.float32))
+
+
+def aggregate_rows_gather(buffer: jax.Array, row_idx, weights) -> jax.Array:
+    """Exact-rows fallback: reduces ONLY the referenced rows (device
+    gather + einsum, fused). Slower than the full-buffer sweep but immune
+    to non-finite garbage in freed rows — the aggregation layer recomputes
+    through this when its finiteness guard trips."""
+    idx, w = _pad_rows(row_idx, weights)
+    return _gather_weighted_sum(buffer, jnp.asarray(idx), jnp.asarray(w))
 
 
 def aggregate_pytree(updates: Sequence[Pytree], weights,
@@ -67,23 +176,17 @@ def aggregate_pytree(updates: Sequence[Pytree], weights,
     the kernel block. ``restore_dtype=False`` keeps fp32 leaves
     (``weighted_aggregate``'s contract)."""
     interpret = default_interpret() if interpret is None else interpret
-    treedef = jax.tree.structure(updates[0])
-    flats = []
-    leaves0 = None
-    for u in updates:
-        f, leaves = _ravel(u)
-        leaves0 = leaves0 or leaves
-        flats.append(f)
-    stacked = jnp.stack(flats, 0)
+    spec = RavelSpec(updates[0])
+    stacked = jnp.stack([spec.ravel(u) for u in updates], 0)
     w = jnp.asarray(weights, jnp.float32)
     K, N = stacked.shape
     pad_k = (-K) % SUBLANE
-    pad_n = (-N) % 1024
+    pad_n = (-N) % BLOCK_N
     if pad_k or pad_n:
         stacked = jnp.pad(stacked, ((0, pad_k), (0, pad_n)))
         w = jnp.pad(w, (0, pad_k))
     agg = staleness_agg(stacked, w, interpret=interpret)
-    return _unravel(agg[:N], leaves0, treedef, restore_dtype=restore_dtype)
+    return spec.unravel(agg[:N], restore_dtype=restore_dtype)
 
 
 def compress_update(update: Pytree, error_feedback: Optional[Pytree] = None,
@@ -92,27 +195,21 @@ def compress_update(update: Pytree, error_feedback: Optional[Pytree] = None,
 
     Returns ((q, scales, meta), new_error_feedback)."""
     interpret = default_interpret() if interpret is None else interpret
-    treedef = jax.tree.structure(update)
-    flat, leaves = _ravel(update)
+    spec = RavelSpec(update)
+    flat = spec.ravel(update)
     if error_feedback is not None:
         flat = flat + error_feedback
-    N = flat.shape[0]
+    N = spec.n_params
     pad = (-N) % (ROWS * QBLOCK)
     flat_p = jnp.pad(flat, (0, pad)) if pad else flat
     q, s = quantize_q8(flat_p, interpret=interpret)
     deq = dequantize_q8(q, s, interpret=interpret)[:N]
     err = flat - deq
-    meta = (treedef, [(l.shape, l.dtype) for l in leaves], N)
-    return (q, s, meta), err
+    return (q, s, spec), err
 
 
-def decompress_update(q, s, meta, interpret: Optional[bool] = None) -> Pytree:
+def decompress_update(q, s, meta: "RavelSpec",
+                      interpret: Optional[bool] = None) -> Pytree:
     interpret = default_interpret() if interpret is None else interpret
-    treedef, shapes, N = meta
-    flat = dequantize_q8(q, s, interpret=interpret)[:N]
-    out, off = [], 0
-    for shape, dtype in shapes:
-        n = int(np.prod(shape)) if shape else 1
-        out.append(flat[off:off + n].reshape(shape).astype(dtype))
-        off += n
-    return jax.tree.unflatten(treedef, out)
+    flat = dequantize_q8(q, s, interpret=interpret)[:meta.n_params]
+    return meta.unravel(flat)

@@ -2,6 +2,7 @@ from repro.optim.optimizers import (  # noqa: F401
     Optimizer,
     adafactor,
     adam,
+    adam_fused,
     apply_updates,
     build_optimizer,
     momentum,

@@ -5,11 +5,23 @@ moments do not fit HBM even fully sharded).
 All states are pytrees mirroring the parameter tree so the sharding rule
 engine (``repro.sharding``) can derive optimizer-state shardings (ZeRO-1)
 from the parameter logical axes.
+
+The Adam path can dispatch to the fused ``kernels/fused_adam`` Pallas
+kernel (one HBM pass over p/m/v/g instead of ~12 unfused accesses),
+mirroring the aggregation dispatch pattern: a one-time ref-equivalence
+self-check gates ``auto`` dispatch, any failure falls back to the XLA
+implementation, and ``REPRO_ADAM_PATH=fused|xla|auto`` forces a path.
+``auto`` only takes the kernel on a real TPU backend — off-TPU the Pallas
+interpreter inside the per-step training loop would be a slowdown, unlike
+the once-per-round aggregation kernel. Fused state is flat ([Np] m/v
+vectors) rather than tree-shaped, so it is excluded from the sharding-rule
+derivation (single-host FL clients only).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+import os
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +83,80 @@ def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Op
     return Optimizer(init, update, "adam")
 
 
+# ------------------------------------------------------- fused Adam kernel
+_FUSED_ADAM_OK: Optional[bool] = None   # one-time self-check result
+
+
+def _fused_adam_validated() -> bool:
+    """Ref-equivalence self-check of the fused Pallas Adam step against the
+    XLA implementation on a deterministic input (mirrors the aggregation
+    kernel's gating). Any mismatch or kernel error disables ``auto``
+    dispatch for the process."""
+    global _FUSED_ADAM_OK
+    if _FUSED_ADAM_OK is None:
+        try:
+            import numpy as np
+
+            from repro.kernels import ref
+            from repro.kernels.fused_adam import BLOCK, fused_adam
+            from repro.kernels.ops import default_interpret
+
+            rng = np.random.default_rng(0)
+            N, t, lr = BLOCK, 3, 1e-3
+            p, g = rng.normal(size=(2, N)).astype(np.float32)
+            m = rng.normal(size=N).astype(np.float32) * 0.1
+            v = np.abs(rng.normal(size=N)).astype(np.float32) * 0.01
+            got = fused_adam(
+                jnp.asarray(p), jnp.asarray(m), jnp.asarray(v),
+                jnp.asarray(g), jnp.int32(t), lr=lr,
+                interpret=default_interpret())
+            want = ref.fused_adam(jnp.asarray(p), jnp.asarray(m),
+                                  jnp.asarray(v), jnp.asarray(g),
+                                  lr=lr, t=t)
+            _FUSED_ADAM_OK = all(
+                np.allclose(np.asarray(a), np.asarray(b),
+                            rtol=1e-5, atol=1e-6)
+                for a, b in zip(got, want))
+        except Exception:  # noqa: BLE001 — any kernel failure disables path
+            _FUSED_ADAM_OK = False
+    return _FUSED_ADAM_OK
+
+
+def adam_fused(lr: float, b1: float = 0.9, b2: float = 0.999,
+               eps: float = 1e-8) -> Optimizer:
+    """Adam via the fused ``kernels/fused_adam`` Pallas kernel. Params and
+    grads are raveled through the shared ``RavelSpec`` contract into one
+    flat fp32 vector padded to the kernel block (pad lanes carry zero
+    grads -> exact no-ops); m/v state is kept flat."""
+    from repro.kernels.fused_adam import BLOCK, fused_adam
+    from repro.kernels.ops import RavelSpec, default_interpret
+
+    def _flat(spec, tree):
+        flat = spec.ravel(tree)
+        pad = (-spec.n_params) % BLOCK
+        return jnp.pad(flat, (0, pad)) if pad else flat
+
+    def init(params):
+        spec = RavelSpec(params)
+        n = spec.n_params + (-spec.n_params) % BLOCK
+        return {"m": jnp.zeros(n, jnp.float32),
+                "v": jnp.zeros(n, jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        spec = RavelSpec(grads)
+        p_flat = _flat(spec, params)
+        t = state["t"] + 1
+        po, mo, vo = fused_adam(p_flat, state["m"], state["v"],
+                                _flat(spec, grads), t, lr=lr, b1=b1, b2=b2,
+                                eps=eps, interpret=default_interpret())
+        upd_flat = po - p_flat
+        upd = spec.unravel(upd_flat[:spec.n_params], restore_dtype=False)
+        return upd, {"m": mo, "v": vo, "t": t}
+
+    return Optimizer(init, update, "adam-fused")
+
+
 def adafactor(lr: float = 1e-2, eps: float = 1e-30, clip: float = 1.0) -> Optimizer:
     """Factored second-moment (Shazeer & Stern). Rank>=2 leaves keep only
     row/col statistics -> O(n+m) state instead of O(n*m); no first moment."""
@@ -125,6 +211,15 @@ def build_optimizer(name: str, lr: float) -> Optimizer:
     if name == "momentum":
         return momentum(lr)
     if name == "adam":
+        path = os.environ.get("REPRO_ADAM_PATH", "auto")
+        if path not in ("auto", "fused", "xla"):
+            raise ValueError(f"unknown adam path {path!r}")
+        if path == "fused":
+            return adam_fused(lr)   # forced: kernel errors propagate
+        if path == "auto":
+            from repro.kernels.ops import on_tpu
+            if on_tpu() and _fused_adam_validated():
+                return adam_fused(lr)
         return adam(lr)
     if name == "adafactor":
         return adafactor(lr)

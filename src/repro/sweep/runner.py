@@ -38,13 +38,20 @@ OPTIMIZER = {"shakespeare": ("sgd", 0.5)}  # others: (adam, 1e-3)
 
 
 class LocalRunner:
-    """Callable run executor with shared, thread-safe setup caches."""
+    """Callable run executor with shared, thread-safe setup caches.
+
+    ``update_plane`` pins every cell to one client-update transport
+    ("device" = flat-buffer UpdateStore, "blob" = legacy host pytrees) so a
+    sweep compares strategies on identical plumbing; None keeps the
+    controller default (REPRO_UPDATE_PLANE env var, then "device")."""
 
     def __init__(self, scale: SweepScale, *, fidelity: str = "proxy",
-                 cache_dir: Optional[str] = None):
+                 cache_dir: Optional[str] = None,
+                 update_plane: Optional[str] = None):
         self.scale = scale
         self.fidelity = fidelity
         self.cache_dir = cache_dir
+        self.update_plane = update_plane
         self._lock = threading.Lock()
         self._models: dict = {}
         self._data: dict = {}
@@ -102,6 +109,8 @@ class LocalRunner:
             round_timeout=600.0, staleness_fn=run.staleness_fn,
             seed=run.seed, eval_every=s.eval_every,
             max_sim_time=s.sim_budget or SIM_BUDGET.get(run.dataset, 2_000.0))
+        if self.update_plane:
+            cfg = replace(cfg, update_plane=self.update_plane)
         if run.overrides:
             cfg = replace(cfg, **dict(run.overrides))
         return cfg
@@ -110,8 +119,8 @@ class LocalRunner:
     def _cache_path(self, run: RunSpec) -> Optional[str]:
         if not self.cache_dir:
             return None
-        key_src = json.dumps([run.key, asdict(self.scale), self.fidelity],
-                             sort_keys=True)
+        key_src = json.dumps([run.key, asdict(self.scale), self.fidelity,
+                              self.update_plane], sort_keys=True)
         key = hashlib.sha1(key_src.encode()).hexdigest()[:16]
         return os.path.join(self.cache_dir, f"{key}.json")
 

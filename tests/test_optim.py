@@ -1,11 +1,19 @@
 """Optimizer tests: convergence on a quadratic, state shapes, adafactor
-memory factorization."""
+memory factorization, fused-Adam kernel dispatch."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optim import adafactor, adam, apply_updates, build_optimizer, momentum, sgd
+from repro.optim import (
+    adafactor,
+    adam,
+    adam_fused,
+    apply_updates,
+    build_optimizer,
+    momentum,
+    sgd,
+)
 
 
 def _minimize(opt, steps=200):
@@ -59,3 +67,48 @@ def test_adam_matches_reference_formula():
     upd, st = opt.update(g, st, params)
     # t=1: mhat = g, vhat = g^2 -> update = -lr * g/(|g|+eps) ~= -lr
     np.testing.assert_allclose(np.asarray(upd["w"]), [-0.1], rtol=1e-4)
+
+
+# ------------------------------------------------------- fused Adam kernel
+def test_fused_adam_self_check_passes():
+    from repro.optim.optimizers import _fused_adam_validated
+    assert _fused_adam_validated()
+
+
+def test_fused_adam_matches_xla_adam_over_steps():
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(13, 7)), jnp.float32),
+              "b": {"c": jnp.asarray(rng.normal(size=(5,)), jnp.float32)}}
+    of, ox = adam_fused(1e-3), adam(1e-3)
+    sf, sx = of.init(params), ox.init(params)
+    for step in range(3):
+        grads = jax.tree.map(
+            lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32),
+            params)
+        uf, sf = of.update(grads, sf, params)
+        ux, sx = ox.update(grads, sx, params)
+        for a, b in zip(jax.tree.leaves(uf), jax.tree.leaves(ux)):
+            assert a.shape == b.shape
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        params = apply_updates(params, uf)
+
+
+def test_fused_adam_converges_on_quadratic():
+    assert _minimize(adam_fused(0.1)) < 1e-2
+
+
+def test_adam_path_env_dispatch(monkeypatch):
+    monkeypatch.setenv("REPRO_ADAM_PATH", "fused")
+    assert build_optimizer("adam", 1e-3).name == "adam-fused"
+    monkeypatch.setenv("REPRO_ADAM_PATH", "xla")
+    assert build_optimizer("adam", 1e-3).name == "adam"
+    monkeypatch.setenv("REPRO_ADAM_PATH", "cuda")
+    with pytest.raises(ValueError, match="unknown adam path"):
+        build_optimizer("adam", 1e-3)
+    monkeypatch.delenv("REPRO_ADAM_PATH")
+    # auto off-TPU: interpret-mode fused adam in the training inner loop
+    # would be a slowdown, so auto keeps the XLA implementation
+    from repro.kernels.ops import on_tpu
+    if not on_tpu():
+        assert build_optimizer("adam", 1e-3).name == "adam"
