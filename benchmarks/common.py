@@ -9,7 +9,7 @@ composes tables without re-running shared grids.
 Scale: the paper's full setup (200 clients, 100/round, 28x28 CNNs) costs
 ~150 s/round of pure conv compute on this 1-core container; the default
 bench scale keeps the paper's *structure* (client mix 65/25/10, non-IID
-schemes, CR values, round counts) at proxy-model scale (DESIGN.md §7).
+schemes, CR values, round counts) at proxy-model scale (DESIGN.md §8).
 Pass fidelity="paper" for the exact models.
 """
 from __future__ import annotations
@@ -23,7 +23,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.controller import Controller, FLConfig
+from repro.core.controller import FLConfig
+from repro.core.scheduler import build_engine
 from repro.data.synthetic import make_federated_dataset
 from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
 from repro.models.proxy_models import build_bench_model
@@ -123,7 +124,7 @@ def run_experiment(*, dataset: str, strategy: str, scenario: str = "heterogeneou
     model = get_model(dataset)
     data = get_data(dataset, n_clients, scale, seed=0)
     t0 = time.time()
-    ctl = Controller(cfg, model, data, fleet_for(scenario, n_clients))
+    ctl = build_engine(cfg, model, data, fleet_for(scenario, n_clients))
     metrics = ctl.run()
     metrics["wall_s"] = time.time() - t0
     metrics["dataset"] = dataset

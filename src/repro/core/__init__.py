@@ -4,4 +4,13 @@ from repro.core.selection import select_clients  # noqa: F401
 from repro.core.database import Database, ClientRecord, ResultRecord  # noqa: F401
 from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows  # noqa: F401
 from repro.core.update_store import UpdateStore  # noqa: F401
-from repro.core.controller import Controller, FLConfig  # noqa: F401
+from repro.core.services import FLConfig, FLRuntime, RoundLog  # noqa: F401
+from repro.core.controller import Controller  # noqa: F401
+from repro.core.scheduler import Scheduler, build_engine  # noqa: F401
+from repro.core.protocol import (  # noqa: F401
+    Action, Aggregate, CancelInvocation, ClientJoined, ClientLeft,
+    DatabaseView, EndRun, Event, Hedge, Invoke, InvocationFailed,
+    LoopDrained, ReactivePolicy, ResultLanded, RoundStarted, SetTimer,
+    TimerFired)
+from repro.core.strategies.reactive import (  # noqa: F401
+    LegacyStrategyAdapter, REACTIVE_POLICIES, is_reactive, make_policy)

@@ -1,4 +1,4 @@
-"""The FedLess controller with Apodotiko's modifications (Algorithm 1).
+"""The legacy poll-loop driver (FedLess controller, Algorithm 1).
 
 Train_Global_Model loop:
   1. ``Select_Clients`` via the active strategy (Algorithm 3 for Apodotiko).
@@ -18,394 +18,31 @@ results — sync strategies absorb them via the round timeout, async ones are
 oblivious; the controller checkpoints {global model, client records, scores,
 boosters, round} and can resume from the database (tests/test_controller.py).
 Elasticity: clients may join/leave between rounds (add_clients/remove_clients).
+
+The execution state and round services (invocation, aggregation,
+evaluation) live in :class:`repro.core.services.FLRuntime`; this class
+only contributes the poll loop. The event-driven replacement —
+``repro.core.scheduler.Scheduler`` dispatching typed protocol events to a
+reactive policy — is the default engine (DESIGN.md §7); this loop is kept
+as the golden-trace equivalence oracle (tests/test_golden_trace.py) and
+for ``REPRO_ENGINE=legacy``.
 """
 from __future__ import annotations
 
-import math
-import os
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows
-from repro.core.client import CohortTrainer
-from repro.core.database import ClientRecord, Database, ResultRecord
-from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
-from repro.core.update_store import UpdateStore
-from repro.faas.cost import CostModel
-from repro.faas.events import EventLoop
-from repro.faas.hardware import HardwareProfile
-from repro.faas.platform import FaaSPlatform
-from repro.kernels.ops import RavelSpec
-
-Pytree = Any
-
-UPDATE_STORE_DIRNAME = "update_store"
+# Re-exported for backwards compatibility: these lived here before the
+# scheduler redesign split the services out (PR 3).
+from repro.core.services import (FLConfig, FLRuntime, RoundLog,  # noqa: F401
+                                 UPDATE_STORE_DIRNAME, resolve_engine,
+                                 resolve_update_plane, strategy_config)
 
 
-def resolve_update_plane(mode: str) -> str:
-    """'device' (default) | 'blob' (legacy pytree-blob path).
-    Resolution: explicit config value > ``REPRO_UPDATE_PLANE`` > 'device'."""
-    if mode in (None, "", "auto"):
-        mode = os.environ.get("REPRO_UPDATE_PLANE", "device")
-    if mode not in ("device", "blob"):
-        raise ValueError(f"unknown update plane {mode!r} "
-                         "(expected 'device', 'blob', or 'auto')")
-    return mode
+class Controller(FLRuntime):
+    """Poll-based round driver: blocks in ``EventLoop.run_until`` on the
+    strategy's gating predicate (see module docstring)."""
 
-
-@dataclass
-class FLConfig:
-    """Experiment configuration. Each field maps to a paper quantity
-    (symbol / section noted inline) or a simulator knob.
-
-    Paper defaults (IV-A): 200 clients, 100 per round, E=5 local epochs,
-    batch 10 (MNIST), Adam 1e-3, CR=0.3, rho=0.2, staleness cap 5."""
-
-    # -- population & schedule -------------------------------------------------
-    n_clients: int = 200           # total registered clients (paper IV-A3: 200)
-    clients_per_round: int = 100   # |clients| invoked per round ("100/round")
-    rounds: int = 50               # max global rounds T
-    target_accuracy: Optional[float] = None  # early stop (Alg. 1 line 3)
-    # -- Client_Update (Alg. 2) ------------------------------------------------
-    local_epochs: int = 5          # E, local epochs per invocation
-    batch_size: int = 10           # B, local minibatch size
-    optimizer: str = "adam"        # client-side optimizer (paper: Adam/SGD)
-    lr: float = 1e-3               # client learning rate eta
-    # -- strategy (Alg. 1 / Alg. 3) --------------------------------------------
-    strategy: str = "apodotiko"    # repro.core.strategies.STRATEGIES key
-    concurrency_ratio: float = 0.3  # CR: aggregate at ceil(CR x clientsPerRound)
-    #                                 results (Alg. 1 line 9; Fig. 6 sweeps it)
-    adjustment_rate: float = 0.2   # rho: booster step for the CEF score
-    #                                 (Alg. 3; score = booster x CEF, §III-A)
-    max_staleness: int = 5         # staleness cap: results from at most this
-    #                                 many previous rounds aggregate (§III-B)
-    round_timeout: float = 300.0   # sync-strategy round deadline, sim-seconds
-    # -- FaaS platform simulation (§IV-A) --------------------------------------
-    keep_warm: float = 600.0       # provider keep-warm window before
-    #                                 scale-to-zero, sim-seconds
-    cold_start_s: float = 8.0      # container cold-start penalty, sim-seconds
-    base_step_time: float = 0.05   # 1vCPU-seconds per optimizer step
-    #                                 (hardware profiles scale this, Fig. 1/3)
-    failure_rate: float = 0.0      # P(invocation crash) — fault tolerance
-    # -- aggregation (§III-B) --------------------------------------------------
-    prox_mu: float = 0.01          # mu, FedProx proximal coefficient
-    staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2,
-    #                                 Apodotiko) | "eq1" = t_i/T (FedLesScan)
-    update_plane: str = "auto"     # client-update transport: "device" keeps
-    #                                 updates as rows of one device-resident
-    #                                 [capacity, N] buffer (zero host
-    #                                 round-trips per round); "blob" is the
-    #                                 legacy host-pytree path; "auto" defers
-    #                                 to REPRO_UPDATE_PLANE (default device)
-    # -- harness ---------------------------------------------------------------
-    eval_every: int = 1            # evaluate global model every k rounds
-    seed: int = 0                  # RNG seed: selection, init, platform noise
-    max_sim_time: float = 1e8      # simulated wall-clock budget, seconds
-    checkpoint_dir: Optional[str] = None  # database checkpoint location
-    checkpoint_every: int = 0      # checkpoint every k rounds (0 = off)
-
-
-@dataclass
-class RoundLog:
-    round: int
-    t_start: float
-    t_end: float
-    accuracy: float
-    n_aggregated: int
-    n_stale: int
-    mean_loss: float
-
-
-class Controller:
-    def __init__(self, cfg: FLConfig, model, data, fleet: list[HardwareProfile],
-                 *, db: Optional[Database] = None, init_params: Optional[Pytree] = None):
-        self.cfg = cfg
-        self.model = model
-        self.data = data        # FederatedDataset (repro.data)
-        self.fleet = fleet
-        self.loop = EventLoop()
-        self.platform = FaaSPlatform(
-            keep_warm=cfg.keep_warm, cold_start_s=cfg.cold_start_s,
-            seed=cfg.seed, failure_rate=cfg.failure_rate)
-        self.cost_model = CostModel()
-        scfg = StrategyConfig(
-            clients_per_round=cfg.clients_per_round,
-            concurrency_ratio=cfg.concurrency_ratio,
-            adjustment_rate=cfg.adjustment_rate,
-            max_staleness=cfg.max_staleness,
-            round_timeout=cfg.round_timeout,
-            prox_mu=cfg.prox_mu,
-            staleness_fn=cfg.staleness_fn,
-            seed=cfg.seed)
-        self.strategy: Strategy = build_strategy(cfg.strategy, scfg)
-        self.trainer = CohortTrainer(
-            model, optimizer=cfg.optimizer, lr=cfg.lr,
-            batch_size=cfg.batch_size, prox_mu=self.strategy.prox_mu,
-            scaffold=self.strategy.needs_scaffold, seed=cfg.seed)
-
-        self.db = db or Database()
-        if db is None:
-            for cid in range(cfg.n_clients):
-                self.db.register_client(ClientRecord(
-                    client_id=cid, hardware=fleet[cid].name,
-                    data_cardinality=int(data.n[cid]),
-                    batch_size=cfg.batch_size, local_epochs=cfg.local_epochs))
-        self.hw = {cid: fleet[cid] for cid in range(len(fleet))}
-
-        rng = jax.random.PRNGKey(cfg.seed)
-        if init_params is not None:
-            self.params = init_params
-        elif self.db.global_models:
-            self.params = jax.tree.map(jnp.asarray, self.db.latest_global())
-        else:
-            self.params = model.init(rng)[0]
-        # SCAFFOLD state
-        self.c_global = None
-        self.c_clients: dict[int, Pytree] = {}
-        if self.strategy.needs_scaffold:
-            self.c_global = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
-                                         self.params)
-        self.history: list[RoundLog] = []
-        self._eval_fn = jax.jit(model.accuracy)
-        self._eval_scan = None      # (jitted fn, padded arrays) built lazily
-        self._completed_this_round: set[int] = set()
-
-        # -- update plane: device-resident flat-buffer client updates ------
-        self.update_plane = resolve_update_plane(cfg.update_plane)
-        self.spec = RavelSpec(self.params)
-        self.store: Optional[UpdateStore] = None
-        self.update_host_bytes = 0  # bytes moved host<->device for updates
-        if db is not None:
-            self._check_plane_compatible(db)
-        if self.update_plane == "device":
-            self.store = UpdateStore(
-                self.spec.n_params,
-                capacity=max(cfg.clients_per_round, 1))
-            if db is not None and cfg.checkpoint_dir:
-                self._rehydrate_store()
-
-    def _check_plane_compatible(self, db: Database) -> None:
-        """A checkpoint written under one update plane cannot feed pending
-        results to the other: blob records carry update_row=-1 (which would
-        silently index the last buffer row) and device records carry no
-        blob. Switching planes across a resume is fine once nothing is
-        in flight."""
-        saved = db.meta.get("update_plane")
-        if saved is None or saved == self.update_plane:
-            return
-        if any(not r.aggregated for r in db.results):
-            raise ValueError(
-                f"checkpoint was written with update_plane={saved!r} and "
-                f"has un-aggregated results; resuming with "
-                f"update_plane={self.update_plane!r} would corrupt them — "
-                f"set REPRO_UPDATE_PLANE={saved} (or cfg.update_plane) to "
-                f"resume, or aggregate before switching planes")
-
-    def _rehydrate_store(self) -> None:
-        """Resume path: reload the live un-aggregated update rows saved at
-        checkpoint time, at their original ids so ResultRecord handles in
-        the restored database stay valid."""
-        from repro.checkpoint import restore_update_store
-        d = os.path.join(self.cfg.checkpoint_dir, UPDATE_STORE_DIRNAME)
-        if not os.path.isdir(d):
-            return
-        ids, rows, n_params = restore_update_store(d)
-        if n_params != self.spec.n_params:
-            raise ValueError(
-                f"update-store checkpoint has N={n_params} params but the "
-                f"model has N={self.spec.n_params}")
-        self.store.write_at(ids, rows)
-
-    # ---------------------------------------------------------------- elastic
-    def add_clients(self, records: list[ClientRecord],
-                    profiles: list[HardwareProfile]) -> None:
-        for rec, hw in zip(records, profiles):
-            self.db.register_client(rec)
-            self.hw[rec.client_id] = hw
-            self.fleet.append(hw)
-
-    def remove_clients(self, client_ids: list[int]) -> None:
-        for cid in client_ids:
-            self.db.clients.pop(cid, None)
-
-    # ------------------------------------------------------------------ round
-    def _invoke_round(self, round_: int, selection: list[int]) -> None:
-        cfg = self.cfg
-        n_i = self.data.n[selection]
-        steps = np.ceil(n_i / cfg.batch_size).astype(np.int64) * cfg.local_epochs
-        steps = np.maximum(steps, 1)
-
-        # real local training, cohort-vectorized (global model of *this* round)
-        cg = self.c_global
-        ci = None
-        if self.strategy.needs_scaffold:
-            zeros = lambda p: jnp.zeros_like(p, jnp.float32)
-            ci_list = [self.c_clients.get(cid) or jax.tree.map(zeros, self.params)
-                       for cid in selection]
-            ci = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ci_list)
-        device = self.update_plane == "device"
-        out, ci_new, losses = self.trainer.train_cohort(
-            self.params, self.data.X[selection], self.data.y[selection],
-            n_i, steps, cg, ci,
-            update_sink=self.store if device else None)
-        if device:
-            # trained models never left the device: the jitted cohort fn
-            # scattered them into the store's persistent row buffer; only
-            # the [K] row handles come back
-            row_ids = out
-        else:
-            out = jax.tree.map(np.asarray, out)  # host copies
-            self.update_host_bytes += sum(
-                l.nbytes for l in jax.tree.leaves(out))
-        if self.strategy.needs_scaffold:
-            self._apply_scaffold_updates(selection, ci_new)
-
-        for k, cid in enumerate(selection):
-            rec = self.platform.invoke(cid, round_, self.loop.now,
-                                       float(steps[k]), self.hw[cid],
-                                       cfg.base_step_time)
-            self.db.mark_running(cid, round_)
-            update_k = (int(row_ids[k]) if device
-                        else jax.tree.map(lambda x: x[k], out))
-            self.loop.schedule(rec.duration, self._completion_cb(
-                cid, round_, rec, update_k, int(n_i[k]), float(losses[k])))
-
-    def _completion_cb(self, cid, round_, rec, update, n_samples, loss):
-        device = self.update_plane == "device"
-
-        def cb():
-            if rec.failed:
-                self.db.mark_failed(cid)
-                if device:
-                    self.store.free([update])  # recycle the orphaned row
-                return
-            train_dur = rec.duration  # includes startup/load/upload
-            self.db.mark_complete(cid, train_dur)
-            result = ResultRecord(client_id=cid, round=round_,
-                                  n_samples=n_samples,
-                                  train_duration=train_dur,
-                                  t_available=self.loop.now)
-            if device:
-                self.db.put_update_row(result, update)
-            else:
-                self.db.put_update(result, update)
-            self._completed_this_round.add(cid)
-        return cb
-
-    def _apply_scaffold_updates(self, selection, ci_new) -> None:
-        old = [self.c_clients.get(cid) for cid in selection]
-        new_list = [jax.tree.map(lambda x: x[k], ci_new)
-                    for k in range(len(selection))]
-        # c <- c + sum(c_i' - c_i) / N_total
-        n_total = max(len(self.db.clients), 1)
-        delta = None
-        for cid, n, o in zip(selection, new_list, old):
-            if o is None:
-                o = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), n)
-            d = jax.tree.map(lambda a, b: a - b, n, o)
-            delta = d if delta is None else jax.tree.map(jnp.add, delta, d)
-            self.c_clients[cid] = n
-        if delta is not None:
-            self.c_global = jax.tree.map(
-                lambda c, d: c + d / n_total, self.c_global, delta)
-
-    def _aggregate(self, round_: int) -> tuple[int, int, float]:
-        strat = self.strategy
-        pending = [r for r in self.db.pending_results(self.cfg.max_staleness, round_)
-                   if strat.usable(r, round_)]
-        if not pending:
-            return 0, 0, float("nan")
-        weights = np.array([strat.result_weight(r, round_) for r in pending],
-                           np.float64)
-        total = weights.sum()
-        if not np.isfinite(total) or total <= 0:
-            # e.g. Eq. 1 zeroes round-0 updates at T=1: fall back to
-            # cardinality weighting so the aggregation stays well-defined
-            weights = np.array([r.n_samples for r in pending], np.float64)
-            total = weights.sum() or 1.0
-        weights = (weights / total).astype(np.float32)
-        out_dtype = jax.tree.leaves(self.params)[0].dtype
-        if self.update_plane == "device":
-            # row-index fast path: gather rows out of the persistent device
-            # buffer, one kernel dispatch, one unravel — no host traffic
-            rows = [r.update_row for r in pending]
-            assert all(r >= 0 for r in rows), \
-                "pending result without a row handle on the device plane"
-            self.params = weighted_aggregate_rows(
-                self.store.buffer, rows, weights, self.spec,
-                out_dtype=out_dtype)
-            self.store.free(rows)
-        else:
-            updates = [jax.tree.map(jnp.asarray, self.db.blobs[r.update_key])
-                       for r in pending]
-            self.update_host_bytes += sum(
-                l.nbytes for u in updates for l in jax.tree.leaves(u))
-            self.params = weighted_aggregate(updates, weights,
-                                             out_dtype=out_dtype)
-        n_stale = sum(1 for r in pending if r.round < round_)
-        mean_dur = float(np.mean([r.train_duration for r in pending]))
-        self.db.mark_aggregated(pending)
-        # prune: results too stale to ever be usable again
-        drop = [r for r in self.db.results
-                if not r.aggregated and round_ - r.round >= self.cfg.max_staleness]
-        if self.update_plane == "device":
-            self.store.free([r.update_row for r in drop if r.update_row >= 0])
-        self.db.mark_aggregated(drop)
-        return len(pending), n_stale, mean_dur
-
-    def _build_eval_scan(self):
-        """One jitted masked scan over the padded eval set: a single device
-        dispatch and a single scalar host transfer per evaluation, instead
-        of a Python loop of per-256-batch jit calls each synchronizing."""
-        xs = np.asarray(self.data.eval_x)
-        ys = np.asarray(self.data.eval_y)
-        n, bs = len(xs), 256
-        nb = max(1, math.ceil(n / bs))
-        pad = nb * bs - n
-        if pad:
-            xs = np.concatenate([xs, np.repeat(xs[:1], pad, axis=0)])
-            ys = np.concatenate([ys, np.repeat(ys[:1], pad, axis=0)])
-        mask = (np.arange(nb * bs) < n).reshape(nb, bs)
-        batches = (jnp.asarray(xs.reshape((nb, bs) + xs.shape[1:])),
-                   jnp.asarray(ys.reshape((nb, bs) + ys.shape[1:])),
-                   jnp.asarray(mask))
-        model = self.model
-
-        @jax.jit
-        def run(params, X, y, m):
-            def body(correct, inp):
-                xb, yb, mb = inp
-                pred = jnp.argmax(model.predict(params, xb), axis=-1)
-                return correct + jnp.sum((pred == yb) & mb), None
-            correct, _ = jax.lax.scan(body, jnp.zeros((), jnp.int32),
-                                      (X, y, m))
-            return correct.astype(jnp.float32) / n
-
-        return run, batches
-
-    def _evaluate(self) -> float:
-        if not hasattr(self.model, "predict"):
-            # models exposing only ``accuracy`` (e.g. LM adapters with
-            # internal target masking) keep the legacy per-batch loop;
-            # batches are weighted by size so both paths report the same
-            # statistic (exact sample mean) on ragged tails
-            xs, ys = self.data.eval_x, self.data.eval_y
-            total, bs = 0.0, 256
-            for i in range(0, len(xs), bs):
-                xb, yb = xs[i:i + bs], ys[i:i + bs]
-                total += float(self._eval_fn(
-                    self.params, {"x": jnp.asarray(xb),
-                                  "y": jnp.asarray(yb)})) * len(xb)
-            return total / max(len(xs), 1)
-        if self._eval_scan is None:
-            self._eval_scan = self._build_eval_scan()
-        run, batches = self._eval_scan
-        return float(run(self.params, *batches))
+    engine_name = "controller"
 
     # -------------------------------------------------------------------- run
     def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
@@ -414,6 +51,7 @@ class Controller:
         acc = 0.0
         while round_ < cfg.rounds and self.loop.now < cfg.max_sim_time:
             t0 = self.loop.now
+            self._t0 = t0
             selection = strat.select(self.db, round_)
             if not selection:
                 # every client busy: advance until something completes
@@ -422,8 +60,7 @@ class Controller:
                                     for c in self.db.clients.values())):
                     break
                 continue
-            self._completed_this_round = set()
-            self._invoke_round(round_, selection)
+            self.invoke_round(round_, selection)
 
             if strat.is_async:
                 need = strat.results_needed()
@@ -443,13 +80,13 @@ class Controller:
                                 self.db.pending_results(cfg.max_staleness, round_)),
                     max_time=cfg.max_sim_time)
 
-            n_agg, n_stale, _ = self._aggregate(round_)
+            n_agg, n_stale, _ = self.aggregate_round(round_)
             if n_agg == 0:
                 round_ += 1
                 self.db.round = round_
                 continue
             if cfg.eval_every and round_ % cfg.eval_every == 0:
-                acc = self._evaluate()
+                acc = self.evaluate()
             log = RoundLog(round=round_, t_start=t0, t_end=self.loop.now,
                            accuracy=acc, n_aggregated=n_agg, n_stale=n_stale,
                            mean_loss=0.0)
@@ -463,53 +100,3 @@ class Controller:
             if cfg.target_accuracy and acc >= cfg.target_accuracy:
                 break
         return self.metrics()
-
-    # ---------------------------------------------------------------- metrics
-    def metrics(self) -> dict:
-        inv = self.platform.invocations
-        cost = self.cost_model.total(inv, lambda cid: self.hw[cid])
-        counts = self.platform.invocation_counts()
-        count_arr = [counts.get(cid, 0) for cid in self.db.clients]
-        return {
-            "strategy": self.strategy.name,
-            "update_plane": self.update_plane,
-            "update_host_bytes": int(self.update_host_bytes),
-            "rounds": len(self.history),
-            "final_accuracy": self.history[-1].accuracy if self.history else 0.0,
-            "total_time": self.loop.now,
-            "total_cost_usd": cost,
-            "cold_start_ratio": self.platform.cold_start_ratio(),
-            "n_invocations": len(inv),
-            "selection_bias": (max(count_arr) - min(count_arr)) if count_arr else 0,
-            "invocation_counts": count_arr,
-            "history": [(l.t_end, l.round, l.accuracy) for l in self.history],
-        }
-
-    def time_to_accuracy(self, target: float) -> Optional[float]:
-        for l in self.history:
-            if l.accuracy >= target:
-                return l.t_end
-        return None
-
-    # ------------------------------------------------------------- checkpoint
-    def checkpoint(self) -> None:
-        if not self.cfg.checkpoint_dir:
-            return
-        self.db.meta["update_plane"] = self.update_plane
-        self.db.put_global_model(self.db.round,
-                                 jax.tree.map(np.asarray, self.params))
-        self.db.save(self.cfg.checkpoint_dir)
-        if self.update_plane == "device":
-            # persist the live un-aggregated rows so the async in-flight
-            # state survives a crash bit-exactly (handles stay valid)
-            from repro.checkpoint import save_update_store
-            ids = [r.update_row for r in self.db.results
-                   if not r.aggregated and r.update_row >= 0]
-            save_update_store(
-                self.store, ids,
-                os.path.join(self.cfg.checkpoint_dir, UPDATE_STORE_DIRNAME))
-
-    @classmethod
-    def resume(cls, cfg: FLConfig, model, data, fleet) -> "Controller":
-        db = Database.load(cfg.checkpoint_dir)
-        return cls(cfg, model, data, fleet, db=db)

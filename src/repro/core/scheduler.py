@@ -1,0 +1,207 @@
+"""Event-driven round scheduler: the reactive replacement for the
+poll-based ``Controller.run`` loop (DESIGN.md §7).
+
+The ``Scheduler`` owns the same :class:`~repro.core.services.FLRuntime`
+substrate as the legacy controller but drives it reactively: every
+simulation occurrence — an invocation completing or failing, a timer
+elapsing, the platform quiescing — is dispatched as a typed protocol
+event to a :class:`~repro.core.protocol.ReactivePolicy`, and the returned
+actions (``Invoke``/``Aggregate``/``SetTimer``/``CancelInvocation``/
+``Hedge``/``EndRun``) are executed against the runtime services. All six
+legacy strategies run unchanged through ``LegacyStrategyAdapter`` with
+bit-identical round traces (tests/test_golden_trace.py); the natively
+reactive policies (``apodotiko-hedge``, ``apodotiko-adaptive``) express
+mid-round behaviour the poll loop could not.
+
+Timers live in a separate min-heap, not the platform event heap, so a
+policy's armed-but-unreached deadlines never perturb simulated time: they
+are dropped when their round closes, and — for legacy-compat policies
+(``fire_timers_on_drain=False``) — never fire once the platform has no
+future events, exactly like a drained ``run_until`` that never reached
+its ``max_time``.
+
+Entry points::
+
+    sched = Scheduler(cfg, model, data, fleet)      # cfg.strategy names a
+    metrics = sched.run()                           # legacy strategy or a
+                                                    # reactive policy
+
+    ctl = build_engine(cfg, model, data, fleet)     # engine-aware factory
+                                                    # (cfg.engine / REPRO_ENGINE)
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+from repro.core.controller import Controller
+from repro.core.database import Database
+from repro.core.protocol import (Action, Aggregate, CancelInvocation,
+                                 DatabaseView, EndRun, Event, Hedge, Invoke,
+                                 LoopDrained, ReactivePolicy, RoundStarted,
+                                 SetTimer, TimerFired)
+from repro.core.services import (FLConfig, FLRuntime, RoundLog, resolve_engine,
+                                 strategy_config)
+from repro.core.strategies.reactive import is_reactive, make_policy
+
+
+class Scheduler(FLRuntime):
+    """Reactive round driver: dispatches protocol events to a policy and
+    executes its actions (see module docstring)."""
+
+    engine_name = "scheduler"
+
+    def __init__(self, cfg: FLConfig, model, data, fleet, *,
+                 policy: Optional[ReactivePolicy] = None,
+                 db: Optional[Database] = None, init_params=None):
+        if policy is None:
+            policy = make_policy(cfg.strategy, strategy_config(cfg))
+        self.policy = policy
+        super().__init__(cfg, model, data, fleet, db=db,
+                         init_params=init_params, strategy=policy.strategy)
+        self.view = DatabaseView(self)
+        self._timers: list[tuple] = []   # (time, seq, round, tag)
+        self._timer_seq = itertools.count()
+        self._t0 = self.loop.now
+        self._acc = 0.0
+        self._done = False
+        self._invoked_this_round = False
+        self._progress: Optional[Callable[[RoundLog], None]] = None
+        self.n_events = 0               # protocol events dispatched
+
+    # -------------------------------------------------------------------- run
+    def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
+        cfg = self.cfg
+        self._progress = progress
+        self._done = False
+        self._acc = 0.0
+        if self.db.round >= cfg.rounds or self.loop.now >= cfg.max_sim_time:
+            return self.metrics()
+        self._open_round()
+        drained = 0
+        while not self._done:
+            if self._pump_one():
+                drained = 0
+                continue
+            drained += 1
+            if drained > 1:
+                break               # policy made no progress on drain
+            self._dispatch(LoopDrained(t=self.loop.now))
+        return self.metrics()
+
+    # ------------------------------------------------------------------- pump
+    def _peek_timer(self) -> Optional[float]:
+        while self._timers and self._timers[0][2] < self.db.round:
+            heapq.heappop(self._timers)     # stale: its round closed
+        return self._timers[0][0] if self._timers else None
+
+    def _pump_one(self) -> bool:
+        """Advance simulated time by one occurrence — the earliest of the
+        next platform event and the next timer (events win ties, matching
+        the poll loop's pop-then-check-deadline order). Returns False when
+        quiescent."""
+        t_ev = self.loop.peek()
+        t_tm = self._peek_timer()
+        fire_timer = t_tm is not None and (
+            (t_ev is None and self.policy.fire_timers_on_drain)
+            or (t_ev is not None and t_tm < t_ev))
+        if fire_timer:
+            t, _, round_, tag = heapq.heappop(self._timers)
+            # the clock may move backward here: a "budget" barrier armed
+            # past max_sim_time replays run_until's ``now = max_time``
+            self.loop.now = t
+            self._dispatch(TimerFired(t=t, round=round_, tag=tag))
+            return True
+        if t_ev is None:
+            return False
+        return self.loop.step()     # completion callbacks _emit protocol events
+
+    # --------------------------------------------------------------- dispatch
+    def _emit(self, event: Event) -> None:
+        self._dispatch(event)
+
+    def _dispatch(self, event: Event) -> None:
+        self.n_events += 1
+        actions = self.policy.on_event(event, self.view)
+        for action in actions or ():
+            self._execute(action)
+
+    def _execute(self, action: Action) -> None:
+        if isinstance(action, Invoke):
+            selection = [c for c in action.clients if c in self.db.clients]
+            if selection:
+                self.invoke_round(self.db.round, selection,
+                                  reset_completed=not self._invoked_this_round)
+                self._invoked_this_round = True
+        elif isinstance(action, Hedge):
+            self.hedge_invocations(list(action.clients))
+        elif isinstance(action, CancelInvocation):
+            self.cancel_client(action.client_id)
+        elif isinstance(action, SetTimer):
+            heapq.heappush(self._timers,
+                           (self.loop.now + action.delay,
+                            next(self._timer_seq), self.db.round, action.tag))
+        elif isinstance(action, Aggregate):
+            self._close_round()
+        elif isinstance(action, EndRun):
+            self._done = True
+        else:
+            raise TypeError(f"unknown action {action!r}")
+
+    # ------------------------------------------------------------- round flow
+    def _open_round(self) -> None:
+        self._t0 = self.loop.now
+        self._invoked_this_round = False
+        self._dispatch(RoundStarted(t=self.loop.now, round=self.db.round))
+
+    def _close_round(self) -> None:
+        """Execute ``Aggregate``: aggregate, evaluate, log, advance the
+        round, and either terminate or dispatch the next ``RoundStarted``
+        (the legacy loop's tail, round for round)."""
+        cfg = self.cfg
+        round_ = self.db.round
+        n_agg, n_stale, _ = self.aggregate_round(round_)
+        if n_agg:
+            if cfg.eval_every and round_ % cfg.eval_every == 0:
+                self._acc = self.evaluate()
+            log = RoundLog(round=round_, t_start=self._t0,
+                           t_end=self.loop.now, accuracy=self._acc,
+                           n_aggregated=n_agg, n_stale=n_stale,
+                           mean_loss=0.0)
+            self.history.append(log)
+            if self._progress:
+                self._progress(log)
+        self.db.round = round_ + 1
+        if n_agg:
+            if cfg.checkpoint_every and self.db.round % cfg.checkpoint_every == 0:
+                self.checkpoint()
+            if cfg.target_accuracy and self._acc >= cfg.target_accuracy:
+                self._done = True
+                return
+        if self.db.round >= cfg.rounds or self.loop.now >= cfg.max_sim_time:
+            self._done = True
+            return
+        self._open_round()
+
+    # ---------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        m = super().metrics()
+        m["strategy"] = self.policy.name
+        m["n_events"] = self.n_events
+        m.update(self.policy.metrics())
+        return m
+
+
+def build_engine(cfg: FLConfig, model, data, fleet, **kwargs):
+    """Engine-aware factory: ``cfg.engine`` (> ``REPRO_ENGINE`` >
+    'scheduler') picks the round driver. Reactive strategy names require
+    the scheduler; everything else runs on either."""
+    engine = resolve_engine(cfg.engine)
+    if engine == "legacy":
+        if is_reactive(cfg.strategy):
+            raise ValueError(
+                f"strategy {cfg.strategy!r} is a reactive policy; the "
+                f"legacy poll loop cannot drive it — use engine='scheduler'")
+        return Controller(cfg, model, data, fleet, **kwargs)
+    return Scheduler(cfg, model, data, fleet, **kwargs)

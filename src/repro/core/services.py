@@ -1,0 +1,671 @@
+"""Shared FL execution substrate: config, state, and round services.
+
+``controller.py``'s 515-line monolith is decomposed here (DESIGN.md §7):
+:class:`FLRuntime` owns the execution state (model params, database,
+platform, event loop, update store, SCAFFOLD variates) and exposes the
+three round services both drivers share —
+
+  * **invocation** (``invoke_round`` / ``hedge_invocations`` /
+    ``cancel_client``): cohort-vectorized Client_Update, simulated FaaS
+    invocation, completion/failure callbacks, and the in-flight registry
+    with refcounted update payloads (hedge siblings share one trained
+    update; the row/blob is freed exactly once, by whichever invocation
+    ends last without landing it);
+  * **aggregation** (``aggregate_round``): staleness x cardinality
+    weighting (Eq. 2), device-row or blob transport, stale pruning;
+  * **evaluation** (``evaluate``): the jitted masked-scan eval.
+
+Drivers differ only in *when* they call the services: ``Controller``
+keeps the legacy poll loop (Algorithm 1 verbatim); ``Scheduler``
+dispatches typed protocol events to a reactive policy. Completions and
+membership changes flow through the ``_emit`` hook — a no-op for the
+legacy loop, the protocol dispatch for the scheduler.
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows
+from repro.core.client import CohortTrainer
+from repro.core.database import ClientRecord, Database, ResultRecord
+from repro.core.protocol import (ClientJoined, ClientLeft, Event,
+                                 InvocationFailed, ResultLanded)
+from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
+from repro.core.update_store import UpdateStore
+from repro.faas.cost import CostModel
+from repro.faas.events import EventLoop
+from repro.faas.hardware import HardwareProfile
+from repro.faas.platform import FaaSPlatform, InvocationRecord
+from repro.kernels.ops import RavelSpec
+
+Pytree = Any
+
+UPDATE_STORE_DIRNAME = "update_store"
+
+
+def resolve_update_plane(mode: str) -> str:
+    """'device' (default) | 'blob' (legacy pytree-blob path).
+    Resolution: explicit config value > ``REPRO_UPDATE_PLANE`` > 'device'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_UPDATE_PLANE", "device")
+    if mode not in ("device", "blob"):
+        raise ValueError(f"unknown update plane {mode!r} "
+                         "(expected 'device', 'blob', or 'auto')")
+    return mode
+
+
+def resolve_engine(mode: str) -> str:
+    """'scheduler' (default: event-driven reactive protocol) | 'legacy'
+    (the pre-redesign poll loop, kept as the equivalence oracle).
+    Resolution: explicit config value > ``REPRO_ENGINE`` > 'scheduler'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_ENGINE", "scheduler")
+    if mode not in ("scheduler", "legacy"):
+        raise ValueError(f"unknown engine {mode!r} "
+                         "(expected 'scheduler', 'legacy', or 'auto')")
+    return mode
+
+
+@dataclass
+class FLConfig:
+    """Experiment configuration. Each field maps to a paper quantity
+    (symbol / section noted inline) or a simulator knob.
+
+    Paper defaults (IV-A): 200 clients, 100 per round, E=5 local epochs,
+    batch 10 (MNIST), Adam 1e-3, CR=0.3, rho=0.2, staleness cap 5."""
+
+    # -- population & schedule -------------------------------------------------
+    n_clients: int = 200           # total registered clients (paper IV-A3: 200)
+    clients_per_round: int = 100   # |clients| invoked per round ("100/round")
+    rounds: int = 50               # max global rounds T
+    target_accuracy: Optional[float] = None  # early stop (Alg. 1 line 3)
+    # -- Client_Update (Alg. 2) ------------------------------------------------
+    local_epochs: int = 5          # E, local epochs per invocation
+    batch_size: int = 10           # B, local minibatch size
+    optimizer: str = "adam"        # client-side optimizer (paper: Adam/SGD)
+    lr: float = 1e-3               # client learning rate eta
+    # -- strategy (Alg. 1 / Alg. 3) --------------------------------------------
+    strategy: str = "apodotiko"    # STRATEGIES key or a reactive policy name
+    #                                 (repro.core.strategies.reactive)
+    concurrency_ratio: float = 0.3  # CR: aggregate at ceil(CR x clientsPerRound)
+    #                                 results (Alg. 1 line 9; Fig. 6 sweeps it)
+    adjustment_rate: float = 0.2   # rho: booster step for the CEF score
+    #                                 (Alg. 3; score = booster x CEF, §III-A)
+    max_staleness: int = 5         # staleness cap: results from at most this
+    #                                 many previous rounds aggregate (§III-B)
+    round_timeout: float = 300.0   # sync-strategy round deadline, sim-seconds
+    hedge_fraction: float = 0.5    # apodotiko-hedge: fraction of outstanding
+    #                                 invocations speculatively re-invoked at
+    #                                 the CR gate (slowest first)
+    # -- FaaS platform simulation (§IV-A) --------------------------------------
+    keep_warm: float = 600.0       # provider keep-warm window before
+    #                                 scale-to-zero, sim-seconds
+    cold_start_s: float = 8.0      # container cold-start penalty, sim-seconds
+    base_step_time: float = 0.05   # 1vCPU-seconds per optimizer step
+    #                                 (hardware profiles scale this, Fig. 1/3)
+    failure_rate: float = 0.0      # P(invocation crash) — fault tolerance
+    # -- aggregation (§III-B) --------------------------------------------------
+    prox_mu: float = 0.01          # mu, FedProx proximal coefficient
+    staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2,
+    #                                 Apodotiko) | "eq1" = t_i/T (FedLesScan)
+    update_plane: str = "auto"     # client-update transport: "device" keeps
+    #                                 updates as rows of one device-resident
+    #                                 [capacity, N] buffer (zero host
+    #                                 round-trips per round); "blob" is the
+    #                                 legacy host-pytree path; "auto" defers
+    #                                 to REPRO_UPDATE_PLANE (default device)
+    engine: str = "auto"           # round driver: "scheduler" (event-driven
+    #                                 reactive protocol, the default) |
+    #                                 "legacy" (pre-redesign poll loop);
+    #                                 "auto" defers to REPRO_ENGINE
+    # -- harness ---------------------------------------------------------------
+    eval_every: int = 1            # evaluate global model every k rounds
+    seed: int = 0                  # RNG seed: selection, init, platform noise
+    max_sim_time: float = 1e8      # simulated wall-clock budget, seconds
+    checkpoint_dir: Optional[str] = None  # database checkpoint location
+    checkpoint_every: int = 0      # checkpoint every k rounds (0 = off)
+
+
+def strategy_config(cfg: FLConfig) -> StrategyConfig:
+    """The strategy-facing slice of ``FLConfig``."""
+    return StrategyConfig(
+        clients_per_round=cfg.clients_per_round,
+        concurrency_ratio=cfg.concurrency_ratio,
+        adjustment_rate=cfg.adjustment_rate,
+        max_staleness=cfg.max_staleness,
+        round_timeout=cfg.round_timeout,
+        prox_mu=cfg.prox_mu,
+        staleness_fn=cfg.staleness_fn,
+        hedge_fraction=cfg.hedge_fraction,
+        seed=cfg.seed)
+
+
+@dataclass
+class RoundLog:
+    round: int
+    t_start: float
+    t_end: float
+    accuracy: float
+    n_aggregated: int
+    n_stale: int
+    mean_loss: float
+
+
+@dataclass
+class _Payload:
+    """One trained client update, shared by an invocation and its hedge
+    siblings. Freed exactly once: either ownership passes to the landed
+    ``ResultRecord`` (``landed``) or the last reference releases it."""
+
+    row: int = -1          # UpdateStore row handle (device plane)
+    blob: Any = None       # host pytree (blob plane)
+    refs: int = 1
+    landed: bool = False
+
+
+@dataclass
+class Inflight:
+    """Registry entry for one live invocation (the satellite fix for
+    ``remove_clients`` and the substrate for Hedge/CancelInvocation)."""
+
+    client_id: int
+    round: int
+    steps: float
+    t_invoked: float
+    rec: InvocationRecord
+    payload: _Payload
+    n_samples: int
+    loss: float
+    is_hedge: bool = False
+    done: bool = False
+    event: Any = None      # the loop completion event (cancellable)
+
+
+class FLRuntime:
+    """State + round services shared by the legacy ``Controller`` loop and
+    the event-driven ``Scheduler`` (see module docstring)."""
+
+    engine_name = "runtime"
+
+    def __init__(self, cfg: FLConfig, model, data, fleet: list[HardwareProfile],
+                 *, db: Optional[Database] = None,
+                 init_params: Optional[Pytree] = None,
+                 strategy: Optional[Strategy] = None):
+        self.cfg = cfg
+        self.model = model
+        self.data = data        # FederatedDataset (repro.data)
+        self.fleet = fleet
+        self.loop = EventLoop()
+        self.platform = FaaSPlatform(
+            keep_warm=cfg.keep_warm, cold_start_s=cfg.cold_start_s,
+            seed=cfg.seed, failure_rate=cfg.failure_rate)
+        self.cost_model = CostModel()
+        self.strategy: Strategy = (
+            strategy if strategy is not None
+            else build_strategy(cfg.strategy, strategy_config(cfg)))
+        self.trainer = CohortTrainer(
+            model, optimizer=cfg.optimizer, lr=cfg.lr,
+            batch_size=cfg.batch_size, prox_mu=self.strategy.prox_mu,
+            scaffold=self.strategy.needs_scaffold, seed=cfg.seed)
+
+        self.db = db or Database()
+        if db is None:
+            for cid in range(cfg.n_clients):
+                self.db.register_client(ClientRecord(
+                    client_id=cid, hardware=fleet[cid].name,
+                    data_cardinality=int(data.n[cid]),
+                    batch_size=cfg.batch_size, local_epochs=cfg.local_epochs))
+        self.hw = {cid: fleet[cid] for cid in range(len(fleet))}
+        # never pruned: cost/metrics must resolve hardware for historical
+        # invocations of since-removed clients
+        self._hw_history = dict(self.hw)
+
+        rng = jax.random.PRNGKey(cfg.seed)
+        if init_params is not None:
+            self.params = init_params
+        elif self.db.global_models:
+            self.params = jax.tree.map(jnp.asarray, self.db.latest_global())
+        else:
+            self.params = model.init(rng)[0]
+        # SCAFFOLD state
+        self.c_global = None
+        self.c_clients: dict[int, Pytree] = {}
+        if self.strategy.needs_scaffold:
+            self.c_global = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                         self.params)
+        self.history: list[RoundLog] = []
+        self._eval_fn = jax.jit(model.accuracy)
+        self._eval_scan = None      # (jitted fn, padded arrays) built lazily
+        self._completed_this_round: set[int] = set()
+        self.inflight: dict[int, list[Inflight]] = {}
+        self.n_hedges = 0           # speculative re-invocations issued
+        self.n_hedge_wins = 0       # hedges that beat their original
+        self.n_cancelled = 0        # invocations cancelled (race/explicit)
+
+        # -- update plane: device-resident flat-buffer client updates ------
+        self.update_plane = resolve_update_plane(cfg.update_plane)
+        self.spec = RavelSpec(self.params)
+        self.store: Optional[UpdateStore] = None
+        self.update_host_bytes = 0  # bytes moved host<->device for updates
+        if db is not None:
+            self._check_plane_compatible(db)
+        if self.update_plane == "device":
+            self.store = UpdateStore(
+                self.spec.n_params,
+                capacity=max(cfg.clients_per_round, 1))
+            if db is not None and cfg.checkpoint_dir:
+                self._rehydrate_store()
+
+    # -- driver view contract (protocol.DatabaseView reads these) ------------
+    @property
+    def current_round(self) -> int:
+        return self.db.round
+
+    @property
+    def round_start(self) -> float:
+        return getattr(self, "_t0", 0.0)
+
+    def _check_plane_compatible(self, db: Database) -> None:
+        """A checkpoint written under one update plane cannot feed pending
+        results to the other: blob records carry update_row=-1 (which would
+        silently index the last buffer row) and device records carry no
+        blob. Switching planes across a resume is fine once nothing is
+        in flight."""
+        saved = db.meta.get("update_plane")
+        if saved is None or saved == self.update_plane:
+            return
+        if any(not r.aggregated for r in db.results):
+            raise ValueError(
+                f"checkpoint was written with update_plane={saved!r} and "
+                f"has un-aggregated results; resuming with "
+                f"update_plane={self.update_plane!r} would corrupt them — "
+                f"set REPRO_UPDATE_PLANE={saved} (or cfg.update_plane) to "
+                f"resume, or aggregate before switching planes")
+
+    def _rehydrate_store(self) -> None:
+        """Resume path: reload the live un-aggregated update rows saved at
+        checkpoint time, at their original ids so ResultRecord handles in
+        the restored database stay valid."""
+        from repro.checkpoint import restore_update_store
+        d = os.path.join(self.cfg.checkpoint_dir, UPDATE_STORE_DIRNAME)
+        if not os.path.isdir(d):
+            return
+        ids, rows, n_params = restore_update_store(d)
+        if n_params != self.spec.n_params:
+            raise ValueError(
+                f"update-store checkpoint has N={n_params} params but the "
+                f"model has N={self.spec.n_params}")
+        self.store.write_at(ids, rows)
+
+    # ---------------------------------------------------------------- elastic
+    def add_clients(self, records: list[ClientRecord],
+                    profiles: list[HardwareProfile]) -> None:
+        for rec, hw in zip(records, profiles):
+            self.db.register_client(rec)
+            self.hw[rec.client_id] = hw
+            self._hw_history[rec.client_id] = hw
+            self.fleet.append(hw)
+            self._emit(ClientJoined(t=self.loop.now, client_id=rec.client_id))
+
+    def remove_clients(self, client_ids: list[int]) -> None:
+        """Deregister clients mid-run: cancel their in-flight invocations
+        (releasing update rows/blobs), drop their hardware profile from
+        ``hw`` and ``fleet``, and emit ``ClientLeft`` through the
+        protocol."""
+        for cid in client_ids:
+            for inv in list(self.inflight.get(cid, ())):
+                self._cancel_inflight(inv)
+            self.inflight.pop(cid, None)
+            if self.db.clients.pop(cid, None) is None:
+                continue
+            self.c_clients.pop(cid, None)
+            hw = self.hw.pop(cid, None)
+            if hw is not None:
+                try:
+                    self.fleet.remove(hw)
+                except ValueError:
+                    pass
+            self._emit(ClientLeft(t=self.loop.now, client_id=cid))
+
+    # -------------------------------------------------- protocol emit hook
+    def _emit(self, event: Event) -> None:
+        """Protocol dispatch hook: no-op for the legacy loop; the
+        ``Scheduler`` overrides this to hand the event to its policy."""
+
+    # -------------------------------------------------- invocation service
+    def invoke_round(self, round_: int, selection: list[int],
+                     *, reset_completed: bool = True) -> None:
+        """Train the selected cohort against the current global model and
+        start their simulated invocations. ``reset_completed`` clears the
+        sync gating set — the first invocation of a round does, follow-up
+        reinforcements must not."""
+        cfg = self.cfg
+        if reset_completed:
+            self._completed_this_round = set()
+        n_i = self.data.n[selection]
+        steps = np.ceil(n_i / cfg.batch_size).astype(np.int64) * cfg.local_epochs
+        steps = np.maximum(steps, 1)
+
+        # real local training, cohort-vectorized (global model of *this* round)
+        cg = self.c_global
+        ci = None
+        if self.strategy.needs_scaffold:
+            zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+            ci_list = [self.c_clients.get(cid) or jax.tree.map(zeros, self.params)
+                       for cid in selection]
+            ci = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ci_list)
+        device = self.update_plane == "device"
+        out, ci_new, losses = self.trainer.train_cohort(
+            self.params, self.data.X[selection], self.data.y[selection],
+            n_i, steps, cg, ci,
+            update_sink=self.store if device else None)
+        if device:
+            # trained models never left the device: the jitted cohort fn
+            # scattered them into the store's persistent row buffer; only
+            # the [K] row handles come back
+            row_ids = out
+        else:
+            out = jax.tree.map(np.asarray, out)  # host copies
+            self.update_host_bytes += sum(
+                l.nbytes for l in jax.tree.leaves(out))
+        if self.strategy.needs_scaffold:
+            self._apply_scaffold_updates(selection, ci_new)
+
+        for k, cid in enumerate(selection):
+            payload = (_Payload(row=int(row_ids[k])) if device
+                       else _Payload(blob=jax.tree.map(lambda x: x[k], out)))
+            self._launch(cid, round_, float(steps[k]), payload,
+                         int(n_i[k]), float(losses[k]))
+
+    def _launch(self, cid: int, round_: int, steps: float, payload: _Payload,
+                n_samples: int, loss: float, *, is_hedge: bool = False
+                ) -> Inflight:
+        rec = self.platform.invoke(cid, round_, self.loop.now, steps,
+                                   self.hw[cid], self.cfg.base_step_time)
+        self.db.mark_running(cid, round_)
+        inv = Inflight(client_id=cid, round=round_, steps=steps,
+                       t_invoked=self.loop.now, rec=rec, payload=payload,
+                       n_samples=n_samples, loss=loss, is_hedge=is_hedge)
+        inv.event = self.loop.schedule(rec.duration,
+                                       lambda: self._complete(inv))
+        self.inflight.setdefault(cid, []).append(inv)
+        return inv
+
+    def _complete(self, inv: Inflight) -> None:
+        """Completion callback: land the result (or record the failure),
+        settle the payload, and cancel any losing hedge siblings."""
+        inv.done = True
+        self._drop_inflight(inv)
+        pay = inv.payload
+        siblings = [o for o in self.inflight.get(inv.client_id, ())
+                    if o.round == inv.round and not o.done]
+        if inv.rec.failed:
+            if siblings:
+                # a hedge is still racing: count the failure but keep the
+                # client marked running for the surviving invocation
+                self.db.clients[inv.client_id].n_failures += 1
+            else:
+                self.db.mark_failed(inv.client_id)
+            pay.refs -= 1
+            if pay.refs <= 0 and not pay.landed:
+                self._free_payload(pay)
+            self._emit(InvocationFailed(t=self.loop.now, round=inv.round,
+                                        client_id=inv.client_id))
+            return
+        train_dur = inv.rec.duration  # includes startup/load/upload
+        self.db.mark_complete(inv.client_id, train_dur)
+        result = ResultRecord(client_id=inv.client_id, round=inv.round,
+                              n_samples=inv.n_samples,
+                              train_duration=train_dur,
+                              t_available=self.loop.now)
+        if self.update_plane == "device":
+            self.db.put_update_row(result, pay.row)
+        else:
+            self.db.put_update(result, pay.blob)
+        pay.landed = True
+        pay.refs -= 1
+        self._completed_this_round.add(inv.client_id)
+        if inv.is_hedge:
+            self.n_hedge_wins += 1
+        for sib in siblings:        # losers of the hedge race
+            self._cancel_inflight(sib)
+        self._emit(ResultLanded(t=self.loop.now, round=inv.round,
+                                result=result))
+
+    def _drop_inflight(self, inv: Inflight) -> None:
+        invs = self.inflight.get(inv.client_id)
+        if invs and inv in invs:
+            invs.remove(inv)
+            if not invs:
+                self.inflight.pop(inv.client_id, None)
+
+    def _cancel_inflight(self, inv: Inflight) -> None:
+        if inv.done:
+            return
+        inv.done = True
+        self.loop.cancel(inv.event)
+        self._drop_inflight(inv)
+        # bill only the elapsed fraction and stop the container clocks —
+        # unless a sibling invocation still runs on the instance (its own
+        # completion then bounds the busy/keep-warm horizon)
+        live = [i.rec.t_completed
+                for i in self.inflight.get(inv.client_id, ()) if not i.done]
+        self.platform.cancel(inv.rec, self.loop.now,
+                             live_until=max(live) if live else None)
+        self.n_cancelled += 1
+        pay = inv.payload
+        pay.refs -= 1
+        if pay.refs <= 0 and not pay.landed:
+            self._free_payload(pay)
+
+    def _free_payload(self, pay: _Payload) -> None:
+        if self.update_plane == "device" and pay.row >= 0:
+            self.store.free([pay.row])
+        pay.blob = None
+
+    def cancel_client(self, cid: int) -> None:
+        """Cancel every live invocation of ``cid`` and return the client
+        to the idle pool (the ``CancelInvocation`` action)."""
+        for inv in list(self.inflight.get(cid, ())):
+            self._cancel_inflight(inv)
+        rec = self.db.clients.get(cid)
+        if rec is not None and rec.status == "running":
+            rec.status = "idle"
+
+    def hedge_invocations(self, cids: list[int]) -> list[int]:
+        """Speculatively re-invoke the outstanding invocation of each
+        client on its (still-warm, per the keep-warm window the original
+        opened) container. The hedge reuses the original's trained update
+        — same data, same global model — and races its simulated duration;
+        ``_complete`` settles the race. Returns the clients hedged."""
+        launched = []
+        for cid in cids:
+            if cid not in self.db.clients or cid not in self.hw:
+                continue
+            invs = self.inflight.get(cid, ())
+            if any(i.is_hedge and not i.done for i in invs):
+                continue            # already hedged
+            live = [i for i in invs if not i.done and not i.is_hedge]
+            if not live:
+                continue
+            orig = live[0]
+            orig.payload.refs += 1
+            self._launch(cid, orig.round, orig.steps, orig.payload,
+                         orig.n_samples, orig.loss, is_hedge=True)
+            self.n_hedges += 1
+            launched.append(cid)
+        return launched
+
+    def _apply_scaffold_updates(self, selection, ci_new) -> None:
+        old = [self.c_clients.get(cid) for cid in selection]
+        new_list = [jax.tree.map(lambda x: x[k], ci_new)
+                    for k in range(len(selection))]
+        # c <- c + sum(c_i' - c_i) / N_total
+        n_total = max(len(self.db.clients), 1)
+        delta = None
+        for cid, n, o in zip(selection, new_list, old):
+            if o is None:
+                o = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), n)
+            d = jax.tree.map(lambda a, b: a - b, n, o)
+            delta = d if delta is None else jax.tree.map(jnp.add, delta, d)
+            self.c_clients[cid] = n
+        if delta is not None:
+            self.c_global = jax.tree.map(
+                lambda c, d: c + d / n_total, self.c_global, delta)
+
+    # ------------------------------------------------- aggregation service
+    def aggregate_round(self, round_: int) -> tuple[int, int, float]:
+        strat = self.strategy
+        pending = [r for r in self.db.pending_results(self.cfg.max_staleness, round_)
+                   if strat.usable(r, round_)]
+        if not pending:
+            return 0, 0, float("nan")
+        weights = np.array([strat.result_weight(r, round_) for r in pending],
+                           np.float64)
+        total = weights.sum()
+        if not np.isfinite(total) or total <= 0:
+            # e.g. Eq. 1 zeroes round-0 updates at T=1: fall back to
+            # cardinality weighting so the aggregation stays well-defined
+            weights = np.array([r.n_samples for r in pending], np.float64)
+            total = weights.sum() or 1.0
+        weights = (weights / total).astype(np.float32)
+        out_dtype = jax.tree.leaves(self.params)[0].dtype
+        if self.update_plane == "device":
+            # row-index fast path: gather rows out of the persistent device
+            # buffer, one kernel dispatch, one unravel — no host traffic
+            rows = [r.update_row for r in pending]
+            assert all(r >= 0 for r in rows), \
+                "pending result without a row handle on the device plane"
+            self.params = weighted_aggregate_rows(
+                self.store.buffer, rows, weights, self.spec,
+                out_dtype=out_dtype)
+            self.store.free(rows)
+        else:
+            updates = [jax.tree.map(jnp.asarray, self.db.blobs[r.update_key])
+                       for r in pending]
+            self.update_host_bytes += sum(
+                l.nbytes for u in updates for l in jax.tree.leaves(u))
+            self.params = weighted_aggregate(updates, weights,
+                                             out_dtype=out_dtype)
+        n_stale = sum(1 for r in pending if r.round < round_)
+        mean_dur = float(np.mean([r.train_duration for r in pending]))
+        self.db.mark_aggregated(pending)
+        # prune: results too stale to ever be usable again
+        drop = [r for r in self.db.results
+                if not r.aggregated and round_ - r.round >= self.cfg.max_staleness]
+        if self.update_plane == "device":
+            self.store.free([r.update_row for r in drop if r.update_row >= 0])
+        self.db.mark_aggregated(drop)
+        return len(pending), n_stale, mean_dur
+
+    # -------------------------------------------------- evaluation service
+    def _build_eval_scan(self):
+        """One jitted masked scan over the padded eval set: a single device
+        dispatch and a single scalar host transfer per evaluation, instead
+        of a Python loop of per-256-batch jit calls each synchronizing."""
+        xs = np.asarray(self.data.eval_x)
+        ys = np.asarray(self.data.eval_y)
+        n, bs = len(xs), 256
+        nb = max(1, math.ceil(n / bs))
+        pad = nb * bs - n
+        if pad:
+            xs = np.concatenate([xs, np.repeat(xs[:1], pad, axis=0)])
+            ys = np.concatenate([ys, np.repeat(ys[:1], pad, axis=0)])
+        mask = (np.arange(nb * bs) < n).reshape(nb, bs)
+        batches = (jnp.asarray(xs.reshape((nb, bs) + xs.shape[1:])),
+                   jnp.asarray(ys.reshape((nb, bs) + ys.shape[1:])),
+                   jnp.asarray(mask))
+        model = self.model
+
+        @jax.jit
+        def run(params, X, y, m):
+            def body(correct, inp):
+                xb, yb, mb = inp
+                pred = jnp.argmax(model.predict(params, xb), axis=-1)
+                return correct + jnp.sum((pred == yb) & mb), None
+            correct, _ = jax.lax.scan(body, jnp.zeros((), jnp.int32),
+                                      (X, y, m))
+            return correct.astype(jnp.float32) / n
+
+        return run, batches
+
+    def evaluate(self) -> float:
+        if not hasattr(self.model, "predict"):
+            # models exposing only ``accuracy`` (e.g. LM adapters with
+            # internal target masking) keep the legacy per-batch loop;
+            # batches are weighted by size so both paths report the same
+            # statistic (exact sample mean) on ragged tails
+            xs, ys = self.data.eval_x, self.data.eval_y
+            total, bs = 0.0, 256
+            for i in range(0, len(xs), bs):
+                xb, yb = xs[i:i + bs], ys[i:i + bs]
+                total += float(self._eval_fn(
+                    self.params, {"x": jnp.asarray(xb),
+                                  "y": jnp.asarray(yb)})) * len(xb)
+            return total / max(len(xs), 1)
+        if self._eval_scan is None:
+            self._eval_scan = self._build_eval_scan()
+        run, batches = self._eval_scan
+        return float(run(self.params, *batches))
+
+    # ---------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        inv = self.platform.invocations
+        # _hw_history, not hw: invocation records outlive removed clients
+        cost = self.cost_model.total(inv, lambda cid: self._hw_history[cid])
+        counts = self.platform.invocation_counts()
+        count_arr = [counts.get(cid, 0) for cid in self.db.clients]
+        return {
+            "strategy": self.strategy.name,
+            "engine": self.engine_name,
+            "update_plane": self.update_plane,
+            "update_host_bytes": int(self.update_host_bytes),
+            "rounds": len(self.history),
+            "final_accuracy": self.history[-1].accuracy if self.history else 0.0,
+            "total_time": self.loop.now,
+            "total_cost_usd": cost,
+            "cold_start_ratio": self.platform.cold_start_ratio(),
+            "n_invocations": len(inv),
+            "n_hedges": self.n_hedges,
+            "n_hedge_wins": self.n_hedge_wins,
+            "n_cancelled": self.n_cancelled,
+            "selection_bias": (max(count_arr) - min(count_arr)) if count_arr else 0,
+            "invocation_counts": count_arr,
+            "history": [(l.t_end, l.round, l.accuracy) for l in self.history],
+        }
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for l in self.history:
+            if l.accuracy >= target:
+                return l.t_end
+        return None
+
+    # ------------------------------------------------------------- checkpoint
+    def checkpoint(self) -> None:
+        if not self.cfg.checkpoint_dir:
+            return
+        self.db.meta["update_plane"] = self.update_plane
+        self.db.put_global_model(self.db.round,
+                                 jax.tree.map(np.asarray, self.params))
+        self.db.save(self.cfg.checkpoint_dir)
+        if self.update_plane == "device":
+            # persist the live un-aggregated rows so the async in-flight
+            # state survives a crash bit-exactly (handles stay valid)
+            from repro.checkpoint import save_update_store
+            ids = [r.update_row for r in self.db.results
+                   if not r.aggregated and r.update_row >= 0]
+            save_update_store(
+                self.store, ids,
+                os.path.join(self.cfg.checkpoint_dir, UPDATE_STORE_DIRNAME))
+
+    @classmethod
+    def resume(cls, cfg: FLConfig, model, data, fleet):
+        db = Database.load(cfg.checkpoint_dir)
+        return cls(cfg, model, data, fleet, db=db)

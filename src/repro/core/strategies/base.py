@@ -36,6 +36,8 @@ class StrategyConfig:
     prox_mu: float = 0.01          # mu: FedProx proximal term coefficient
     staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2) |
     #                                  "eq1" = t_i/T (Eq. 1, FedLesScan)
+    hedge_fraction: float = 0.5    # apodotiko-hedge: fraction of outstanding
+    #                                  invocations re-invoked at the CR gate
     seed: int = 0                  # selection RNG seed
 
 

@@ -26,6 +26,8 @@ class InvocationRecord:
     duration: float = 0.0
     t_completed: float = 0.0
     failed: bool = False
+    cancelled: bool = False    # killed mid-flight (hedge loser / explicit
+    #                            cancel); duration is truncated at the kill
 
 
 @dataclass
@@ -70,6 +72,24 @@ class FaaSPlatform:
         inst.warm_until = rec.t_completed + self.keep_warm
         self.invocations.append(rec)
         return rec
+
+    def cancel(self, rec: InvocationRecord, now: float,
+               live_until: Optional[float] = None) -> None:
+        """Kill an in-flight invocation at sim-time ``now``: the record is
+        billed only for its elapsed fraction, and the instance's busy /
+        keep-warm clocks stop at the cancellation — or at ``live_until``,
+        the completion time of a sibling invocation (a hedge race winner)
+        still running on the instance."""
+        if rec.t_completed <= now:
+            return  # already finished; nothing to roll back
+        rec.duration = max(0.0, now - rec.t_invoked)
+        rec.t_completed = now
+        rec.cancelled = True
+        inst = self._instances.get(rec.client_id)
+        if inst is not None:
+            horizon = max(now, live_until if live_until is not None else now)
+            inst.busy_until = min(inst.busy_until, horizon)
+            inst.warm_until = min(inst.warm_until, horizon + self.keep_warm)
 
     # -------------------------------------------------------------- metrics
     def cold_start_ratio(self) -> float:

@@ -19,12 +19,13 @@ from repro.sweep.grid import (
     SweepSpec,
     expand_grid,
 )
-from repro.sweep.presets import ALL_STRATEGIES, PRESETS, get_preset
+from repro.sweep.presets import (ALL_STRATEGIES, PRESETS,
+                                 REACTIVE_STRATEGIES, get_preset)
 from repro.sweep.results import SCHEMA, ResultTable
 from repro.sweep.runner import LocalRunner
 
 __all__ = [
     "ALL_STRATEGIES", "BENCH_SCALE", "LocalRunner", "PAPER_SCALE", "PRESETS",
-    "ResultTable", "RunSpec", "SCHEMA", "SMOKE_SCALE", "SweepScale",
-    "SweepSpec", "expand_grid", "get_preset", "run_sweep",
+    "REACTIVE_STRATEGIES", "ResultTable", "RunSpec", "SCHEMA", "SMOKE_SCALE",
+    "SweepScale", "SweepSpec", "expand_grid", "get_preset", "run_sweep",
 ]

@@ -4,7 +4,7 @@ A ``SweepSpec`` names the axes of a comparison experiment (the paper's
 tables are strategy x dataset grids on a fixed hardware mix); ``expand_grid``
 enumerates it into an ordered, deterministic list of ``RunSpec`` cells. Every
 cell shares one ``SweepScale`` — the knobs that trade fidelity for wall-clock
-(client counts, rounds, data size; DESIGN.md §7) — so results within a sweep
+(client counts, rounds, data size; DESIGN.md §8) — so results within a sweep
 are directly comparable.
 
 Determinism contract: ``expand_grid`` is a pure function of the spec — same
@@ -47,7 +47,7 @@ class RunSpec:
 
 @dataclass(frozen=True)
 class SweepScale:
-    """Sweep-wide scale knobs, shared by every cell (DESIGN.md §7)."""
+    """Sweep-wide scale knobs, shared by every cell (DESIGN.md §8)."""
     n_clients: int = 16
     clients_per_round: int = 8
     rounds: int = 48

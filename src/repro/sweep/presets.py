@@ -12,10 +12,19 @@ from __future__ import annotations
 import os
 from dataclasses import replace
 
-from repro.sweep.grid import PAPER_SCALE, SMOKE_SCALE, SweepSpec
+from repro.sweep.grid import (PAPER_SCALE, SMOKE_SCALE, SweepScale,
+                              SweepSpec)
 
 ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
                   "apodotiko")
+# Natively-reactive policies (scheduler-only; repro.core.strategies.reactive)
+REACTIVE_STRATEGIES = ("apodotiko-hedge", "apodotiko-adaptive")
+
+# 3-round hedging smoke: long enough for hedges to fire (the CR gate must
+# leave stragglers outstanding), short enough for CI
+SMOKE_HEDGE_SCALE = SweepScale(n_clients=8, clients_per_round=4, rounds=3,
+                               data_scale=0.06, local_epochs=1,
+                               sim_budget=1500.0)
 
 PRESETS: dict[str, SweepSpec] = {
     # Tables IV-VI, one dataset at a time (all six strategies, paper's
@@ -43,10 +52,36 @@ PRESETS: dict[str, SweepSpec] = {
     "staleness_ablation": SweepSpec(
         name="staleness_ablation", datasets=("mnist",),
         strategies=("fedavg", "apodotiko"), staleness_fns=("eq1", "eq2")),
+    # Straggler-heavy hedging comparison: 75/25 cpu1-vs-gpu fleet, big cold
+    # starts, keep-warm below the round cadence — every fresh straggler
+    # invocation is cold while hedges ride the warm container, so the
+    # reactive apodotiko-hedge policy's time-to-accuracy win is structural
+    # (tests/test_reactive.py pins it)
+    "straggler_hedge": SweepSpec(
+        name="straggler_hedge", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko", "apodotiko-hedge"),
+        scenarios=("straggler",),
+        concurrency_ratios=(0.5,),
+        overrides=(("cold_start_s", 120.0), ("keep_warm", 30.0),
+                   ("hedge_fraction", 1.0))),
+    # between-round CR adaptation vs fixed-CR async baselines
+    "adaptive_cr": SweepSpec(
+        name="adaptive_cr", datasets=("mnist",),
+        strategies=("fedbuff", "apodotiko", "apodotiko-adaptive"),
+        concurrency_ratios=(0.3,)),
     # CI-sized end-to-end check (two strategies, seconds)
     "smoke": SweepSpec(name="smoke", datasets=("mnist",),
                        strategies=("fedavg", "apodotiko"),
                        scale=SMOKE_SCALE),
+    # CI-sized hedging check: 3-round apodotiko-hedge on the straggler mix
+    "smoke_hedge": SweepSpec(
+        name="smoke_hedge", datasets=("mnist",),
+        strategies=("apodotiko", "apodotiko-hedge"),
+        scenarios=("straggler",),
+        concurrency_ratios=(0.5,),
+        scale=SMOKE_HEDGE_SCALE,
+        overrides=(("cold_start_s", 120.0), ("keep_warm", 30.0),
+                   ("hedge_fraction", 1.0))),
 }
 
 

@@ -1,6 +1,8 @@
 """Local in-process sweep executor.
 
-``LocalRunner`` turns a ``RunSpec`` cell into one ``Controller.run()`` with
+``LocalRunner`` turns a ``RunSpec`` cell into one engine run (the
+event-driven ``Scheduler`` by default, the legacy poll loop under
+``REPRO_ENGINE=legacy`` — see ``repro.core.scheduler.build_engine``) with
 real JAX local training on the serverless simulator. The expensive shared
 setup — synthetic federated datasets, proxy models (and their jit caches),
 hardware fleets — is built once per (dataset, scenario) and reused by every
@@ -22,7 +24,8 @@ import time
 from dataclasses import asdict, replace
 from typing import Optional
 
-from repro.core.controller import Controller, FLConfig
+from repro.core.controller import FLConfig
+from repro.core.scheduler import build_engine
 from repro.sweep.grid import RunSpec, SweepScale
 
 # Per-dataset simulated compute weight (1vCPU-seconds per optimizer step),
@@ -131,8 +134,9 @@ class LocalRunner:
                 return json.load(f)
         cfg = self.config(run)
         t0 = time.time()
-        ctl = Controller(cfg, self.model(run.dataset), self.data(run.dataset),
-                         list(self.fleet(run.scenario)))
+        ctl = build_engine(cfg, self.model(run.dataset),
+                           self.data(run.dataset),
+                           list(self.fleet(run.scenario)))
         metrics = ctl.run()
         metrics["wall_s"] = time.time() - t0
         metrics["run_key"] = run.key
@@ -146,7 +150,9 @@ class LocalRunner:
 
 def _build_fleet(scenario: str, n_clients: int) -> list:
     """Paper hardware scenarios: heterogeneous (IV-A3 65/25/10 mix),
-    homogeneous (Fig 1 scenario 1), two-tier (Fig 1 scenario 2)."""
+    homogeneous (Fig 1 scenario 1), two-tier (Fig 1 scenario 2), and
+    straggler (75% 1vCPU vs 25% GPU — the widest duration gap, used by the
+    hedging presets)."""
     import numpy as np
 
     from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
@@ -158,6 +164,13 @@ def _build_fleet(scenario: str, n_clients: int) -> list:
         rng = np.random.default_rng(0)
         fleet = [HARDWARE_PROFILES["cpu1"]] * round(n_clients * 0.6) + \
                 [HARDWARE_PROFILES["cpu2"]] * (n_clients - round(n_clients * 0.6))
+        rng.shuffle(fleet)
+        return fleet
+    if scenario == "straggler":
+        rng = np.random.default_rng(0)
+        n_slow = round(n_clients * 0.75)
+        fleet = [HARDWARE_PROFILES["cpu1"]] * n_slow + \
+                [HARDWARE_PROFILES["gpu"]] * (n_clients - n_slow)
         rng.shuffle(fleet)
         return fleet
     raise ValueError(f"unknown hardware scenario {scenario!r}")

@@ -1,0 +1,123 @@
+"""Golden round-trace equivalence: every legacy strategy produces
+bit-identical runs under the old poll loop (``Controller.run``) and the
+adapter-on-scheduler path (``LegacyStrategyAdapter`` on ``Scheduler``),
+on both update planes — the redesign's backwards-compatibility contract.
+
+"Bit-identical" here is literal: selections (every invocation record),
+round boundaries (t_start/t_end of every round), aggregation counts,
+accuracies, final global parameters, and total simulated time.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.controller import Controller, FLConfig
+from repro.core.scheduler import Scheduler
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
+from repro.models.proxy_models import build_bench_model
+
+N_CLIENTS = 10
+ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
+                  "apodotiko")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
+                                  seed=0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_bench_model("mnist")
+
+
+def _cfg(**kw):
+    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=3,
+                local_epochs=1, batch_size=5, base_step_time=0.5,
+                round_timeout=200.0, seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _trace(engine):
+    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
+             l.n_stale) for l in engine.history]
+    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
+           for r in engine.platform.invocations]
+    return hist, inv
+
+
+def _assert_equivalent(cfg, model, data, fleet):
+    legacy = Controller(cfg, model, data, list(fleet))
+    m_legacy = legacy.run()
+    sched = Scheduler(cfg, model, data, list(fleet))
+    m_sched = sched.run()
+
+    h_legacy, i_legacy = _trace(legacy)
+    h_sched, i_sched = _trace(sched)
+    assert h_sched == h_legacy          # rounds, boundaries, accuracies
+    assert i_sched == i_legacy          # every selection & invocation
+    assert m_sched["total_time"] == m_legacy["total_time"]
+    assert m_sched["total_cost_usd"] == m_legacy["total_cost_usd"]
+    for a, b in zip(jax.tree.leaves(legacy.params),
+                    jax.tree.leaves(sched.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # the adapter must be invisible in the reported strategy name
+    assert m_sched["strategy"] == m_legacy["strategy"]
+    assert m_sched["engine"] == "scheduler"
+    assert m_legacy["engine"] == "controller"
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_golden_trace_device_plane(strategy, data, model):
+    _assert_equivalent(_cfg(strategy=strategy, update_plane="device"),
+                       model, data, paper_fleet(N_CLIENTS))
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_golden_trace_blob_plane(strategy, data, model):
+    _assert_equivalent(_cfg(strategy=strategy, update_plane="blob"),
+                       model, data, paper_fleet(N_CLIENTS))
+
+
+def test_golden_trace_with_failures(data, model):
+    """Crashed invocations (no result ever lands) take the same paths."""
+    _assert_equivalent(_cfg(strategy="apodotiko", failure_rate=0.3),
+                       model, data, paper_fleet(N_CLIENTS))
+    _assert_equivalent(_cfg(strategy="fedavg", failure_rate=0.4),
+                       model, data, paper_fleet(N_CLIENTS))
+
+
+def test_golden_trace_all_failures_sync(data, model):
+    """Every invocation fails: the sync round must close by drain at the
+    last failure time (NOT advance to its unreached deadline)."""
+    _assert_equivalent(_cfg(strategy="fedavg", failure_rate=1.0),
+                       model, data, paper_fleet(N_CLIENTS))
+
+
+def test_golden_trace_round_timeout(data, model):
+    """A straggler fleet forces the deadline barrier: the scheduler's
+    timer must close the round at exactly t0 + round_timeout."""
+    fleet = [HARDWARE_PROFILES["cpu1"]] * N_CLIENTS
+    _assert_equivalent(_cfg(strategy="fedavg", round_timeout=30.0,
+                            base_step_time=5.0), model, data, fleet)
+
+
+def test_golden_trace_sim_budget(data, model):
+    """max_sim_time barrier: both engines stop at the same simulated
+    instant mid-run (the async budget timer path)."""
+    _assert_equivalent(_cfg(strategy="apodotiko", rounds=8,
+                            max_sim_time=120.0),
+                       model, data, paper_fleet(N_CLIENTS))
+    fleet = [HARDWARE_PROFILES["cpu1"]] * N_CLIENTS
+    _assert_equivalent(_cfg(strategy="fedavg", rounds=8, max_sim_time=120.0,
+                            round_timeout=600.0), model, data, fleet)
+
+
+def test_golden_trace_eval_skip(data, model):
+    """eval_every>1 carries the last accuracy across unevaluated rounds
+    identically in both engines."""
+    _assert_equivalent(_cfg(strategy="apodotiko", eval_every=2, rounds=5),
+                       model, data, paper_fleet(N_CLIENTS))

@@ -1,0 +1,316 @@
+"""Protocol layer: event/action dispatch, DatabaseView, adapter phases,
+cancellation & hedging mechanics, elasticity through the protocol."""
+import numpy as np
+import pytest
+
+from repro.core.controller import Controller, FLConfig
+from repro.core.protocol import (Aggregate, CancelInvocation, ClientJoined,
+                                 ClientLeft, Hedge, Invoke, ReactivePolicy,
+                                 ResultLanded, RoundStarted, SetTimer,
+                                 TimerFired)
+from repro.core.scheduler import Scheduler, build_engine
+from repro.core.strategies.reactive import (LegacyStrategyAdapter,
+                                            is_reactive, make_policy)
+from repro.core.strategies.base import StrategyConfig, build_strategy
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
+from repro.models.proxy_models import build_bench_model
+
+N_CLIENTS = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
+                                  seed=0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_bench_model("mnist")
+
+
+def _cfg(**kw):
+    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
+                local_epochs=1, batch_size=5, base_step_time=0.5,
+                round_timeout=200.0, seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+class Recorder(ReactivePolicy):
+    """Wraps a policy, recording every dispatched event."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.strategy = inner.strategy
+        self.name = inner.name
+        self.fire_timers_on_drain = inner.fire_timers_on_drain
+        self.events = []
+
+    def on_event(self, event, view):
+        self.events.append(event)
+        return self.inner.on_event(event, view)
+
+
+def _sched(cfg, model, data, fleet=None, policy=None):
+    return Scheduler(cfg, model, data,
+                     list(fleet or paper_fleet(N_CLIENTS)), policy=policy)
+
+
+# ------------------------------------------------------------ event stream
+
+
+def test_event_stream_shape(data, model):
+    cfg = _cfg(strategy="apodotiko")
+    rec = Recorder(make_policy("apodotiko",
+                               StrategyConfig(clients_per_round=4,
+                                              concurrency_ratio=0.3)))
+    sched = _sched(cfg, model, data, policy=rec)
+    sched.run()
+    kinds = [type(e).__name__ for e in rec.events]
+    assert kinds.count("RoundStarted") == 2
+    assert kinds[0] == "RoundStarted"
+    assert "ResultLanded" in kinds
+    # ResultLanded events carry the landed record, in sim-time order
+    landed = [e for e in rec.events if isinstance(e, ResultLanded)]
+    assert all(e.result.t_available == e.t for e in landed)
+    assert [e.t for e in rec.events] == sorted(e.t for e in rec.events)
+    assert sched.n_events == len(rec.events)
+
+
+def test_timerfired_on_sync_deadline(data, model):
+    """A straggler fleet: the sync deadline timer fires with the round's
+    tag and the round closes exactly at t0 + timeout."""
+    fleet = [HARDWARE_PROFILES["cpu1"]] * N_CLIENTS
+    rec = Recorder(make_policy("fedavg", StrategyConfig(clients_per_round=4,
+                                                        round_timeout=30.0)))
+    sched = _sched(_cfg(strategy="fedavg", round_timeout=30.0,
+                        base_step_time=5.0), model, data, fleet, policy=rec)
+    sched.run()
+    timers = [e for e in rec.events if isinstance(e, TimerFired)]
+    assert any(t.tag == "deadline" for t in timers)
+    for log in sched.history:
+        assert log.t_end - log.t_start <= 30.0 * 3 + 1e-6
+
+
+def test_view_is_read_only(data, model):
+    sched = _sched(_cfg(), model, data)
+    view = sched.view
+    with pytest.raises(TypeError):
+        view.clients[99] = "nope"
+    assert isinstance(view.results, tuple)
+    assert view.round == 0
+    assert view.max_sim_time == sched.cfg.max_sim_time
+
+
+# ------------------------------------------------------- adapter unit tests
+
+
+def test_adapter_round_start_returns_invoke(data, model):
+    sched = _sched(_cfg(strategy="fedavg"), model, data)
+    adapter = LegacyStrategyAdapter(build_strategy(
+        "fedavg", StrategyConfig(clients_per_round=4)))
+    acts = adapter.on_event(RoundStarted(t=0.0, round=0), sched.view)
+    kinds = [type(a) for a in acts]
+    assert kinds[0] is Invoke and SetTimer in kinds
+    assert len(acts[0].clients) == 4
+    assert adapter._phase == "gated"
+
+
+def test_adapter_stale_timer_ignored(data, model):
+    sched = _sched(_cfg(strategy="fedavg"), model, data)
+    adapter = LegacyStrategyAdapter(build_strategy(
+        "fedavg", StrategyConfig(clients_per_round=4)))
+    adapter.on_event(RoundStarted(t=0.0, round=0), sched.view)
+    # a timer from round -1 (db.round is 0) must do nothing
+    assert adapter.on_event(TimerFired(t=5.0, round=-1, tag="deadline"),
+                            sched.view) == []
+
+
+def test_make_policy_names():
+    cfg = StrategyConfig()
+    assert make_policy("fedavg", cfg).name == "fedavg"
+    assert make_policy("apodotiko-hedge", cfg).name == "apodotiko-hedge"
+    assert is_reactive("apodotiko-adaptive")
+    assert not is_reactive("fedavg")
+    with pytest.raises(KeyError):
+        make_policy("nope", cfg)
+
+
+def test_build_engine_routing(data, model):
+    fleet = list(paper_fleet(N_CLIENTS))
+    assert isinstance(build_engine(_cfg(engine="legacy"), model, data,
+                                   list(fleet)), Controller)
+    sched = build_engine(_cfg(engine="scheduler"), model, data, list(fleet))
+    assert isinstance(sched, Scheduler)
+    # reactive strategies cannot run on the poll loop
+    with pytest.raises(ValueError):
+        build_engine(_cfg(engine="legacy", strategy="apodotiko-hedge"),
+                     model, data, list(fleet))
+
+
+def test_resolve_engine_env(monkeypatch):
+    from repro.core.services import resolve_engine
+    assert resolve_engine("legacy") == "legacy"
+    monkeypatch.setenv("REPRO_ENGINE", "legacy")
+    assert resolve_engine("auto") == "legacy"
+    monkeypatch.delenv("REPRO_ENGINE")
+    assert resolve_engine("auto") == "scheduler"
+    with pytest.raises(ValueError):
+        resolve_engine("polling")
+
+
+# ------------------------------------------- cancellation & hedge mechanics
+
+
+def test_cancel_invocation_frees_row_and_idles_client(data, model):
+    sched = _sched(_cfg(strategy="fedavg"), model, data)
+    sched._open_round()                       # invokes 4 clients
+    cid = next(iter(sched.inflight))
+    free_before = len(sched.store._free)
+    sched._execute(CancelInvocation(client_id=cid))
+    assert cid not in sched.inflight
+    assert sched.db.clients[cid].status == "idle"
+    assert len(sched.store._free) == free_before + 1
+    assert sched.n_cancelled == 1
+    # the cancelled completion never fires; the round still closes (the
+    # pump drives timers + events exactly as run() does after opening)
+    while sched._pump_one():
+        pass
+    assert cid not in {r.client_id for r in sched.db.results
+                       if r.round == 0}
+
+
+def test_hedge_races_and_first_result_wins(data, model):
+    """A hedged straggler: the warm re-invocation lands first, the
+    original is cancelled, exactly one result exists for the client."""
+    fleet = [HARDWARE_PROFILES["cpu1"]] * N_CLIENTS
+    sched = _sched(_cfg(strategy="fedavg", cold_start_s=120.0, rounds=1),
+                   model, data, fleet)
+    sched._open_round()
+    cid = next(iter(sched.inflight))
+    sched._execute(Hedge(clients=(cid,)))
+    assert sched.n_hedges == 1
+    invs = sched.inflight[cid]
+    assert len(invs) == 2 and invs[0].payload is invs[1].payload
+    assert invs[1].rec.cold is False          # rides the warm container
+    assert invs[1].rec.duration < invs[0].rec.duration
+    while sched._pump_one():
+        pass
+    results = [r for r in sched.db.results if r.client_id == cid]
+    assert len(results) == 1
+    assert sched.n_hedge_wins == 1
+    assert sched.n_cancelled == 1             # the losing original
+    # both invocations were billed
+    assert sum(1 for r in sched.platform.invocations
+               if r.client_id == cid) == 2
+
+
+def test_hedge_idempotent_per_client(data, model):
+    sched = _sched(_cfg(strategy="fedavg"), model, data)
+    sched._open_round()
+    cid = next(iter(sched.inflight))
+    assert sched.hedge_invocations([cid]) == [cid]
+    assert sched.hedge_invocations([cid]) == []   # already hedged
+    assert sched.n_hedges == 1
+
+
+# --------------------------------------------------- elasticity (satellite)
+
+
+def test_remove_clients_cleans_hw_fleet_and_inflight(data, model):
+    """The satellite fix: remove_clients must drop hw + fleet entries and
+    cancel the removed client's in-flight invocation."""
+    sched = _sched(_cfg(strategy="fedavg"), model, data)
+    sched._open_round()
+    running = next(iter(sched.inflight))
+    idle = next(c for c in sched.db.clients if c not in sched.inflight)
+    n_fleet = len(sched.fleet)
+    free_before = len(sched.store._free)
+    sched.remove_clients([running, idle])
+    for cid in (running, idle):
+        assert cid not in sched.db.clients
+        assert cid not in sched.hw
+        assert cid not in sched.inflight
+    assert len(sched.fleet) == n_fleet - 2
+    assert len(sched.store._free) == free_before + 1  # in-flight row freed
+    while sched._pump_one():                   # no KeyError on completions
+        pass
+    assert running not in {r.client_id for r in sched.db.results}
+
+
+def test_membership_events_reach_policy(data, model):
+    from repro.core.database import ClientRecord
+    rec = Recorder(make_policy("fedavg", StrategyConfig(clients_per_round=4)))
+    sched = _sched(_cfg(strategy="fedavg"), model, data, policy=rec)
+    sched.remove_clients([0])
+    sched.add_clients(
+        [ClientRecord(client_id=99, hardware="cpu1", data_cardinality=10,
+                      batch_size=5, local_epochs=1)],
+        [HARDWARE_PROFILES["cpu1"]])
+    kinds = [type(e) for e in rec.events]
+    assert ClientLeft in kinds and ClientJoined in kinds
+
+
+def test_metrics_survive_remove_clients(data, model):
+    """Cost/metrics resolve hardware for historical invocations of
+    since-removed clients (hw is pruned, the history map is not)."""
+    sched = _sched(_cfg(strategy="fedavg", rounds=1), model, data)
+    sched.run()
+    invoked = sched.platform.invocations[0].client_id
+    sched.remove_clients([invoked])
+    m = sched.metrics()                        # must not KeyError
+    assert m["total_cost_usd"] > 0
+
+
+def test_cancelled_invocation_billed_partially(data, model):
+    """A cancelled invocation bills only its elapsed fraction, and the
+    killed container's busy/keep-warm clocks stop at the cancellation."""
+    fleet = [HARDWARE_PROFILES["cpu1"]] * N_CLIENTS
+    sched = _sched(_cfg(strategy="fedavg", cold_start_s=120.0, rounds=1),
+                   model, data, fleet)
+    sched._open_round()
+    cid = next(iter(sched.inflight))
+    rec = sched.inflight[cid][0].rec
+    full = rec.duration
+    sched.loop.now = rec.t_invoked + 1.0       # cancel 1 s in
+    sched._execute(CancelInvocation(client_id=cid))
+    assert rec.cancelled and rec.duration == pytest.approx(1.0)
+    assert rec.duration < full
+    inst = sched.platform._instances[cid]
+    assert inst.busy_until == pytest.approx(sched.loop.now)
+    assert inst.warm_until == pytest.approx(
+        sched.loop.now + sched.platform.keep_warm)
+
+
+def test_hedge_loser_billing_keeps_winner_warmth(data, model):
+    """Cancelling the race loser must not roll back the keep-warm window
+    the winning invocation legitimately opened."""
+    fleet = [HARDWARE_PROFILES["cpu1"]] * N_CLIENTS
+    sched = _sched(_cfg(strategy="fedavg", cold_start_s=120.0, rounds=1),
+                   model, data, fleet)
+    sched._open_round()
+    cid = next(iter(sched.inflight))
+    sched._execute(Hedge(clients=(cid,)))
+    orig, hedge = sched.inflight[cid]
+    while sched._pump_one():
+        pass
+    assert orig.rec.cancelled and not hedge.rec.cancelled
+    # loser billed only until the winner landed
+    assert orig.rec.t_completed == pytest.approx(hedge.rec.t_completed)
+    inst = sched.platform._instances[cid]
+    assert inst.warm_until == pytest.approx(
+        hedge.rec.t_completed + sched.platform.keep_warm)
+
+
+def test_legacy_remove_clients_also_fixed(data, model):
+    """The fix applies to the legacy engine too (shared runtime)."""
+    ctl = Controller(_cfg(strategy="apodotiko"), model, data,
+                     list(paper_fleet(N_CLIENTS)))
+    ctl.run()
+    n_fleet = len(ctl.fleet)
+    ctl.remove_clients([0, 1])
+    assert 0 not in ctl.hw and 1 not in ctl.hw
+    assert len(ctl.fleet) == n_fleet - 2
+    assert len(ctl.db.clients) == N_CLIENTS - 2

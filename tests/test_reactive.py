@@ -1,0 +1,141 @@
+"""Natively-reactive strategies: apodotiko-hedge must beat plain
+apodotiko on simulated time-to-target-accuracy in the straggler-heavy
+preset shape (the redesign's capability proof), and apodotiko-adaptive
+must actually adapt CR from arrival dispersion."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import Scheduler
+from repro.core.services import FLConfig
+from repro.core.strategies.base import StrategyConfig
+from repro.core.strategies.reactive import ApodotikoAdaptive
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import HARDWARE_PROFILES
+from repro.models.proxy_models import build_bench_model
+
+N_CLIENTS = 12
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.3,
+                                  seed=0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_bench_model("mnist")
+
+
+def _straggler_fleet():
+    # the sweep "straggler" scenario shape: 75% 1vCPU, 25% GPU
+    return [HARDWARE_PROFILES["cpu1"]] * 9 + [HARDWARE_PROFILES["gpu"]] * 3
+
+
+def _cfg(strategy, **kw):
+    # the straggler_hedge preset shape: cold starts dominate (120 s) and
+    # keep-warm (30 s) sits below the round cadence, so fresh straggler
+    # invocations run cold while hedges ride the warm container
+    base = dict(n_clients=N_CLIENTS, clients_per_round=6, rounds=12,
+                local_epochs=3, batch_size=5, base_step_time=0.3,
+                concurrency_ratio=0.5, cold_start_s=120.0, keep_warm=30.0,
+                hedge_fraction=1.0, seed=0, strategy=strategy)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_hedge_beats_plain_apodotiko_on_time_to_accuracy(data, model):
+    """The acceptance criterion: on a straggler-heavy fleet, the hedging
+    policy reaches the common accuracy target earlier AND sustains a
+    faster round cadence with fewer cold starts."""
+    runs = {}
+    for s in ("apodotiko", "apodotiko-hedge"):
+        sched = Scheduler(_cfg(s), model, data, _straggler_fleet())
+        runs[s] = (sched, sched.run())
+    plain, m_plain = runs["apodotiko"]
+    hedge, m_hedge = runs["apodotiko-hedge"]
+
+    assert m_hedge["rounds"] == m_plain["rounds"] == 12
+    assert m_hedge["n_hedges"] > 0 and m_hedge["n_hedge_wins"] > 0
+
+    # time-to-common-accuracy (the sweep table's target rule: 95% of the
+    # weakest run's best) — hedging must reach it strictly earlier
+    common = 0.95 * min(max(a for _, _, a in m["history"])
+                        for _, m in runs.values())
+    t_plain = plain.time_to_accuracy(common)
+    t_hedge = hedge.time_to_accuracy(common)
+    assert t_plain is not None and t_hedge is not None
+    assert t_hedge < t_plain
+
+    # structural wins: faster cadence, fewer cold starts
+    assert m_hedge["total_time"] < m_plain["total_time"]
+    assert m_hedge["cold_start_ratio"] < m_plain["cold_start_ratio"]
+
+
+def test_hedge_reuses_trained_update(data, model):
+    """Hedges do not retrain: invocation count grows but the update-plane
+    row count does not (payloads are shared, freed exactly once)."""
+    sched = Scheduler(_cfg("apodotiko-hedge", rounds=4), model, data,
+                      _straggler_fleet())
+    m = sched.run()
+    assert m["n_hedges"] > 0
+    # settled races cancel their loser — nothing double-lands
+    assert m["n_cancelled"] > 0
+    results_by_round = [(r.client_id, r.round) for r in sched.db.results]
+    assert len(results_by_round) == len(set(results_by_round))
+    # every store row is accounted for — a pending result's handle or an
+    # in-flight payload (run ended mid-race) — no leaks from settled races
+    live = {r.update_row for r in sched.db.results
+            if not r.aggregated and r.update_row >= 0}
+    for invs in sched.inflight.values():
+        live |= {i.payload.row for i in invs if not i.done}
+    assert sched.store._live == live
+
+
+def test_adaptive_cr_moves_and_stays_bounded(data, model):
+    sched = Scheduler(_cfg("apodotiko-adaptive", rounds=8), model, data,
+                      _straggler_fleet())
+    m = sched.run()
+    crs = m["cr_history"]
+    assert len(crs) >= 2
+    assert any(c != crs[0] for c in crs[1:])         # it adapted
+    assert all(0.1 <= c <= 0.9 for c in crs)         # clamped
+    assert np.isfinite(m["final_accuracy"])
+
+
+def test_adaptive_cr_rule_directions():
+    """Pure rule: wide landing window lowers CR, tight window raises it,
+    both clamped to [0.1, 0.9]."""
+    pol = ApodotikoAdaptive(StrategyConfig(concurrency_ratio=0.5))
+    # spread = (40 - 2) / 21 = 1.81 > HIGH -> lower
+    assert pol.next_cr([2.0, 21.0, 40.0]) < 0.5
+    pol.strategy.cfg.concurrency_ratio = 0.5
+    # spread = (11 - 10) / 10.5 = 0.095 < LOW -> raise
+    assert pol.next_cr([10.0, 10.5, 11.0]) > 0.5
+    pol.strategy.cfg.concurrency_ratio = 0.88
+    for _ in range(5):
+        pol.strategy.cfg.concurrency_ratio = pol.next_cr([10.0, 10.5, 11.0])
+    assert pol.strategy.cfg.concurrency_ratio <= 0.9
+    pol.strategy.cfg.concurrency_ratio = 0.12
+    for _ in range(5):
+        pol.strategy.cfg.concurrency_ratio = pol.next_cr([2.0, 21.0, 40.0])
+    assert pol.strategy.cfg.concurrency_ratio >= 0.1
+    # fewer than two arrivals: no information, CR unchanged
+    pol.strategy.cfg.concurrency_ratio = 0.4
+    assert pol.next_cr([3.0]) == 0.4
+
+
+def test_sweep_preset_runs_reactive_strategies():
+    """The smoke_hedge preset wires reactive strategies through the sweep
+    engine (build_engine routes them onto the scheduler)."""
+    from repro.sweep import expand_grid, get_preset
+    from repro.sweep.presets import REACTIVE_STRATEGIES
+
+    spec = get_preset("smoke_hedge")
+    runs = expand_grid(spec)
+    assert {r.strategy for r in runs} == {"apodotiko", "apodotiko-hedge"}
+    straggler = get_preset("straggler_hedge")
+    assert "apodotiko-hedge" in straggler.strategies
+    assert straggler.scenarios == ("straggler",)
+    assert set(REACTIVE_STRATEGIES) == {"apodotiko-hedge",
+                                        "apodotiko-adaptive"}

@@ -28,6 +28,58 @@ def test_event_loop_predicate_stop():
     assert seen == [1, 2]
 
 
+def test_event_loop_cancel_skips_callback():
+    loop = EventLoop()
+    seen = []
+    ev = loop.schedule(1.0, lambda: seen.append("cancelled"))
+    loop.schedule(2.0, lambda: seen.append("kept"))
+    loop.cancel(ev)
+    loop.cancel(ev)  # idempotent
+    loop.run_all()
+    assert seen == ["kept"]
+    assert loop.pending == 0
+
+
+def test_event_loop_compacts_tombstones():
+    """Heavy hedging/cancellation: the heap must stay bounded by the live
+    count, not grow one tombstone per cancel forever."""
+    loop = EventLoop()
+    live = [loop.schedule(1e6 + i, lambda: None) for i in range(10)]
+    for i in range(10_000):
+        ev = loop.schedule(float(i), lambda: None)
+        loop.cancel(ev)
+        # tombstones never exceed half the heap (+1 for the pre-compact peek)
+        assert loop._n_cancelled <= len(loop._heap) // 2 + 1
+    assert len(loop._heap) < 40          # ~10 live, not 10k tombstones
+    assert loop.pending == 10            # O(1), counts only live events
+    for ev in live[:5]:
+        loop.cancel(ev)
+    assert loop.pending == 5
+
+
+def test_event_loop_peek_and_step():
+    loop = EventLoop()
+    seen = []
+    a = loop.schedule(1.0, lambda: seen.append("a"))
+    loop.schedule(2.0, lambda: seen.append("b"))
+    assert loop.peek() == pytest.approx(1.0)
+    loop.cancel(a)
+    assert loop.peek() == pytest.approx(2.0)  # skips the tombstone
+    assert loop.step() is True
+    assert seen == ["b"] and loop.now == pytest.approx(2.0)
+    assert loop.step() is False and loop.peek() is None
+
+
+def test_event_loop_cancel_after_pop_is_noop():
+    loop = EventLoop()
+    ev = loop.schedule(1.0, lambda: None)
+    loop.schedule(2.0, lambda: None)
+    loop.step()          # pops ev
+    loop.cancel(ev)      # already ran: must not corrupt the tombstone count
+    assert loop.pending == 1
+    assert loop._n_cancelled == 0
+
+
 def test_first_invocation_is_cold():
     p = FaaSPlatform(keep_warm=600, cold_start_s=8)
     hw = HARDWARE_PROFILES["cpu1"]

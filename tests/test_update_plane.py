@@ -269,7 +269,7 @@ def test_checkpoint_resume_live_rows_bit_exact(tmp_path, data, model):
     # drive one cohort to completion WITHOUT aggregating, so the checkpoint
     # carries live un-aggregated rows (the async in-flight state)
     sel = ctl.strategy.select(ctl.db, 0)
-    ctl._invoke_round(0, sel)
+    ctl.invoke_round(0, sel)
     assert ctl.loop.run_until(lambda: len(ctl.db.results) >= len(sel),
                               max_time=1e8)
     ctl.checkpoint()
@@ -294,7 +294,7 @@ def test_cross_plane_resume_with_pending_results_rejected(tmp_path, data,
                checkpoint_dir=str(tmp_path / "fl"))
     ctl = Controller(cfg, model, data, list(paper_fleet(N_CLIENTS)))
     sel = ctl.strategy.select(ctl.db, 0)
-    ctl._invoke_round(0, sel)
+    ctl.invoke_round(0, sel)
     assert ctl.loop.run_until(lambda: len(ctl.db.results) >= len(sel),
                               max_time=1e8)
     ctl.checkpoint()
@@ -321,7 +321,7 @@ def test_checkpoint_resume_full_run(tmp_path, data, model):
 # ----------------------------------------------------- evaluation fast path
 def test_eval_scan_matches_batched_loop(data, model):
     ctl = Controller(_cfg(), model, data, list(paper_fleet(N_CLIENTS)))
-    fast = ctl._evaluate()
+    fast = ctl.evaluate()
     # reference: exact accuracy over the whole eval set in one batch
     xs, ys = data.eval_x, data.eval_y
     acc = float(jnp.mean(
@@ -346,7 +346,7 @@ def test_eval_falls_back_without_predict(data, model):
 
     ctl = Controller(_cfg(rounds=1), AccOnly(model), data,
                      list(paper_fleet(N_CLIENTS)))
-    assert np.isfinite(ctl._evaluate())
+    assert np.isfinite(ctl.evaluate())
 
 
 # ------------------------------------------------------- compile-cache key
