@@ -5,6 +5,15 @@ under hedge-style cancellation churn, end-to-end protocol dispatch rate
 (events/sec), and the overhead of the hedging policy vs plain apodotiko.
 The scheduler numbers land in ``BENCH_scheduler.json``.
 
+``--dataplane`` measures the *input* half of the transport story
+(DESIGN.md §2, "data plane"): per-cohort-dispatch latency and H2D
+training-input bytes with the dataset resident on device
+(``REPRO_DATA_PLANE=device``, index-vector dispatch + on-jit gather) vs
+the legacy host fancy-index + per-dispatch upload, plus end-to-end FL
+runs on both planes (events/s re-measure, ``data_host_bytes``
+accounting). Lands in ``BENCH_dataplane.json``; exits nonzero if the
+device plane moved any training-input bytes (the CI gate).
+
 Measures the aggregation+transfer component of one controller round — the
 path between cohort training finishing and the new global model existing —
 at K ∈ {10, 100} clients x N ∈ {1e4, 1e6} parameters:
@@ -187,7 +196,8 @@ def _bench_protocol_overhead(sched, n: int) -> float:
     return 1e6 * (time.perf_counter() - t0) / n
 
 
-def _bench_dispatch(model, data, strategy: str, rounds: int) -> dict:
+def _bench_dispatch(model, data, strategy: str, rounds: int,
+                    **cfg_overrides) -> dict:
     """End-to-end reactive run on a tiny straggler-heavy FL setup (shared
     pre-warmed model, so compile time stays out of the comparison):
     events dispatched per wall-second including the real JAX training the
@@ -202,7 +212,8 @@ def _bench_dispatch(model, data, strategy: str, rounds: int) -> dict:
     cfg = FLConfig(n_clients=n, clients_per_round=4, rounds=rounds,
                    local_epochs=1, batch_size=5, base_step_time=0.8,
                    concurrency_ratio=0.5, cold_start_s=120.0, keep_warm=30.0,
-                   hedge_fraction=1.0, seed=0, strategy=strategy)
+                   hedge_fraction=1.0, seed=0, strategy=strategy,
+                   **cfg_overrides)
     sched = Scheduler(cfg, model, data, fleet)
     t0 = time.perf_counter()
     m = sched.run()
@@ -214,7 +225,9 @@ def _bench_dispatch(model, data, strategy: str, rounds: int) -> dict:
             "protocol_overhead_us_per_event": round(overhead_us, 2),
             "sim_time_s": round(m["total_time"], 1),
             "n_hedges": m["n_hedges"], "n_hedge_wins": m["n_hedge_wins"],
-            "n_invocations": m["n_invocations"]}
+            "n_invocations": m["n_invocations"],
+            "data_plane": m["data_plane"],
+            "data_host_bytes": m["data_host_bytes"]}
 
 
 def run_scheduler(smoke: bool = False, json_path: str = "") -> dict:
@@ -262,6 +275,210 @@ def run_scheduler(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# ------------------------------------------------------------- data plane
+
+
+def _synthetic_fed(M: int, n_max: int, seed: int = 0):
+    """A FederatedDataset with exact shapes (proxy-model 8x8x1 features)
+    so each cell's cohort-input volume is controlled precisely."""
+    from repro.data.synthetic import FederatedDataset
+
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (M, n_max, 8, 8, 1)).astype(np.float32)
+    y = rng.integers(0, 10, (M, n_max)).astype(np.int32)
+    n = np.full((M,), n_max, np.int64)
+    ex = X[0, :64].copy()
+    ey = y[0, :64].copy()
+    return FederatedDataset(X, y, n, ex, ey, name="bench")
+
+
+class _BenchMLP:
+    """Minimal real model (64 -> 16 -> 10 MLP, classifier loss surface):
+    keeps the full-dispatch measurement on the real trainer path without
+    XLA-CPU conv cost swamping the transport difference."""
+
+    input_shape = (8, 8, 1)
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        p = {"w1": jax.random.normal(k1, (64, 16)) * 0.1,
+             "b1": jnp.zeros((16,)),
+             "w2": jax.random.normal(k2, (16, 10)) * 0.1,
+             "b2": jnp.zeros((10,))}
+        return p, None
+
+    def predict(self, p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss(self, p, batch):
+        from repro.models.common import softmax_cross_entropy
+        logits = self.predict(p, batch["x"])
+        return softmax_cross_entropy(logits, batch["y"]), logits
+
+
+def _dataplane_cell(K: int, cohort_floats: int, iters: int) -> dict:
+    """One cell: K clients whose cohort training input totals
+    ~``cohort_floats`` fp32 elements.
+
+    Two measurements per plane, mirroring how the update-plane cells
+    isolate the agg+transfer component:
+
+      * **input path** (the headline, ``speedup``): what each plane does
+        to get the cohort's training data in front of the jitted cohort
+        fn — host: fancy-index ``X[sel]`` + pad-concat to the cohort
+        bucket + device upload; device: upload of the ``[Kp] int32``
+        index vector (the dataset is already resident). This is the
+        component the data plane exists to remove.
+      * **full dispatch** (``train_speedup``): the same comparison
+        through the real ``CohortTrainer`` end to end, minimal local
+        work (steps=1, tiny MLP, batch 2). On CPU the "upload" is a
+        memcpy, so this improves modestly; on PCIe-attached accelerators
+        the input path is the dispatch tail that the device plane
+        deletes."""
+    from repro.core.client import CohortTrainer, _bucket
+    from repro.core.data_plane import DatasetStore
+
+    feat = 8 * 8
+    n_max = max(cohort_floats // (K * feat), 2)
+    data = _synthetic_fed(2 * K, n_max)
+    store = DatasetStore(data)
+    model = _BenchMLP()
+    params = model.init(jax.random.PRNGKey(0))[0]
+    sel = np.arange(0, 2 * K, 2)                # K clients, strided gather
+    n_i = data.n[sel]
+    steps = np.ones(K, np.int64)
+
+    def make_trainer():
+        return CohortTrainer(model, optimizer="adam", lr=1e-3, batch_size=2)
+
+    trainer = make_trainer()
+    Kp = _bucket(K, trainer.cohort_floor)
+
+    # -- input path only ---------------------------------------------------
+    def host_input():
+        X, y, n = data.cohort(sel)
+        if Kp != K:
+            padt = lambda a: np.concatenate(
+                [a, np.repeat(a[-1:], Kp - K, axis=0)])
+            X, y = padt(X), padt(y)
+        up = (jnp.asarray(X), jnp.asarray(y))
+        jax.block_until_ready(up)
+        return X.nbytes + y.nbytes
+
+    def device_input():
+        s = sel
+        if Kp != K:
+            s = np.concatenate([s, np.repeat(s[-1:], Kp - K)])
+        jax.block_until_ready(jnp.asarray(s))
+        return 0
+
+    def timed(fn):
+        fn()                                    # warmup
+        times, byts = [], 0
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            byts = fn()
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times)), byts
+
+    host_in_s, host_in_bytes = timed(host_input)
+    dev_in_s, _ = timed(device_input)
+
+    # -- full dispatch through the trainer ---------------------------------
+    def host_dispatch():
+        X, y, n = data.cohort(sel)
+        trainer.train_cohort(params, X, y, n, steps)
+        return 0
+
+    def device_dispatch():
+        trainer.train_cohort_indexed(params, store, sel, n_i, steps)
+        return 0
+
+    b0 = trainer.data_h2d_bytes
+    host_s, _ = timed(host_dispatch)
+    host_bytes = (trainer.data_h2d_bytes - b0) // (iters + 1)
+    b0 = trainer.data_h2d_bytes
+    dev_s, _ = timed(device_dispatch)
+    dev_bytes = (trainer.data_h2d_bytes - b0) // (iters + 1)
+
+    # correctness guard: identical trained params from identical RNG state
+    trainer_a, trainer_b = make_trainer(), make_trainer()
+    X, y, n = data.cohort(sel)
+    out_a = trainer_a.train_cohort(params, X, y, n, steps)[0]
+    out_b = trainer_b.train_cohort_indexed(params, store, sel, n_i, steps)[0]
+    for a, b in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    return {"K": K, "cohort_floats": K * n_max * feat, "n_max": n_max,
+            "host_input_s": host_in_s, "device_input_s": dev_in_s,
+            "speedup": (host_in_s / dev_in_s if dev_in_s > 0
+                        else float("inf")),
+            "host_train_s": host_s, "device_train_s": dev_s,
+            "train_speedup": host_s / dev_s if dev_s > 0 else float("inf"),
+            "host_h2d_bytes": int(host_bytes),
+            "device_h2d_bytes": int(dev_bytes),
+            "host_input_bytes": int(host_in_bytes),
+            "resident_bytes": store.resident_bytes}
+
+
+def run_dataplane(smoke: bool = False, json_path: str = "") -> dict:
+    from repro.data.synthetic import make_federated_dataset
+    from repro.models.proxy_models import build_bench_model
+
+    cells_spec = ([(4, 50_000)] if smoke
+                  else [(10, 100_000), (10, 1_000_000),
+                        (100, 1_000_000), (100, 4_000_000)])
+    iters = 3 if smoke else 7
+    cells = []
+    for K, floats in cells_spec:
+        cell = _dataplane_cell(K, floats, iters)
+        cells.append(cell)
+        tag = f"dataplane/K{K}_F{cell['cohort_floats']}"
+        print(f"{tag}/input/host,{cell['host_input_s'] * 1e6:.0f},"
+              f"bytes={cell['host_input_bytes']}")
+        print(f"{tag}/input/device,{cell['device_input_s'] * 1e6:.0f},"
+              f"bytes=0 speedup={cell['speedup']:.2f}x")
+        print(f"{tag}/train,{cell['device_train_s'] * 1e6:.0f},"
+              f"host={cell['host_train_s'] * 1e6:.0f}us "
+              f"train_speedup={cell['train_speedup']:.2f}x "
+              f"h2d={cell['host_h2d_bytes']}->{cell['device_h2d_bytes']}")
+
+    # end-to-end: the same scheduler microbench on both planes — dispatch
+    # rate plus the run-level H2D accounting the CI gate checks (full-size
+    # client shards outside smoke, so the input path is a real fraction of
+    # each dispatch)
+    rounds = 2 if smoke else 6
+    data = make_federated_dataset("mnist", n_clients=8,
+                                  scale=0.06 if smoke else 1.0, seed=0)
+    model = build_bench_model("mnist")
+    for dp in ("device", "host"):       # compile warmup, discarded
+        _bench_dispatch(model, data, "apodotiko", 1, data_plane=dp)
+    runs = [_bench_dispatch(model, data, "apodotiko", rounds, data_plane=dp)
+            for dp in ("device", "host")]
+    for d in runs:
+        print(f"dataplane/e2e/{d['data_plane']},{d['wall_s'] * 1e6:.0f},"
+              f"events_per_s={d['events_per_s']} "
+              f"data_host_bytes={d['data_host_bytes']}")
+
+    out = {"bench": "data_plane", "smoke": smoke,
+           "backend": jax.default_backend(), "cells": cells,
+           "end_to_end": runs}
+    path = json_path or os.path.join(_ROOT, "BENCH_dataplane.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+
+    # CI gate: the device plane must move ZERO training-input bytes
+    leaked = [c["device_h2d_bytes"] for c in cells if c["device_h2d_bytes"]]
+    e2e_dev = next(r for r in runs if r["data_plane"] == "device")
+    if leaked or e2e_dev["data_host_bytes"]:
+        print(f"FAIL: device data plane moved host bytes "
+              f"(cells={leaked}, e2e={e2e_dev['data_host_bytes']})")
+        sys.exit(1)
+    return out
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     jp = ""
@@ -269,5 +486,7 @@ if __name__ == "__main__":
         jp = sys.argv[sys.argv.index("--json") + 1]
     if "--scheduler" in sys.argv:
         run_scheduler(smoke=smoke, json_path=jp)
+    elif "--dataplane" in sys.argv:
+        run_dataplane(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

@@ -65,7 +65,11 @@ def run_sweep_mode(argv: list[str]) -> None:
         f"#   [{i + 1}/{n}] {r.key}"
         + (f" FAILED: {m['error']}" if "error" in m else ""), flush=True))
     print(f"# sweep done in {time.time() - t0:.1f}s\n", flush=True)
-    print(table.to_markdown(columns=SWEEP_COLUMNS))
+    cols = SWEEP_COLUMNS
+    if len({r["data_plane"] for r in table.rows}) > 1:
+        # plane-ablation sweeps: show which transport each row ran on
+        cols = SWEEP_COLUMNS[:3] + ("data_plane",) + SWEEP_COLUMNS[3:]
+    print(table.to_markdown(columns=cols))
     for s in sorted({r["strategy"] for r in table.rows}):
         if s != "fedavg":
             print(f"# mean speedup vs fedavg [{s}]: {table.mean_speedup(s)}")

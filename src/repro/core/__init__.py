@@ -4,6 +4,8 @@ from repro.core.selection import select_clients  # noqa: F401
 from repro.core.database import Database, ClientRecord, ResultRecord  # noqa: F401
 from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows  # noqa: F401
 from repro.core.update_store import UpdateStore  # noqa: F401
+from repro.core.data_plane import (  # noqa: F401
+    DatasetStore, dataset_store, resolve_data_plane)
 from repro.core.services import FLConfig, FLRuntime, RoundLog  # noqa: F401
 from repro.core.controller import Controller  # noqa: F401
 from repro.core.scheduler import Scheduler, build_engine  # noqa: F401

@@ -8,6 +8,16 @@ step masking). Simulated durations come from the hardware model, so the
 timing behaviour matches per-client execution while the host does one
 batched computation (a beyond-paper systems optimization, DESIGN.md §2).
 
+Two data planes feed the cohort fn (DESIGN.md §2, ``core.data_plane``):
+
+  * **device** (default): the fn takes a ``[Kp] int32`` client-index
+    vector plus the ``DatasetStore``'s resident buffers and gathers each
+    minibatch on device inside the jit — zero H2D training-input bytes
+    per dispatch;
+  * **host** (oracle): the padded ``[Kp, N_max, ...]`` cohort arrays are
+    fancy-indexed on host and uploaded every dispatch (the pre-data-plane
+    behaviour; ``data_h2d_bytes`` counts the uploads).
+
 Supports the baseline strategies' client-side modifications:
   - FedProx: proximal term  mu/2 ||w - w_global||^2
   - SCAFFOLD: control-variate-corrected gradients + c_i update
@@ -16,6 +26,7 @@ from __future__ import annotations
 
 import functools
 import itertools
+import os
 import weakref
 from typing import Any, Optional
 
@@ -34,12 +45,29 @@ def _l2_sq(a: Pytree, b: Pytree) -> jax.Array:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def _steps_bucket(steps: int) -> int:
-    """Round max step counts to power-of-two buckets to bound recompiles."""
-    b = 8
-    while b < steps:
+def _bucket(x: int, floor: int) -> int:
+    """Round up to the next power-of-two multiple of ``floor``."""
+    b = max(int(floor), 1)
+    while b < x:
         b *= 2
     return b
+
+
+def _steps_bucket(steps: int, floor: int = 8) -> int:
+    """Round max step counts to power-of-two buckets to bound recompiles."""
+    return _bucket(steps, floor)
+
+
+# Cohort sizes bucket separately from step counts: a K=1 reinforcement or
+# re-invocation used to pad to the step floor of 8 (~8x wasted lanes); the
+# cohort floor is 2, so solo dispatches run 2 padded lanes and mixed
+# selection sizes still compile O(log K) variants.
+DEFAULT_COHORT_FLOOR = 2
+
+
+def cohort_bucket_floor() -> int:
+    """The cohort-size bucket floor (``REPRO_COHORT_FLOOR``, default 2)."""
+    return int(os.environ.get("REPRO_COHORT_FLOOR", DEFAULT_COHORT_FLOOR))
 
 
 # Compiled cohort-train fns shared across Controller instances (strategies
@@ -68,29 +96,38 @@ class CohortTrainer:
     """Vectorized local training over a cohort sharing one model/optimizer."""
 
     def __init__(self, model, *, optimizer: str, lr: float, batch_size: int,
-                 prox_mu: float = 0.0, scaffold: bool = False, seed: int = 0):
+                 prox_mu: float = 0.0, scaffold: bool = False, seed: int = 0,
+                 cohort_floor: Optional[int] = None):
         self.model = model
         self.opt = build_optimizer(optimizer, lr)
         self.lr = lr
         self.batch_size = batch_size
         self.prox_mu = prox_mu
         self.scaffold = scaffold
+        self.cohort_floor = (cohort_bucket_floor() if cohort_floor is None
+                             else int(cohort_floor))
         self._key = jax.random.PRNGKey(seed)
-        self._compiled: dict[int, Any] = {}
+        self.data_h2d_bytes = 0   # training-input bytes uploaded (host plane)
 
     # ----------------------------------------------------------- single fn
-    def _make_fn(self, max_steps: int, flat_updates: bool = False):
+    def _make_fn(self, max_steps: int, flat_updates: bool = False,
+                 indexed: bool = False):
         model, opt = self.model, self.opt
         B, mu, use_cv, lr = self.batch_size, self.prox_mu, self.scaffold, self.lr
 
-        def local_train(params0, X, y, n_i, steps, key, cg, ci):
+        def local_train(params0, fetch, n_i, steps, key, cg, ci):
+            # ``fetch(idx) -> (x, y)`` abstracts the minibatch gather: the
+            # host plane indexes this lane's [N_max, ...] slice, the device
+            # plane gathers straight out of the resident [M, N_max, ...]
+            # buffers — identical values, so the planes stay bit-identical.
             opt_state = opt.init(params0)
 
             def body(carry, s):
                 params, opt_state, key = carry
                 key, k = jax.random.split(key)
                 idx = jax.random.randint(k, (B,), 0, jnp.maximum(n_i, 1))
-                batch = {"x": X[idx], "y": y[idx]}
+                bx, by = fetch(idx)
+                batch = {"x": bx, "y": by}
 
                 def loss_fn(p):
                     l, _ = model.loss(p, batch)
@@ -122,7 +159,30 @@ class CohortTrainer:
                 ci_new = ci
             return params, ci_new, mean_loss
 
-        v = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0, 0, None, 0))
+        if indexed:
+            # Device data plane: per-lane client index into the resident
+            # dataset buffers (unbatched jit args — never re-uploaded, never
+            # baked into the program as constants). The lane slices its
+            # client's rows ONCE before the scan — a device-device gather —
+            # so the per-step minibatch gather sees the same lane-local
+            # operand as the host path (a per-step two-level gather from
+            # the full buffer lowers to a slow batched-gather on XLA CPU).
+            def client_fn(params0, cidx, n_i, steps, key, cg, ci, DX, Dy):
+                Xl, yl = DX[cidx], Dy[cidx]
+                return local_train(
+                    params0, lambda idx: (Xl[idx], yl[idx]),
+                    n_i, steps, key, cg, ci)
+
+            v = jax.vmap(client_fn,
+                         in_axes=(None, 0, 0, 0, 0, None, 0, None, None))
+            n_lead = 9
+        else:
+            def client_fn(params0, X, y, n_i, steps, key, cg, ci):
+                return local_train(params0, lambda idx: (X[idx], y[idx]),
+                                   n_i, steps, key, cg, ci)
+
+            v = jax.vmap(client_fn, in_axes=(None, 0, 0, 0, 0, 0, None, 0))
+            n_lead = 8
         if not flat_updates:
             return jax.jit(v)
 
@@ -133,15 +193,45 @@ class CohortTrainer:
         # zeroed). The buffer is *donated* and the chained aliased scatters
         # are in-place writes: zero host round-trips, no buffer copy, no
         # concatenated [K, W] intermediate.
-        def cohort_flat(params0, X, y, n_i, steps, keys, cg, ci,
-                        buffer, row_ids):
-            out_params, ci_new, losses = v(params0, X, y, n_i, steps,
-                                           keys, cg, ci)
+        def cohort_flat(*args):
+            lead, (buffer, row_ids) = args[:n_lead], args[n_lead:]
+            out_params, ci_new, losses = v(*lead)
             buffer = scatter_rows(buffer, row_ids,
                                   jax.tree.leaves(out_params))
             return buffer, ci_new, losses
 
-        return jax.jit(cohort_flat, donate_argnums=(8,))
+        return jax.jit(cohort_flat, donate_argnums=(n_lead,))
+
+    # ------------------------------------------------------------- helpers
+    def _pad_variates(self, global_params, c_global, c_clients, Kp, K):
+        """Broadcastable zero trees when SCAFFOLD is off; zero-padded
+        [Kp, ...] stacked variates when on (pad lanes run 0 steps)."""
+        if c_global is None:
+            c_global = jax.tree.map(lambda p: jnp.zeros((), p.dtype),
+                                    global_params)
+            c_clients = jax.tree.map(
+                lambda p: jnp.zeros((Kp,) + (1,) * p.ndim, p.dtype),
+                global_params)
+        elif c_clients is not None and Kp != K:
+            c_clients = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((Kp - K,) + a.shape[1:], a.dtype)], axis=0),
+                c_clients)
+        return c_global, c_clients
+
+    def _cohort_keys(self, Kp):
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.split(sub, Kp)
+
+    def _compiled(self, cache_key, max_steps, flat_updates, indexed):
+        if cache_key not in _COMPILE_CACHE:
+            _COMPILE_CACHE[cache_key] = self._make_fn(
+                max_steps, flat_updates=flat_updates, indexed=indexed)
+        return _COMPILE_CACHE[cache_key]
+
+    def _config_key(self) -> tuple:
+        return (_model_token(self.model), self.opt.name, self.lr,
+                self.batch_size, self.prox_mu, self.scaffold)
 
     # --------------------------------------------------------------- train
     def train_cohort(self, global_params: Pytree, X: np.ndarray, y: np.ndarray,
@@ -149,7 +239,8 @@ class CohortTrainer:
                      c_global: Optional[Pytree] = None,
                      c_clients: Optional[Pytree] = None, *,
                      update_sink=None):
-        """X: [K, N_max, ...], y: [K, N_max], n_i/steps: [K].
+        """Host data plane: X [K, N_max, ...], y [K, N_max], n_i/steps [K]
+        are uploaded per dispatch (counted in ``data_h2d_bytes``).
         Returns (params [K, ...] stacked, c_clients', mean losses [K]).
 
         With ``update_sink`` (an ``UpdateStore``) the trained client models
@@ -161,7 +252,7 @@ class CohortTrainer:
         K = X.shape[0]
         # pad the cohort to a power-of-two bucket: one compile serves every
         # selection size in the bucket (padded entries run 0 active steps)
-        Kp = _steps_bucket(K)
+        Kp = _bucket(K, self.cohort_floor)
         if Kp != K:
             padt = lambda a: np.concatenate(
                 [a, np.repeat(a[-1:], Kp - K, axis=0)], axis=0)
@@ -169,38 +260,68 @@ class CohortTrainer:
             n_i = padt(np.asarray(n_i))
             steps = np.concatenate([steps, np.zeros(Kp - K, steps.dtype)])
         max_steps = _steps_bucket(int(steps.max()))
-        cache_key = (_model_token(self.model), self.opt.name, self.lr,
-                     self.batch_size, self.prox_mu, self.scaffold, Kp,
-                     max_steps, X.shape[1:], y.dtype, flat_updates)
-        if cache_key not in _COMPILE_CACHE:
-            _COMPILE_CACHE[cache_key] = self._make_fn(
-                max_steps, flat_updates=flat_updates)
-        fn = _COMPILE_CACHE[cache_key]
-        self._key, sub = jax.random.split(self._key)
-        keys = jax.random.split(sub, Kp)
-        if c_global is None:
-            c_global = jax.tree.map(lambda p: jnp.zeros((), p.dtype), global_params)
-            c_clients = jax.tree.map(
-                lambda p: jnp.zeros((Kp,) + (1,) * p.ndim, p.dtype), global_params)
-        elif c_clients is not None and Kp != K:
-            c_clients = jax.tree.map(
-                lambda a: jnp.concatenate(
-                    [a, jnp.zeros((Kp - K,) + a.shape[1:], a.dtype)], axis=0),
-                c_clients)
+        cache_key = self._config_key() + (Kp, max_steps, X.shape[1:],
+                                          y.dtype, flat_updates, "host")
+        fn = self._compiled(cache_key, max_steps, flat_updates, indexed=False)
+        keys = self._cohort_keys(Kp)
+        c_global, c_clients = self._pad_variates(global_params, c_global,
+                                                 c_clients, Kp, K)
+        X, y = np.asarray(X), np.asarray(y)
+        self.data_h2d_bytes += X.nbytes + y.nbytes
         trim = lambda t: jax.tree.map(lambda a: a[:K], t)
-        if flat_updates:
-            # padded cohort entries run 0 active steps, so their rows hold
-            # the unchanged global model — written then recycled right away
-            ids = update_sink.alloc(Kp)
-            new_buffer, ci_new, losses = fn(
-                global_params, jnp.asarray(X), jnp.asarray(y),
+        lead = (global_params, jnp.asarray(X), jnp.asarray(y),
                 jnp.asarray(n_i), jnp.asarray(steps), keys, c_global,
-                c_clients, update_sink.buffer, jnp.asarray(ids))
-            update_sink.buffer = new_buffer
-            if Kp != K:
-                update_sink.free(ids[K:])
-            return ids[:K], trim(ci_new), np.asarray(losses)[:K]
-        out_params, ci_new, losses = fn(
-            global_params, jnp.asarray(X), jnp.asarray(y), jnp.asarray(n_i),
-            jnp.asarray(steps), keys, c_global, c_clients)
+                c_clients)
+        if flat_updates:
+            return self._run_flat(fn, lead, update_sink, Kp, K, trim)
+        out_params, ci_new, losses = fn(*lead)
         return trim(out_params), trim(ci_new), np.asarray(losses)[:K]
+
+    def train_cohort_indexed(self, global_params: Pytree, store,
+                             selection, n_i: np.ndarray, steps: np.ndarray,
+                             c_global: Optional[Pytree] = None,
+                             c_clients: Optional[Pytree] = None, *,
+                             update_sink=None):
+        """Device data plane: the cohort is a ``[K]`` vector of client
+        indices into ``store`` (a ``DatasetStore``); every minibatch is
+        gathered out of the resident buffers inside the jit — zero H2D
+        training-input bytes. Pad lanes repeat the last index (mirroring
+        the host path's row repeat) and run 0 active steps. The compile
+        cache collapses to (cohort bucket, step bucket, flat_updates):
+        data shapes are fixed for the store's lifetime."""
+        flat_updates = update_sink is not None
+        sel = np.asarray(selection, np.int32)
+        n_i = np.asarray(n_i)
+        K = len(sel)
+        Kp = _bucket(K, self.cohort_floor)
+        if Kp != K:
+            sel = np.concatenate([sel, np.repeat(sel[-1:], Kp - K)])
+            n_i = np.concatenate([n_i, np.repeat(n_i[-1:], Kp - K)])
+            steps = np.concatenate([steps, np.zeros(Kp - K, steps.dtype)])
+        max_steps = _steps_bucket(int(steps.max()))
+        cache_key = self._config_key() + (Kp, max_steps, store.X.shape[1:],
+                                          store.y.dtype, flat_updates,
+                                          "device")
+        fn = self._compiled(cache_key, max_steps, flat_updates, indexed=True)
+        keys = self._cohort_keys(Kp)
+        c_global, c_clients = self._pad_variates(global_params, c_global,
+                                                 c_clients, Kp, K)
+        trim = lambda t: jax.tree.map(lambda a: a[:K], t)
+        lead = (global_params, jnp.asarray(sel), jnp.asarray(n_i),
+                jnp.asarray(steps), keys, c_global, c_clients,
+                store.X, store.y)
+        if flat_updates:
+            return self._run_flat(fn, lead, update_sink, Kp, K, trim)
+        out_params, ci_new, losses = fn(*lead)
+        return trim(out_params), trim(ci_new), np.asarray(losses)[:K]
+
+    def _run_flat(self, fn, lead, update_sink, Kp, K, trim):
+        # padded cohort entries run 0 active steps, so their rows hold
+        # the unchanged global model — written then recycled right away
+        ids = update_sink.alloc(Kp)
+        new_buffer, ci_new, losses = fn(*lead, update_sink.buffer,
+                                        jnp.asarray(ids))
+        update_sink.buffer = new_buffer
+        if Kp != K:
+            update_sink.free(ids[K:])
+        return ids[:K], trim(ci_new), np.asarray(losses)[:K]

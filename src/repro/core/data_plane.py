@@ -1,0 +1,103 @@
+"""Device-resident data plane: the federated dataset lives on device.
+
+PR 2's update plane removed the host round-trips for client *updates*; this
+module removes the symmetric input cost. The legacy ("host") path pays, on
+every cohort dispatch, a host-side fancy-index of ``data.X[selection]``, a
+pad-concatenation to the cohort bucket, and a full host→device upload of
+the padded cohort dataset — at K=100 the dominant per-round transfer. The
+``DatasetStore`` instead uploads the padded per-client training arrays
+``X [M, N_max, ...] / y [M, N_max]`` to persistent device buffers **once**
+at runtime construction; thereafter the jitted cohort-train function
+(``core.client``) receives only a ``[Kp] int32`` client-index vector and
+gathers each minibatch directly out of the resident buffers *inside the
+jit* — zero host→device training-input bytes per round, and the
+compile-cache key loses its per-selection data shapes (they are fixed for
+the store's lifetime).
+
+Selection: ``FLConfig.data_plane`` > ``REPRO_DATA_PLANE`` > ``"device"``
+(mirroring ``REPRO_UPDATE_PLANE``). The host path is kept as the
+equivalence oracle: both planes produce bit-identical round traces
+(tests/test_data_plane.py) because the device gather yields exactly the
+batch values the host fancy-index would have uploaded, and every
+downstream op sees identical shapes.
+
+Stores are cached per ``FederatedDataset`` object (id-keyed with a
+``weakref.finalize`` eviction), so sweep cells and golden-trace test
+pairs sharing one dataset share one resident copy instead of
+re-uploading per run.
+"""
+from __future__ import annotations
+
+import os
+import weakref
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.update_store import gather_stacked
+
+
+def resolve_data_plane(mode: str) -> str:
+    """'device' (default: resident buffers, on-jit gather) | 'host'
+    (legacy per-dispatch fancy-index + upload, the equivalence oracle).
+    Resolution: explicit config value > ``REPRO_DATA_PLANE`` > 'device'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_DATA_PLANE", "device")
+    if mode not in ("device", "host"):
+        raise ValueError(f"unknown data plane {mode!r} "
+                         "(expected 'device', 'host', or 'auto')")
+    return mode
+
+
+class DatasetStore:
+    """Persistent device residence of one ``FederatedDataset``.
+
+    Holds ``X [M, N_max, ...]`` and ``y [M, N_max]`` as device arrays,
+    uploaded exactly once. The arrays are passed (not closed over)
+    into the jitted cohort fn, so every trainer sharing the store hits the
+    same compiled entry and no program embeds the dataset as a constant.
+
+    The store mirrors the dataset at construction; clients registered
+    later (``add_clients``) must already have rows in the underlying
+    dataset — ``FLRuntime.invoke_round`` bounds-checks selections against
+    ``n_clients`` because an out-of-range device gather clamps silently
+    where the host fancy-index would raise.
+    """
+
+    def __init__(self, data: Any):
+        self.X = jnp.asarray(data.X)
+        self.y = jnp.asarray(data.y)
+        # sample counts stay host-side: the runtime needs them on host
+        # anyway (step budgets, result cardinalities), and the jitted
+        # cohort fn receives the [Kp] slice as a per-dispatch arg
+        self.n_clients = int(self.X.shape[0])
+        # one-time H2D cost of residence (NOT per-round traffic; the
+        # per-round counter is CohortTrainer.data_h2d_bytes)
+        self.resident_bytes = int(self.X.nbytes + self.y.nbytes)
+
+    def gather(self, selection) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Device gather of a cohort's (X, y) — debug/oracle convenience;
+        the hot path gathers per-minibatch inside the jitted cohort fn."""
+        idx = jnp.asarray(np.asarray(selection, np.int32))
+        gx, gy = gather_stacked((self.X, self.y), idx)
+        return gx, gy
+
+
+# One resident copy per dataset object: sweep cells and test pairs reuse it.
+# FederatedDataset is an unhashable dataclass, so the cache keys by id();
+# a weakref.finalize evicts the entry when the dataset is collected, BEFORE
+# its id can be recycled — a new dataset at a reused address can never be
+# served the old store.
+_STORE_CACHE: dict[int, DatasetStore] = {}
+
+
+def dataset_store(data: Any) -> DatasetStore:
+    """The cached ``DatasetStore`` for ``data`` (built on first use)."""
+    key = id(data)
+    store = _STORE_CACHE.get(key)
+    if store is None:
+        store = DatasetStore(data)
+        _STORE_CACHE[key] = store
+        weakref.finalize(data, _STORE_CACHE.pop, key, None)
+    return store

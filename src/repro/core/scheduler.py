@@ -69,6 +69,7 @@ class Scheduler(FLRuntime):
         self._invoked_this_round = False
         self._progress: Optional[Callable[[RoundLog], None]] = None
         self.n_events = 0               # protocol events dispatched
+        self.n_coalesced = 0            # actions merged into batched dispatches
 
     # -------------------------------------------------------------------- run
     def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
@@ -124,8 +125,54 @@ class Scheduler(FLRuntime):
     def _dispatch(self, event: Event) -> None:
         self.n_events += 1
         actions = self.policy.on_event(event, self.view)
-        for action in actions or ():
+        for action in self._coalesce(actions or ()):
             self._execute(action)
+
+    def _coalesce(self, actions) -> list[Action]:
+        """Merge same-instant cohort work: all ``Invoke`` actions a policy
+        emits in one dispatch pump collapse into a single batched cohort
+        dispatch (one padded jit call instead of several solo ones, each
+        padded to the bucket floor), and likewise all ``Hedge`` actions.
+        ``Aggregate``/``EndRun``/``CancelInvocation`` are barriers: they
+        change what a later ``Invoke`` would mean (a new global model, a
+        cancelled client), so merging never crosses them. ``Invoke`` and
+        ``Hedge`` are also barriers for *each other*: merging a ``Hedge``
+        backward across an ``Invoke`` (or vice versa) would reorder a
+        hedge relative to the invocation it targets, so interleaved
+        sequences keep their relative order and only same-kind runs
+        separated by neutral actions (e.g. ``SetTimer``) merge. Duplicate
+        client ids keep their first occurrence."""
+        out: list[Action] = []
+        inv_at: Optional[int] = None
+        hedge_at: Optional[int] = None
+        for a in actions:
+            if isinstance(a, Invoke):
+                hedge_at = None
+                if inv_at is None:
+                    inv_at = len(out)
+                    out.append(a)
+                else:
+                    prev = out[inv_at]
+                    extra = tuple(c for c in a.clients
+                                  if c not in prev.clients)
+                    out[inv_at] = Invoke(prev.clients + extra)
+                    self.n_coalesced += 1
+            elif isinstance(a, Hedge):
+                inv_at = None
+                if hedge_at is None:
+                    hedge_at = len(out)
+                    out.append(a)
+                else:
+                    prev = out[hedge_at]
+                    extra = tuple(c for c in a.clients
+                                  if c not in prev.clients)
+                    out[hedge_at] = Hedge(prev.clients + extra)
+                    self.n_coalesced += 1
+            else:
+                out.append(a)
+                if isinstance(a, (Aggregate, EndRun, CancelInvocation)):
+                    inv_at = hedge_at = None
+        return out
 
     def _execute(self, action: Action) -> None:
         if isinstance(action, Invoke):
@@ -189,6 +236,7 @@ class Scheduler(FLRuntime):
         m = super().metrics()
         m["strategy"] = self.policy.name
         m["n_events"] = self.n_events
+        m["n_coalesced"] = self.n_coalesced
         m.update(self.policy.metrics())
         return m
 

@@ -34,11 +34,13 @@ import numpy as np
 
 from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows
 from repro.core.client import CohortTrainer
+from repro.core.data_plane import DatasetStore, dataset_store, resolve_data_plane
 from repro.core.database import ClientRecord, Database, ResultRecord
 from repro.core.protocol import (ClientJoined, ClientLeft, Event,
                                  InvocationFailed, ResultLanded)
 from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
-from repro.core.update_store import UpdateStore
+from repro.core.update_store import (UpdateStore, gather_stacked,
+                                     grow_stacked, scatter_stacked_tree)
 from repro.faas.cost import CostModel
 from repro.faas.events import EventLoop
 from repro.faas.hardware import HardwareProfile
@@ -125,6 +127,15 @@ class FLConfig:
     #                                 reactive protocol, the default) |
     #                                 "legacy" (pre-redesign poll loop);
     #                                 "auto" defers to REPRO_ENGINE
+    data_plane: str = "auto"       # training-input transport: "device"
+    #                                 keeps the federated dataset resident
+    #                                 on device and the jitted cohort fn
+    #                                 gathers minibatches by client index
+    #                                 (zero H2D training-input bytes per
+    #                                 round); "host" is the legacy
+    #                                 fancy-index + per-dispatch upload;
+    #                                 "auto" defers to REPRO_DATA_PLANE
+    #                                 (default device)
     # -- harness ---------------------------------------------------------------
     eval_every: int = 1            # evaluate global model every k rounds
     seed: int = 0                  # RNG seed: selection, init, platform noise
@@ -226,6 +237,10 @@ class FLRuntime:
         # never pruned: cost/metrics must resolve hardware for historical
         # invocations of since-removed clients
         self._hw_history = dict(self.hw)
+        # client id -> position in ``fleet``: removal must drop the entry
+        # the id owns, not the first list entry that compares equal (two
+        # clients may share one HardwareProfile object)
+        self._fleet_pos = {cid: cid for cid in range(len(fleet))}
 
         rng = jax.random.PRNGKey(cfg.seed)
         if init_params is not None:
@@ -234,12 +249,17 @@ class FLRuntime:
             self.params = jax.tree.map(jnp.asarray, self.db.latest_global())
         else:
             self.params = model.init(rng)[0]
-        # SCAFFOLD state
+        # SCAFFOLD state: c_global plus a persistent device-resident
+        # stacked buffer of per-client control variates, indexed by client
+        # id — cohort gathers/scatters are device ops, replacing the old
+        # per-round host dict + jnp.stack
         self.c_global = None
-        self.c_clients: dict[int, Pytree] = {}
+        self.c_buf: Optional[Pytree] = None
+        self._c_cap = 0
         if self.strategy.needs_scaffold:
             self.c_global = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
                                          self.params)
+            self._ensure_c_capacity(max(cfg.n_clients, 1))
         self.history: list[RoundLog] = []
         self._eval_fn = jax.jit(model.accuracy)
         self._eval_scan = None      # (jitted fn, padded arrays) built lazily
@@ -262,6 +282,13 @@ class FLRuntime:
                 capacity=max(cfg.clients_per_round, 1))
             if db is not None and cfg.checkpoint_dir:
                 self._rehydrate_store()
+
+        # -- data plane: device-resident training inputs -------------------
+        self.data_plane = resolve_data_plane(cfg.data_plane)
+        self.dataset: Optional[DatasetStore] = None
+        if self.data_plane == "device":
+            # one resident upload per dataset object (cached across runs)
+            self.dataset = dataset_store(data)
 
     # -- driver view contract (protocol.DatabaseView reads these) ------------
     @property
@@ -304,6 +331,21 @@ class FLRuntime:
                 f"model has N={self.spec.n_params}")
         self.store.write_at(ids, rows)
 
+    # ------------------------------------------------------- SCAFFOLD buffer
+    def _ensure_c_capacity(self, n: int) -> None:
+        """Grow the control-variate buffer to hold client ids < ``n``
+        (amortized doubling, zero-initialized new rows)."""
+        if n <= self._c_cap:
+            return
+        cap = max(n, 2 * self._c_cap)
+        if self.c_buf is None:
+            self.c_buf = jax.tree.map(
+                lambda p: jnp.zeros((cap,) + p.shape, jnp.float32),
+                self.params)
+        else:
+            self.c_buf = grow_stacked(self.c_buf, self._c_cap, cap)
+        self._c_cap = cap
+
     # ---------------------------------------------------------------- elastic
     def add_clients(self, records: list[ClientRecord],
                     profiles: list[HardwareProfile]) -> None:
@@ -311,27 +353,37 @@ class FLRuntime:
             self.db.register_client(rec)
             self.hw[rec.client_id] = hw
             self._hw_history[rec.client_id] = hw
+            self._fleet_pos[rec.client_id] = len(self.fleet)
             self.fleet.append(hw)
+            if self.c_buf is not None:
+                self._ensure_c_capacity(rec.client_id + 1)
             self._emit(ClientJoined(t=self.loop.now, client_id=rec.client_id))
 
     def remove_clients(self, client_ids: list[int]) -> None:
         """Deregister clients mid-run: cancel their in-flight invocations
         (releasing update rows/blobs), drop their hardware profile from
-        ``hw`` and ``fleet``, and emit ``ClientLeft`` through the
-        protocol."""
+        ``hw`` and ``fleet`` (by the id's recorded fleet position — a
+        ``list.remove`` identity scan would evict the wrong entry when two
+        clients share one HardwareProfile object), and emit ``ClientLeft``
+        through the protocol."""
         for cid in client_ids:
             for inv in list(self.inflight.get(cid, ())):
                 self._cancel_inflight(inv)
             self.inflight.pop(cid, None)
             if self.db.clients.pop(cid, None) is None:
                 continue
-            self.c_clients.pop(cid, None)
-            hw = self.hw.pop(cid, None)
-            if hw is not None:
-                try:
-                    self.fleet.remove(hw)
-                except ValueError:
-                    pass
+            if self.c_buf is not None and cid < self._c_cap:
+                # a rejoining id must start from zero variates, like any
+                # fresh client
+                self.c_buf = jax.tree.map(
+                    lambda b: b.at[cid].set(0.0), self.c_buf)
+            self.hw.pop(cid, None)
+            pos = self._fleet_pos.pop(cid, None)
+            if pos is not None:
+                del self.fleet[pos]
+                for c, p in self._fleet_pos.items():
+                    if p > pos:
+                        self._fleet_pos[c] = p - 1
             self._emit(ClientLeft(t=self.loop.now, client_id=cid))
 
     # -------------------------------------------------- protocol emit hook
@@ -357,15 +409,24 @@ class FLRuntime:
         cg = self.c_global
         ci = None
         if self.strategy.needs_scaffold:
-            zeros = lambda p: jnp.zeros_like(p, jnp.float32)
-            ci_list = [self.c_clients.get(cid) or jax.tree.map(zeros, self.params)
-                       for cid in selection]
-            ci = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ci_list)
+            # device gather out of the persistent variate buffer (replaces
+            # the old per-round host dict lookup + jnp.stack)
+            self._ensure_c_capacity(max(selection) + 1)
+            sel_idx = jnp.asarray(np.asarray(selection, np.int32))
+            ci = gather_stacked(self.c_buf, sel_idx)
         device = self.update_plane == "device"
-        out, ci_new, losses = self.trainer.train_cohort(
-            self.params, self.data.X[selection], self.data.y[selection],
-            n_i, steps, cg, ci,
-            update_sink=self.store if device else None)
+        sink = self.store if device else None
+        if self.data_plane == "device":
+            # out-of-range selections already raised at the data.n[...]
+            # fancy-index above — the resident device gather (which would
+            # clamp silently) can never see one
+            out, ci_new, losses = self.trainer.train_cohort_indexed(
+                self.params, self.dataset, selection, n_i, steps, cg, ci,
+                update_sink=sink)
+        else:
+            out, ci_new, losses = self.trainer.train_cohort(
+                self.params, self.data.X[selection], self.data.y[selection],
+                n_i, steps, cg, ci, update_sink=sink)
         if device:
             # trained models never left the device: the jitted cohort fn
             # scattered them into the store's persistent row buffer; only
@@ -504,21 +565,17 @@ class FLRuntime:
         return launched
 
     def _apply_scaffold_updates(self, selection, ci_new) -> None:
-        old = [self.c_clients.get(cid) for cid in selection]
-        new_list = [jax.tree.map(lambda x: x[k], ci_new)
-                    for k in range(len(selection))]
-        # c <- c + sum(c_i' - c_i) / N_total
+        """c <- c + sum(c_i' - c_i) / N_total, entirely on device: the old
+        variates are gathered out of the persistent buffer, the delta is a
+        stacked-axis reduction, and the new variates scatter back in
+        place — no per-client host pytrees."""
+        sel_idx = jnp.asarray(np.asarray(selection, np.int32))
+        old = gather_stacked(self.c_buf, sel_idx)
         n_total = max(len(self.db.clients), 1)
-        delta = None
-        for cid, n, o in zip(selection, new_list, old):
-            if o is None:
-                o = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), n)
-            d = jax.tree.map(lambda a, b: a - b, n, o)
-            delta = d if delta is None else jax.tree.map(jnp.add, delta, d)
-            self.c_clients[cid] = n
-        if delta is not None:
-            self.c_global = jax.tree.map(
-                lambda c, d: c + d / n_total, self.c_global, delta)
+        self.c_global = jax.tree.map(
+            lambda c, nw, o: c + jnp.sum(nw - o, axis=0) / n_total,
+            self.c_global, ci_new, old)
+        self.c_buf = scatter_stacked_tree(self.c_buf, sel_idx, ci_new)
 
     # ------------------------------------------------- aggregation service
     def aggregate_round(self, round_: int) -> tuple[int, int, float]:
@@ -627,6 +684,12 @@ class FLRuntime:
             "engine": self.engine_name,
             "update_plane": self.update_plane,
             "update_host_bytes": int(self.update_host_bytes),
+            "data_plane": self.data_plane,
+            # per-dispatch H2D training-input traffic (0 on the device
+            # plane: the dataset is resident — see data_resident_bytes)
+            "data_host_bytes": int(self.trainer.data_h2d_bytes),
+            "data_resident_bytes": (self.dataset.resident_bytes
+                                    if self.dataset is not None else 0),
             "rounds": len(self.history),
             "final_accuracy": self.history[-1].accuracy if self.history else 0.0,
             "total_time": self.loop.now,

@@ -48,6 +48,38 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def gather_rows(buffer, ids) -> jnp.ndarray:
+    """[len(ids), W] device row gather (no host copy). Shared by the
+    update store, the aggregation gather fallback, and checkpointing."""
+    return buffer[jnp.asarray(np.asarray(ids, np.int32))]
+
+
+def gather_stacked(tree, idx):
+    """Per-leaf ``[M, ...] -> [K, ...]`` device gather over a stacked
+    pytree — the read half of the persistent-buffer contract shared by the
+    SCAFFOLD control-variate buffer (``core.services``) and the
+    device-resident dataset (``core.data_plane``)."""
+    return jax.tree.map(lambda b: b[idx], tree)
+
+
+def scatter_stacked_tree(tree, idx, values):
+    """Per-leaf row write of ``[K, ...]`` values into a ``[M, ...]``-stacked
+    pytree (the write half of ``gather_stacked``)."""
+    return jax.tree.map(lambda b, v: b.at[idx].set(v.astype(b.dtype)),
+                        tree, values)
+
+
+def grow_stacked(tree, old_rows: int, new_rows: int):
+    """Extend every ``[M, ...]`` leaf of a stacked pytree with zero rows to
+    ``[new_rows, ...]`` (persistent-buffer growth on client join)."""
+    if new_rows <= old_rows:
+        return tree
+    return jax.tree.map(
+        lambda b: jnp.concatenate(
+            [b, jnp.zeros((new_rows - old_rows,) + b.shape[1:], b.dtype)]),
+        tree)
+
+
 def scatter_rows(buffer, ids, leaves):
     """Traceable column-stripe row write: each [K, ...]-stacked leaf lands
     in its stripe of the buffer rows (RavelSpec leaf order), tail pad lanes
@@ -140,7 +172,7 @@ class UpdateStore:
 
     def gather(self, ids: Sequence[int]) -> jnp.ndarray:
         """[len(ids), W] device gather (no host copy)."""
-        return self.buffer[jnp.asarray(np.asarray(ids, np.int32))]
+        return gather_rows(self.buffer, ids)
 
     def row(self, i: int) -> jnp.ndarray:
         return self.buffer[int(i)]

@@ -22,7 +22,12 @@ from repro.data.partition import (
 
 @dataclass
 class FederatedDataset:
-    """Padded per-client arrays: X [C, N_max, ...], y [C, N_max], n [C]."""
+    """Padded per-client arrays: X [C, N_max, ...], y [C, N_max], n [C].
+
+    The padded layout is the contract both data planes share: the host
+    plane fancy-indexes ``X[selection]`` per dispatch, the device plane
+    (``core.data_plane.DatasetStore``) uploads ``X``/``y`` once and
+    gathers by client index inside the jitted cohort fn."""
 
     X: np.ndarray
     y: np.ndarray
@@ -34,6 +39,18 @@ class FederatedDataset:
     @property
     def n_clients(self) -> int:
         return self.X.shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        """Training-input bytes (X + y): what the host plane re-uploads
+        over a run and the device plane holds resident once."""
+        return int(self.X.nbytes + self.y.nbytes)
+
+    def cohort(self, selection) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host-side cohort slice (X, y, n) — the host-plane dispatch
+        input, kept as the oracle for the on-device gather."""
+        sel = np.asarray(selection)
+        return self.X[sel], self.y[sel], self.n[sel]
 
 
 def _pad_pack(xs: list[np.ndarray], ys: list[np.ndarray], n_max: int):

@@ -29,20 +29,26 @@ class RunSpec:
     seed: int = 0
     concurrency_ratio: float = 0.3       # CR (paper Alg. 1); async only
     staleness_fn: str = "eq2"            # Eq. 2 (Apodotiko) | Eq. 1
+    data_plane: str = "auto"             # training-input transport
+    #                                      (device | host | auto)
     overrides: Tuple[Tuple[str, Any], ...] = ()  # extra FLConfig fields
 
     @property
     def key(self) -> str:
         ov = ";".join(f"{k}={v}" for k, v in self.overrides)
+        dp = "" if self.data_plane == "auto" else f"/dp={self.data_plane}"
         return (f"{self.dataset}/{self.scenario}/{self.strategy}"
                 f"/cr={self.concurrency_ratio:g}/{self.staleness_fn}"
-                f"/seed={self.seed}" + (f"/{ov}" if ov else ""))
+                f"/seed={self.seed}" + dp + (f"/{ov}" if ov else ""))
 
     @property
     def group(self) -> tuple:
         """Comparison group: strategies within one group share a baseline
-        (FedAvg) for speedup / cold-start / cost ratios."""
-        return (self.dataset, self.scenario, self.seed, self.overrides)
+        (FedAvg) for speedup / cold-start / cost ratios. The data plane is
+        a group axis: a device cell must be ratioed against the device
+        FedAvg, never silently against the host one."""
+        return (self.dataset, self.scenario, self.seed, self.data_plane,
+                self.overrides)
 
 
 @dataclass(frozen=True)
@@ -79,6 +85,7 @@ class SweepSpec:
     scenarios: Sequence[str] = ("heterogeneous",)
     concurrency_ratios: Sequence[float] = (0.3,)
     staleness_fns: Sequence[str] = ("eq2",)
+    data_planes: Sequence[str] = ("auto",)   # device/host transport ablation
     scale: SweepScale = field(default=BENCH_SCALE)
     overrides: Tuple[Tuple[str, Any], ...] = ()
 
@@ -86,18 +93,19 @@ class SweepSpec:
     def n_runs(self) -> int:
         return (len(self.datasets) * len(self.strategies) * len(self.seeds)
                 * len(self.scenarios) * len(self.concurrency_ratios)
-                * len(self.staleness_fns))
+                * len(self.staleness_fns) * len(self.data_planes))
 
 
 def expand_grid(spec: SweepSpec) -> list[RunSpec]:
     """Enumerate the grid in deterministic (dataset-major) order."""
     runs = [
         RunSpec(dataset=ds, strategy=strat, scenario=sc, seed=seed,
-                concurrency_ratio=cr, staleness_fn=fn,
+                concurrency_ratio=cr, staleness_fn=fn, data_plane=dp,
                 overrides=tuple(spec.overrides))
-        for ds, sc, seed, cr, fn, strat in product(
+        for ds, sc, seed, cr, fn, dp, strat in product(
             spec.datasets, spec.scenarios, spec.seeds,
-            spec.concurrency_ratios, spec.staleness_fns, spec.strategies)
+            spec.concurrency_ratios, spec.staleness_fns, spec.data_planes,
+            spec.strategies)
     ]
     keys = [r.key for r in runs]
     if len(set(keys)) != len(keys):

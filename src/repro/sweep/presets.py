@@ -69,6 +69,14 @@ PRESETS: dict[str, SweepSpec] = {
         name="adaptive_cr", datasets=("mnist",),
         strategies=("fedbuff", "apodotiko", "apodotiko-adaptive"),
         concurrency_ratios=(0.3,)),
+    # device-vs-host data-plane ablation: same strategies, same seeds,
+    # only the training-input transport differs — time-to-accuracy must
+    # match (bit-identical traces, tests/test_data_plane.py) while wall
+    # clock and H2D bytes diverge (BENCH_dataplane.json quantifies it)
+    "dataplane_ablation": SweepSpec(
+        name="dataplane_ablation", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko"),
+        data_planes=("device", "host")),
     # CI-sized end-to-end check (two strategies, seconds)
     "smoke": SweepSpec(name="smoke", datasets=("mnist",),
                        strategies=("fedavg", "apodotiko"),

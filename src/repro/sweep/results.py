@@ -27,7 +27,7 @@ from repro.sweep.grid import RunSpec
 
 SCHEMA = (
     "sweep", "dataset", "scenario", "strategy", "seed", "concurrency_ratio",
-    "staleness_fn", "rounds", "target_acc", "time_to_target_s",
+    "staleness_fn", "data_plane", "rounds", "target_acc", "time_to_target_s",
     "speedup_vs_fedavg", "final_acc", "best_acc", "sim_time_s",
     "cold_starts", "cold_start_ratio", "cold_start_reduction_vs_fedavg",
     "cost_usd", "cost_vs_fedavg", "n_invocations", "error",
@@ -93,7 +93,8 @@ class ResultTable:
             row.update(sweep=sweep_name, dataset=run.dataset,
                        scenario=run.scenario, strategy=run.strategy,
                        seed=run.seed, concurrency_ratio=run.concurrency_ratio,
-                       staleness_fn=run.staleness_fn)
+                       staleness_fn=run.staleness_fn,
+                       data_plane=run.data_plane)
             m = metrics_list[i]
             if m is None or "error" in m:
                 row["error"] = (m or {}).get("error", "missing")
