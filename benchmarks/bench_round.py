@@ -5,6 +5,18 @@ under hedge-style cancellation churn, end-to-end protocol dispatch rate
 (events/sec), and the overhead of the hedging policy vs plain apodotiko.
 The scheduler numbers land in ``BENCH_scheduler.json``.
 
+``--controlplane`` measures the *control* plane (DESIGN.md §10): the
+score+select dispatch of Algorithm 3 — candidate partition, CEF scoring,
+probabilistic draw, booster bookkeeping — on the object plane (per-client
+``ClientRecord`` Python loop, the oracle) vs the columnar ``FleetStore``
+(vectorized f64 window scoring, bit-identical selections) vs the
+device-resident masked top-k selector (``FleetStore.select_topk``), at
+fleet sizes M ∈ {1e3, 1e4, 1e5, 1e6}. The object plane is skipped at
+M=1e6 (that is the point: a million ClientRecord objects is the wall the
+columnar plane removes). Lands in ``BENCH_controlplane.json``; exits
+nonzero if object and columnar selections diverge on the shared RNG
+stream (the CI equivalence gate).
+
 ``--dataplane`` measures the *input* half of the transport story
 (DESIGN.md §2, "data plane"): per-cohort-dispatch latency and H2D
 training-input bytes with the dataset resident on device
@@ -479,6 +491,112 @@ def run_dataplane(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# ----------------------------------------------------------- control plane
+
+
+def _control_states(M: int, seed: int = 0, history: int = 3):
+    """Identical fleet state on both control planes: M clients, everyone
+    invoked `history` times with shared random durations (so selection
+    exercises the scored path, not the uninvoked bootstrap)."""
+    from repro.core.database import ClientRecord, Database
+
+    rng = np.random.default_rng(seed)
+    card = rng.integers(50, 500, M).astype(np.int64)
+    durs = rng.uniform(1.0, 60.0, (M, history))
+
+    col = Database(control_plane="columnar")
+    col.fleet.add_batch(np.arange(M), card, 10, 5)
+    col.fleet.bulk_history(durs)
+
+    obj = None
+    if M <= 200_000:        # a million ClientRecords is the wall itself
+        obj = Database(control_plane="object")
+        for cid in range(M):
+            rec = ClientRecord(client_id=cid, hardware="cpu1",
+                               data_cardinality=int(card[cid]),
+                               batch_size=10, local_epochs=5,
+                               n_invocations=history,
+                               durations=[float(d) for d in durs[cid]])
+            obj.register_client(rec)
+    return obj, col
+
+
+def _controlplane_cell(M: int, K: int, iters: int) -> dict:
+    from repro.core.selection import select_clients
+
+    obj, col = _control_states(M)
+
+    def timed(fn):
+        fn(np.random.default_rng(99))               # warmup/compile
+        times = []
+        for i in range(iters):
+            r = np.random.default_rng(1000 + i)
+            t0 = time.perf_counter()
+            fn(r)
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    col_s = timed(lambda r: select_clients(col, K, r))
+    topk_s = timed(lambda r: col.fleet.select_topk(K, 1.2))
+    obj_s = timed(lambda r: select_clients(obj, K, r)) if obj else None
+    return {"M": M, "K": K, "object_s": obj_s, "columnar_s": col_s,
+            "topk_s": topk_s,
+            "speedup": (obj_s / col_s if obj_s else None),
+            "topk_speedup": (obj_s / topk_s if obj_s else None)}
+
+
+def _controlplane_gate(M: int = 1000, K: int = 64, rounds: int = 5) -> bool:
+    """Object and columnar selection must stay bit-identical over evolving
+    state: shared RNG stream, same completions folded back in each step."""
+    from repro.core.selection import select_clients
+
+    obj, col = _control_states(M)
+    r_obj, r_col = (np.random.default_rng(7), np.random.default_rng(7))
+    for t in range(rounds):
+        s_obj = select_clients(obj, K, r_obj)
+        s_col = select_clients(col, K, r_col)
+        if s_obj != s_col:
+            return False
+        for db in (obj, col):
+            for j, cid in enumerate(s_obj):
+                db.mark_running(cid, t)
+                db.mark_complete(cid, 1.0 + ((cid * 7 + j + t) % 50))
+    return True
+
+
+def run_controlplane(smoke: bool = False, json_path: str = "") -> dict:
+    cells_spec = ([(1_000, 64)] if smoke
+                  else [(1_000, 100), (10_000, 100),
+                        (100_000, 100), (1_000_000, 100)])
+    iters = 3 if smoke else 5
+    cells = []
+    for M, K in cells_spec:
+        cell = _controlplane_cell(M, K, iters)
+        cells.append(cell)
+        obj_us = (f"{cell['object_s'] * 1e6:.0f}" if cell["object_s"]
+                  else "skipped")
+        sp = (f"{cell['speedup']:.1f}x" if cell["speedup"] else "n/a")
+        tsp = (f"{cell['topk_speedup']:.1f}x" if cell["topk_speedup"]
+               else "n/a")
+        print(f"controlplane/M{M}/object,{obj_us},")
+        print(f"controlplane/M{M}/columnar,{cell['columnar_s'] * 1e6:.0f},"
+              f"speedup={sp}")
+        print(f"controlplane/M{M}/topk,{cell['topk_s'] * 1e6:.0f},"
+              f"topk_speedup={tsp}")
+    identical = _controlplane_gate()
+    out = {"bench": "control_plane", "smoke": smoke,
+           "backend": jax.default_backend(), "cells": cells,
+           "selection_identical": identical}
+    path = json_path or os.path.join(_ROOT, "BENCH_controlplane.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    if not identical:
+        print("FAIL: columnar selection diverged from the object oracle")
+        sys.exit(1)
+    return out
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     jp = ""
@@ -488,5 +606,7 @@ if __name__ == "__main__":
         run_scheduler(smoke=smoke, json_path=jp)
     elif "--dataplane" in sys.argv:
         run_dataplane(smoke=smoke, json_path=jp)
+    elif "--controlplane" in sys.argv:
+        run_controlplane(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

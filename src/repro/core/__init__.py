@@ -1,12 +1,15 @@
 from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko  # noqa: F401
-from repro.core.scoring import calculate_score  # noqa: F401
+from repro.core.scoring import (  # noqa: F401
+    calculate_score, calculate_scores, ema_push, ema_score)
 from repro.core.selection import select_clients  # noqa: F401
 from repro.core.database import Database, ClientRecord, ResultRecord  # noqa: F401
+from repro.core.fleet_store import FleetStore  # noqa: F401
 from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows  # noqa: F401
 from repro.core.update_store import UpdateStore  # noqa: F401
 from repro.core.data_plane import (  # noqa: F401
     DatasetStore, dataset_store, resolve_data_plane)
-from repro.core.services import FLConfig, FLRuntime, RoundLog  # noqa: F401
+from repro.core.services import (  # noqa: F401
+    FLConfig, FLRuntime, RoundLog, resolve_control_plane)
 from repro.core.controller import Controller  # noqa: F401
 from repro.core.scheduler import Scheduler, build_engine  # noqa: F401
 from repro.core.protocol import (  # noqa: F401

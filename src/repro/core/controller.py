@@ -34,8 +34,9 @@ from typing import Callable, Optional
 # Re-exported for backwards compatibility: these lived here before the
 # scheduler redesign split the services out (PR 3).
 from repro.core.services import (FLConfig, FLRuntime, RoundLog,  # noqa: F401
-                                 UPDATE_STORE_DIRNAME, resolve_engine,
-                                 resolve_update_plane, strategy_config)
+                                 UPDATE_STORE_DIRNAME, resolve_control_plane,
+                                 resolve_engine, resolve_update_plane,
+                                 strategy_config)
 
 
 class Controller(FLRuntime):
@@ -55,9 +56,7 @@ class Controller(FLRuntime):
             selection = strat.select(self.db, round_)
             if not selection:
                 # every client busy: advance until something completes
-                if not self.loop.run_until(
-                        lambda: any(c.status == "idle"
-                                    for c in self.db.clients.values())):
+                if not self.loop.run_until(self.db.any_idle):
                     break
                 continue
             self.invoke_round(round_, selection)

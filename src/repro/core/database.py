@@ -6,6 +6,28 @@ through it (Algorithm 1 lines 6-7, 20-22). Here it is an in-process store
 with the same record semantics plus optional persistence (JSON metadata +
 NPZ parameter blobs) so the controller can crash and resume — the
 fault-tolerance path exercised in tests/test_checkpoint.py.
+
+Two **control planes** back the per-client state (DESIGN.md §10):
+
+* ``object`` — the original dict of :class:`ClientRecord` Python objects.
+  Kept verbatim as the equivalence oracle and for direct construction
+  (``Database()`` defaults to it, so tests poking records keep working).
+* ``columnar`` — a struct-of-arrays :class:`~repro.core.fleet_store.FleetStore`
+  (the runtime default via ``REPRO_CONTROL_PLANE``): status/cardinality/
+  booster/EMA columns, duration ring buffers, id->slot map. Selection and
+  scoring run vectorized over the columns with **bit-identical** results
+  to the object plane (tests/test_control_plane.py).
+
+Both planes expose one uniform accessor API (``mark_*``, ``has_client``,
+``idle_client_ids``, ``any_idle``, ``recent_durations``, ...) — the
+runtime, scheduler, and strategies speak only that API, never the record
+objects, so the plane is swappable per run. ``db.clients`` remains as a
+dict view: the live dict on the object plane, a materialized *snapshot*
+of ClientRecords on the columnar plane (read-only by construction — for
+tests and debugging, never on a hot path).
+
+Results, update blobs, and global models are plane-independent: they are
+O(clients_per_round) per round, not O(fleet).
 """
 from __future__ import annotations
 
@@ -15,6 +37,10 @@ from dataclasses import asdict, dataclass, field
 from typing import Any, Optional
 
 import numpy as np
+
+from repro.core.fleet_store import IDLE, RUNNING, FleetStore
+
+FLEET_NPZ = "fleet.npz"
 
 
 @dataclass
@@ -54,33 +80,156 @@ class Database:
     """Transactional-enough store: every mutation goes through a method so a
     snapshot/restore pair gives a consistent view (used for FT tests)."""
 
-    def __init__(self):
-        self.clients: dict[int, ClientRecord] = {}
+    def __init__(self, control_plane: str = "object"):
+        if control_plane not in ("object", "columnar"):
+            raise ValueError(f"unknown control plane {control_plane!r}")
+        self.control_plane = control_plane
+        self._clients: dict[int, ClientRecord] = {}
+        self.fleet: Optional[FleetStore] = (
+            FleetStore() if control_plane == "columnar" else None)
         self.results: list[ResultRecord] = []
         self.blobs: dict[str, Any] = {}          # update pytrees (host numpy)
         self.global_models: dict[int, str] = {}  # round -> blob key
         self.round: int = 0
         self.meta: dict[str, Any] = {}
 
+    @property
+    def columnar(self) -> bool:
+        return self.control_plane == "columnar"
+
     # ------------------------------------------------------------- clients
+    @property
+    def clients(self) -> dict:
+        """Object plane: the live record dict. Columnar plane: a
+        materialized ClientRecord snapshot (reads reflect the columns at
+        call time; mutations do NOT write back — use the accessor API)."""
+        if not self.columnar:
+            return self._clients
+        return {cid: self.materialize_client(cid)
+                for cid in self.fleet.client_ids()}
+
+    def materialize_client(self, client_id: int) -> ClientRecord:
+        fs = self.fleet
+        s = fs.slot_of(client_id)
+        last = int(fs.last_round[s])
+        return ClientRecord(
+            client_id=int(client_id), hardware="",
+            data_cardinality=int(fs.cardinality[s]),
+            batch_size=int(fs.batch_size[s]),
+            local_epochs=int(fs.local_epochs[s]),
+            booster=float(fs.booster[s]),
+            status="running" if fs.status[s] == RUNNING else "idle",
+            invoked_rounds=[last] if last >= 0 else [],
+            durations=fs.recent_durations(client_id, fs.history),
+            n_invocations=int(fs.n_invocations[s]),
+            n_failures=int(fs.n_failures[s]))
+
     def register_client(self, rec: ClientRecord) -> None:
-        self.clients[rec.client_id] = rec
+        if self.columnar:
+            self.fleet.add(rec.client_id, rec.data_cardinality,
+                           rec.batch_size, rec.local_epochs,
+                           booster=rec.booster,
+                           status=RUNNING if rec.status == "running"
+                           else IDLE)
+            if rec.durations or rec.n_invocations or rec.n_failures:
+                # pre-populated record (tests/benches seed history this
+                # way): replay it into the columns so both planes score
+                # the client identically
+                self.fleet.install_history(
+                    rec.client_id, rec.durations,
+                    n_invocations=rec.n_invocations,
+                    n_failures=rec.n_failures,
+                    last_round=(rec.invoked_rounds[-1]
+                                if rec.invoked_rounds else -1))
+        else:
+            self._clients[rec.client_id] = rec
+
+    def unregister_client(self, client_id: int) -> bool:
+        if self.columnar:
+            return self.fleet.remove(client_id)
+        return self._clients.pop(client_id, None) is not None
 
     def mark_running(self, client_id: int, round_: int) -> None:
-        c = self.clients[client_id]
+        if self.columnar:
+            self.fleet.mark_running(client_id, round_)
+            return
+        c = self._clients[client_id]
         c.status = "running"
         c.invoked_rounds.append(round_)
         c.n_invocations += 1
 
     def mark_complete(self, client_id: int, duration: float) -> None:
-        c = self.clients[client_id]
+        if self.columnar:
+            self.fleet.mark_complete(client_id, duration)
+            return
+        c = self._clients[client_id]
         c.status = "idle"
         c.durations.append(duration)
 
     def mark_failed(self, client_id: int) -> None:
-        c = self.clients[client_id]
+        if self.columnar:
+            self.fleet.mark_failed(client_id)
+            return
+        c = self._clients[client_id]
         c.status = "idle"
         c.n_failures += 1
+
+    def incr_failures(self, client_id: int) -> None:
+        """Count a failure without touching status (a hedge sibling is
+        still racing for this client)."""
+        if self.columnar:
+            self.fleet.incr_failures(client_id)
+        else:
+            self._clients[client_id].n_failures += 1
+
+    def release_client(self, client_id: int) -> None:
+        """Return a running client to idle without recording a duration
+        (cancellation path)."""
+        if self.columnar:
+            self.fleet.set_idle(client_id)
+            return
+        rec = self._clients.get(client_id)
+        if rec is not None and rec.status == "running":
+            rec.status = "idle"
+
+    # ------------------------------------------------ uniform fleet queries
+    @property
+    def n_clients(self) -> int:
+        return len(self.fleet) if self.columnar else len(self._clients)
+
+    def has_client(self, client_id: int) -> bool:
+        if self.columnar:
+            return self.fleet.has(client_id)
+        return client_id in self._clients
+
+    def client_ids(self) -> list[int]:
+        """Registered client ids in registration order (dict order on the
+        object plane, seq order on the columnar one — identical)."""
+        if self.columnar:
+            return self.fleet.client_ids()
+        return list(self._clients)
+
+    def idle_client_ids(self) -> list[int]:
+        """Idle client ids in registration order — the shared selection
+        candidate list (both planes produce the identical list, so shared
+        downstream ``rng.choice`` draws stay bit-identical)."""
+        if self.columnar:
+            return self.fleet.idle_ids()
+        return [c.client_id for c in self._clients.values()
+                if c.status == "idle"]
+
+    def any_idle(self) -> bool:
+        if self.columnar:
+            return self.fleet.any_idle()
+        return any(c.status == "idle" for c in self._clients.values())
+
+    def recent_durations(self, client_id: int, k: int) -> list[float]:
+        """The client's last <=k training durations, oldest first (empty
+        for unknown clients) — ``record.durations[-k:]`` on both planes."""
+        if self.columnar:
+            return self.fleet.recent_durations(client_id, k)
+        rec = self._clients.get(client_id)
+        return list(rec.durations[-k:]) if rec is not None else []
 
     # ------------------------------------------------------------- results
     def put_update(self, rec: ResultRecord, update: Any) -> None:
@@ -125,7 +274,12 @@ class Database:
         meta = {
             "round": self.round,
             "meta": self.meta,
-            "clients": {str(k): asdict(v) for k, v in self.clients.items()},
+            "control_plane": self.control_plane,
+            # object plane: full records; columnar plane: the columns live
+            # in fleet.npz (no O(fleet) JSON materialization)
+            "clients": ({} if self.columnar else
+                        {str(k): asdict(v)
+                         for k, v in self._clients.items()}),
             "results": [asdict(r) for r in self.results],
             "global_models": {str(k): v for k, v in self.global_models.items()},
         }
@@ -133,6 +287,11 @@ class Database:
         with open(tmp, "w") as f:
             json.dump(meta, f)
         os.replace(tmp, os.path.join(path, "db.json"))
+        if self.columnar:
+            tmp = os.path.join(path, ".fleet.npz.tmp")
+            with open(tmp, "wb") as f:
+                np.savez(f, **self.fleet.state_dict())
+            os.replace(tmp, os.path.join(path, FLEET_NPZ))
         flat = {}
         for key, tree in self.blobs.items():
             leaves, _ = _flatten(tree)
@@ -143,13 +302,17 @@ class Database:
 
     @classmethod
     def load(cls, path: str) -> "Database":
-        db = cls()
         with open(os.path.join(path, "db.json")) as f:
             meta = json.load(f)
+        db = cls(control_plane=meta.get("control_plane", "object"))
         db.round = meta["round"]
         db.meta = meta["meta"]
-        for k, v in meta["clients"].items():
-            db.clients[int(k)] = ClientRecord(**v)
+        if db.columnar:
+            with np.load(os.path.join(path, FLEET_NPZ)) as data:
+                db.fleet = FleetStore.from_state(dict(data))
+        else:
+            for k, v in meta["clients"].items():
+                db._clients[int(k)] = ClientRecord(**v)
         db.results = [ResultRecord(**r) for r in meta["results"]]
         db.global_models = {int(k): v for k, v in meta["global_models"].items()}
         data = np.load(os.path.join(path, "blobs.npz"), allow_pickle=False)

@@ -213,7 +213,29 @@ class DatabaseView:
 
     @property
     def clients(self) -> Mapping[int, "ClientRecord"]:
+        """Record view — O(fleet) materialization on the columnar plane;
+        policies should prefer the plane-agnostic accessors below."""
         return MappingProxyType(self._rt.db.clients)
+
+    @property
+    def control_plane(self) -> str:
+        return self._rt.db.control_plane
+
+    @property
+    def n_clients(self) -> int:
+        return self._rt.db.n_clients
+
+    def has_client(self, client_id: int) -> bool:
+        return self._rt.db.has_client(client_id)
+
+    def any_idle(self) -> bool:
+        """Any registered client currently idle (both planes, O(columns))."""
+        return self._rt.db.any_idle()
+
+    def recent_durations(self, client_id: int, k: int):
+        """The client's last <=k training durations, oldest first (empty
+        list for unknown clients) — the hedge-ranking accessor."""
+        return self._rt.db.recent_durations(client_id, k)
 
     @property
     def results(self) -> Tuple["ResultRecord", ...]:

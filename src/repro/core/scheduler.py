@@ -176,7 +176,7 @@ class Scheduler(FLRuntime):
 
     def _execute(self, action: Action) -> None:
         if isinstance(action, Invoke):
-            selection = [c for c in action.clients if c in self.db.clients]
+            selection = [c for c in action.clients if self.db.has_client(c)]
             if selection:
                 self.invoke_round(self.db.round, selection,
                                   reset_completed=not self._invoked_this_round)

@@ -7,6 +7,16 @@
    normalize to probabilities, and sample without replacement.
 4. Booster bookkeeping: reset to 1 for selected clients; multiply by the
    promotion rate (1 + rho) for available-but-unselected clients.
+
+Two implementations, dispatched by the database's control plane
+(DESIGN.md §10): the original per-``ClientRecord`` Python loop (the
+object-plane oracle, kept verbatim below) and a vectorized columnar twin
+over ``FleetStore`` arrays. Both are **bit-identical**: the columnar path
+builds the same candidate lists in the same (registration) order, computes
+the same f64 scores (``scoring.calculate_scores`` replays the scalar
+loop's operation order), and feeds the identical probability vector to the
+identical ``rng.choice`` calls — so the two planes consume the same RNG
+stream and return the same selections (tests/test_control_plane.py).
 """
 from __future__ import annotations
 
@@ -25,6 +35,9 @@ def select_clients(
     adjustment_rate: float = 0.2,
     history_window: int = 10,
 ) -> list[int]:
+    if db.columnar:
+        return _select_clients_columnar(db, clients_per_round, rng,
+                                        adjustment_rate, history_window)
     clients = list(db.clients.values())
     uninvoked = [c for c in clients if not c.ever_invoked and c.status == "idle"]
     invoked = [c for c in clients if c.ever_invoked and c.status == "idle"]
@@ -72,3 +85,64 @@ def _update_boosters(db: Database, selection: Sequence[int],
             c.booster = 1.0
         elif c.status == "idle":
             c.booster *= beta
+
+
+# --------------------------------------------------------- columnar twin
+
+
+def _select_clients_columnar(
+    db: Database,
+    clients_per_round: int,
+    rng: np.random.Generator,
+    adjustment_rate: float = 0.2,
+    history_window: int = 10,
+) -> list[int]:
+    """Algorithm 3 over FleetStore columns — one vectorized scoring pass
+    instead of an O(M) Python loop, bit-identical draws (module docstring)."""
+    fleet = db.fleet
+    order = fleet.ordered_slots()
+    idle = fleet.status[order] == 0
+    ever = fleet.n_invocations[order] > 0
+    unv = order[idle & ~ever]
+    inv = order[idle & ever]
+
+    # Lines 4-6: prioritize uninvoked clients to gather scoring data.
+    if len(unv) >= clients_per_round:
+        picks = rng.choice(len(unv), size=clients_per_round, replace=False)
+        selection = fleet.ids[unv[picks]].tolist()
+        _update_boosters_columnar(db, selection, adjustment_rate)
+        return selection
+
+    selection = fleet.ids[unv].tolist()
+    need = clients_per_round - len(selection)
+    need = min(need, len(inv))
+    if need > 0:
+        lam = decay_rate(adjustment_rate)
+        scores = fleet.window_scores(inv, history_window, lam)
+        # Line 12: normalize scores into probabilities.
+        smax = scores.max() if len(scores) else 0.0
+        if smax <= 0:
+            probs = np.full(len(inv), 1.0 / len(inv))
+        else:
+            norm = scores / smax                    # scale to (0, 1]
+            probs = norm / norm.sum()
+        picks = rng.choice(len(inv), size=need, replace=False, p=probs)
+        selection += fleet.ids[inv[picks]].tolist()
+
+    _update_boosters_columnar(db, selection, adjustment_rate)
+    return selection
+
+
+def _update_boosters_columnar(db: Database, selection: Sequence[int],
+                              adjustment_rate: float) -> None:
+    """Vectorized booster bookkeeping: same per-element f64 ops as the
+    object-plane loop (set 1.0 / one multiply), so boosters stay bit-equal
+    across planes round after round."""
+    fleet = db.fleet
+    beta = promotion_rate(adjustment_rate)
+    chosen = np.array([fleet.slot_of(c) for c in selection], np.int64)
+    idle = fleet.active & (fleet.status == 0)
+    if len(chosen):
+        idle[chosen] = False
+        fleet.booster[chosen] = 1.0
+    fleet.booster[idle] *= beta

@@ -38,6 +38,7 @@ from repro.core.data_plane import DatasetStore, dataset_store, resolve_data_plan
 from repro.core.database import ClientRecord, Database, ResultRecord
 from repro.core.protocol import (ClientJoined, ClientLeft, Event,
                                  InvocationFailed, ResultLanded)
+from repro.core.scoring import decay_rate
 from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
 from repro.core.update_store import (UpdateStore, gather_stacked,
                                      grow_stacked, scatter_stacked_tree)
@@ -60,6 +61,19 @@ def resolve_update_plane(mode: str) -> str:
     if mode not in ("device", "blob"):
         raise ValueError(f"unknown update plane {mode!r} "
                          "(expected 'device', 'blob', or 'auto')")
+    return mode
+
+
+def resolve_control_plane(mode: str) -> str:
+    """'columnar' (default: struct-of-arrays FleetStore, vectorized
+    scoring/selection) | 'object' (legacy per-client ClientRecord dict,
+    kept as the equivalence oracle).
+    Resolution: explicit config value > ``REPRO_CONTROL_PLANE`` > 'columnar'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_CONTROL_PLANE", "columnar")
+    if mode not in ("columnar", "object"):
+        raise ValueError(f"unknown control plane {mode!r} "
+                         "(expected 'columnar', 'object', or 'auto')")
     return mode
 
 
@@ -127,6 +141,14 @@ class FLConfig:
     #                                 reactive protocol, the default) |
     #                                 "legacy" (pre-redesign poll loop);
     #                                 "auto" defers to REPRO_ENGINE
+    control_plane: str = "auto"    # per-client fleet state: "columnar"
+    #                                 (default) keeps status/scores/duration
+    #                                 rings in struct-of-arrays columns with
+    #                                 vectorized scoring + selection (scales
+    #                                 to 1e6 clients); "object" is the
+    #                                 legacy per-client ClientRecord dict,
+    #                                 kept as the bit-exact oracle; "auto"
+    #                                 defers to REPRO_CONTROL_PLANE
     data_plane: str = "auto"       # training-input transport: "device"
     #                                 keeps the federated dataset resident
     #                                 on device and the jitted cohort fn
@@ -226,7 +248,16 @@ class FLRuntime:
             batch_size=cfg.batch_size, prox_mu=self.strategy.prox_mu,
             scaffold=self.strategy.needs_scaffold, seed=cfg.seed)
 
-        self.db = db or Database()
+        # control plane: a restored checkpoint's plane is authoritative
+        # (its client state is stored in that representation)
+        self.control_plane = (db.control_plane if db is not None
+                              else resolve_control_plane(cfg.control_plane))
+        self.db = db or Database(control_plane=self.control_plane)
+        if self.db.columnar:
+            # incremental-EMA decay (lambda = 1 - rho) for the device
+            # score state; the bit-exact windowed path re-derives it from
+            # the strategy config at each selection
+            self.db.fleet.decay = decay_rate(cfg.adjustment_rate)
         if db is None:
             for cid in range(cfg.n_clients):
                 self.db.register_client(ClientRecord(
@@ -370,7 +401,7 @@ class FLRuntime:
             for inv in list(self.inflight.get(cid, ())):
                 self._cancel_inflight(inv)
             self.inflight.pop(cid, None)
-            if self.db.clients.pop(cid, None) is None:
+            if not self.db.unregister_client(cid):
                 continue
             if self.c_buf is not None and cid < self._c_cap:
                 # a rejoining id must start from zero variates, like any
@@ -471,7 +502,7 @@ class FLRuntime:
             if siblings:
                 # a hedge is still racing: count the failure but keep the
                 # client marked running for the surviving invocation
-                self.db.clients[inv.client_id].n_failures += 1
+                self.db.incr_failures(inv.client_id)
             else:
                 self.db.mark_failed(inv.client_id)
             pay.refs -= 1
@@ -536,9 +567,7 @@ class FLRuntime:
         to the idle pool (the ``CancelInvocation`` action)."""
         for inv in list(self.inflight.get(cid, ())):
             self._cancel_inflight(inv)
-        rec = self.db.clients.get(cid)
-        if rec is not None and rec.status == "running":
-            rec.status = "idle"
+        self.db.release_client(cid)
 
     def hedge_invocations(self, cids: list[int]) -> list[int]:
         """Speculatively re-invoke the outstanding invocation of each
@@ -548,7 +577,7 @@ class FLRuntime:
         ``_complete`` settles the race. Returns the clients hedged."""
         launched = []
         for cid in cids:
-            if cid not in self.db.clients or cid not in self.hw:
+            if not self.db.has_client(cid) or cid not in self.hw:
                 continue
             invs = self.inflight.get(cid, ())
             if any(i.is_hedge and not i.done for i in invs):
@@ -571,7 +600,7 @@ class FLRuntime:
         place — no per-client host pytrees."""
         sel_idx = jnp.asarray(np.asarray(selection, np.int32))
         old = gather_stacked(self.c_buf, sel_idx)
-        n_total = max(len(self.db.clients), 1)
+        n_total = max(self.db.n_clients, 1)
         self.c_global = jax.tree.map(
             lambda c, nw, o: c + jnp.sum(nw - o, axis=0) / n_total,
             self.c_global, ci_new, old)
@@ -678,10 +707,11 @@ class FLRuntime:
         # _hw_history, not hw: invocation records outlive removed clients
         cost = self.cost_model.total(inv, lambda cid: self._hw_history[cid])
         counts = self.platform.invocation_counts()
-        count_arr = [counts.get(cid, 0) for cid in self.db.clients]
+        count_arr = [counts.get(cid, 0) for cid in self.db.client_ids()]
         return {
             "strategy": self.strategy.name,
             "engine": self.engine_name,
+            "control_plane": self.control_plane,
             "update_plane": self.update_plane,
             "update_host_bytes": int(self.update_host_bytes),
             "data_plane": self.data_plane,

@@ -15,6 +15,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.database import Database, ResultRecord
+from repro.core.scoring import promotion_rate
 from repro.core.selection import select_clients as apodotiko_select
 from repro.core.staleness import eq1_fedlesscan, eq2_apodotiko
 
@@ -54,8 +55,11 @@ class Strategy:
 
     # -- selection ------------------------------------------------------------
     def select(self, db: Database, round_: int) -> list[int]:
-        """Default: uniform random among idle clients (FedAvg/FedProx/etc.)."""
-        idle = [c.client_id for c in db.clients.values() if c.status == "idle"]
+        """Default: uniform random among idle clients (FedAvg/FedProx/etc.).
+        ``idle_client_ids`` yields the identical registration-ordered list
+        on both control planes, so the shared ``rng.choice`` draw keeps
+        selections bit-identical across planes."""
+        idle = db.idle_client_ids()
         n = min(self.cfg.clients_per_round, len(idle))
         picks = self.rng.choice(len(idle), size=n, replace=False)
         return [idle[i] for i in picks]
@@ -111,28 +115,48 @@ class FedLesScan(Strategy):
 
     def select(self, db: Database, round_: int) -> list[int]:
         cfg = self.cfg
-        clients = list(db.clients.values())
-        idle = [c for c in clients if c.status == "idle"]
-        uninvoked = [c for c in idle if not c.ever_invoked]
-        if len(uninvoked) >= cfg.clients_per_round:
-            picks = self.rng.choice(len(uninvoked), cfg.clients_per_round,
-                                    replace=False)
-            return [uninvoked[i].client_id for i in picks]
-        selection = [c.client_id for c in uninvoked]
-        invoked = [c for c in idle if c.ever_invoked]
-        if not invoked:
-            return selection
-        # cluster invoked clients by mean duration (1-D k-means, k=3)
-        means = np.array([np.mean(c.durations[-5:]) if c.durations else 0.0
-                          for c in invoked])
+        if db.columnar:
+            # vectorized twin: identical candidate order, identical means
+            # (FleetStore.recent_mean replays np.mean's summation order),
+            # identical rng.choice draws -> bit-identical tiers
+            fleet = db.fleet
+            order = fleet.ordered_slots()
+            idle = order[fleet.status[order] == 0]
+            ever = fleet.n_invocations[idle] > 0
+            unv, inv = idle[~ever], idle[ever]
+            if len(unv) >= cfg.clients_per_round:
+                picks = self.rng.choice(len(unv), cfg.clients_per_round,
+                                        replace=False)
+                return fleet.ids[unv[picks]].tolist()
+            selection = fleet.ids[unv].tolist()
+            if not len(inv):
+                return selection
+            means = fleet.recent_mean(inv, 5)
+            inv_ids = fleet.ids[inv].tolist()
+        else:
+            clients = list(db.clients.values())
+            idle = [c for c in clients if c.status == "idle"]
+            uninvoked = [c for c in idle if not c.ever_invoked]
+            if len(uninvoked) >= cfg.clients_per_round:
+                picks = self.rng.choice(len(uninvoked), cfg.clients_per_round,
+                                        replace=False)
+                return [uninvoked[i].client_id for i in picks]
+            selection = [c.client_id for c in uninvoked]
+            invoked = [c for c in idle if c.ever_invoked]
+            if not invoked:
+                return selection
+            # cluster invoked clients by mean duration (1-D k-means, k=3)
+            means = np.array([np.mean(c.durations[-5:]) if c.durations else 0.0
+                              for c in invoked])
+            inv_ids = [c.client_id for c in invoked]
         order = np.argsort(means)
-        k = 3 if len(invoked) >= 3 else 1
+        k = 3 if len(inv_ids) >= 3 else 1
         clusters = np.array_split(order, k)  # duration-sorted tiers
         need = cfg.clients_per_round - len(selection)
         for cl in clusters:  # fastest tier first; stragglers fill remainder
             take = min(need, len(cl))
             picks = self.rng.choice(len(cl), take, replace=False)
-            selection += [invoked[cl[i]].client_id for i in picks]
+            selection += [inv_ids[cl[i]] for i in picks]
             need -= take
             if need <= 0:
                 break
@@ -141,19 +165,14 @@ class FedLesScan(Strategy):
 
 class FedBuff(Strategy):
     """Asynchronous buffered aggregation with *random* selection (the paper's
-    closest async baseline; production at Meta)."""
+    closest async baseline; production at Meta). Selection is the base
+    uniform-idle draw."""
 
     name = "fedbuff"
     is_async = True
 
     def staleness(self, t_i: int, T: int) -> float:
         return eq2_apodotiko(t_i, T)  # 1/sqrt(1+staleness), as in FedBuff
-
-    def select(self, db: Database, round_: int) -> list[int]:
-        idle = [c.client_id for c in db.clients.values() if c.status == "idle"]
-        n = min(self.cfg.clients_per_round, len(idle))
-        picks = self.rng.choice(len(idle), size=n, replace=False)
-        return [idle[i] for i in picks]
 
 
 class Apodotiko(Strategy):
@@ -173,8 +192,31 @@ class Apodotiko(Strategy):
                                 adjustment_rate=self.cfg.adjustment_rate)
 
 
+class ApodotikoTopK(Apodotiko):
+    """Apodotiko's gating/weighting with fleet-scale *deterministic*
+    cohort selection: one jitted masked top-k over the device-resident
+    EMA score state (``FleetStore.select_topk``, DESIGN.md §10) instead of
+    Algorithm 3's probabilistic host-side sampling. Uninvoked clients rank
+    first (the bootstrap), the booster update runs inside the same kernel,
+    and no per-client Python executes on the selection path — O(M) device
+    work at a million clients. Requires the columnar control plane."""
+
+    name = "apodotiko-topk"
+
+    def select(self, db: Database, round_: int) -> list[int]:
+        if not db.columnar:
+            raise ValueError(
+                "apodotiko-topk selects over the columnar control plane's "
+                "device score state; set control_plane='columnar' "
+                "(REPRO_CONTROL_PLANE=columnar)")
+        return db.fleet.select_topk(
+            self.cfg.clients_per_round,
+            promotion_rate(self.cfg.adjustment_rate))
+
+
 STRATEGIES = {
-    s.name: s for s in (FedAvg, FedProx, Scaffold, FedLesScan, FedBuff, Apodotiko)
+    s.name: s for s in (FedAvg, FedProx, Scaffold, FedLesScan, FedBuff,
+                        Apodotiko, ApodotikoTopK)
 }
 
 

@@ -112,7 +112,7 @@ class LegacyStrategyAdapter(ReactivePolicy):
             return self._open(view)
         if isinstance(ev, (ResultLanded, InvocationFailed)):
             if self._phase == "selecting":
-                if any(c.status == "idle" for c in view.clients.values()):
+                if view.any_idle():
                     return self._open(view)
                 return []
             if self._phase == "gated":
@@ -178,8 +178,7 @@ class ApodotikoHedge(LegacyStrategyAdapter):
         k = max(1, int(np.ceil(self.hedge_fraction * len(cands))))
 
         def expected_slowness(iv):
-            c = view.clients.get(iv.client_id)
-            hist = c.durations[-5:] if c is not None and c.durations else []
+            hist = view.recent_durations(iv.client_id, 5)
             expected = float(np.mean(hist)) if hist else float("inf")
             return (expected, view.now - iv.t_invoked)
 

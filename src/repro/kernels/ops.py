@@ -14,12 +14,16 @@ Higher-level conveniences:
     for ``repro.core.aggregation``;
   - ``aggregate_rows``: index-gather entry point over a persistent [C, N]
     row buffer (the update-plane hot path — no ravel, no stack);
+  - ``masked_topk``: top-k of a score vector (the control plane's cohort
+    selection) — XLA ``lax.top_k`` fast path, blockwise Pallas kernel on
+    TPU (``REPRO_TOPK_PATH=pallas|xla|auto`` forcing);
   - ``compress_update`` / ``decompress_update``: int8 client-update
     compression with error feedback.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Optional, Sequence
 
 import jax
@@ -30,6 +34,7 @@ from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.fused_adam import fused_adam  # noqa: F401
 from repro.kernels.quant8 import QBLOCK, ROWS, dequantize_q8, quantize_q8  # noqa: F401
 from repro.kernels.staleness_agg import BLOCK_N, staleness_agg  # noqa: F401
+from repro.kernels.topk import BLOCK_TOPK, block_topk  # noqa: F401
 
 Pytree = Any
 
@@ -162,6 +167,46 @@ def aggregate_rows_gather(buffer: jax.Array, row_idx, weights) -> jax.Array:
     through this when its finiteness guard trips."""
     idx, w = _pad_rows(row_idx, weights)
     return _gather_weighted_sum(buffer, jnp.asarray(idx), jnp.asarray(w))
+
+
+# --------------------------------------------------------- top-k selection
+def resolve_topk_path(path: Optional[str] = None) -> str:
+    """'xla' (lax.top_k — the fast path everywhere off-TPU) | 'pallas'
+    (blockwise kernel) | 'auto' (pallas on a real TPU backend, xla
+    otherwise). Resolution: explicit arg > ``REPRO_TOPK_PATH`` > 'auto'."""
+    if path in (None, "", "auto"):
+        path = os.environ.get("REPRO_TOPK_PATH", "auto")
+    if path == "auto":
+        return "pallas" if on_tpu() else "xla"
+    if path not in ("pallas", "xla"):
+        raise ValueError(f"unknown topk path {path!r} "
+                         "(expected 'pallas', 'xla', or 'auto')")
+    return path
+
+
+def masked_topk(scores: jax.Array, k: int, *,
+                path: Optional[str] = None,
+                interpret: Optional[bool] = None,
+                block: int = BLOCK_TOPK) -> tuple[jax.Array, jax.Array]:
+    """Top-k of ``scores [M]`` -> ``(vals [k], idx [k])``, descending;
+    masked entries are ``-inf`` scores (the caller filters them by value).
+    Traceable (usable inside jit). The Pallas path computes per-block
+    candidates (``kernels/topk.py``) and reduces them with one small
+    ``lax.top_k``; both paths break ties toward the lowest index."""
+    M = scores.shape[0]
+    assert k <= M, (k, M)
+    path = resolve_topk_path(path)
+    if path == "xla" or M <= block or k > block:
+        return jax.lax.top_k(scores.astype(jnp.float32), k)
+    interpret = default_interpret() if interpret is None else interpret
+    pad = (-M) % block
+    if pad:
+        scores = jnp.pad(scores.astype(jnp.float32), (0, pad),
+                         constant_values=-jnp.inf)
+    vals, idx = block_topk(scores, k, block=block, interpret=interpret)
+    cand_v, cand_i = vals.reshape(-1), idx.reshape(-1)
+    top_v, pos = jax.lax.top_k(cand_v, k)
+    return top_v, cand_i[pos]
 
 
 def aggregate_pytree(updates: Sequence[Pytree], weights,

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: blockwise masked top-k over a score vector.
+
+The columnar control plane's fleet-scale cohort selection reduces to
+"top-k of an ``[M]`` score vector under an eligibility mask" (the mask is
+applied upstream as ``-inf`` scores — DESIGN.md §10). ``lax.top_k`` is the
+XLA fast path; this kernel is the TPU variant that keeps the whole sweep
+in one pass over VMEM-resident tiles:
+
+grid over ``[G, B]`` score blocks; each program runs k rounds of
+(max, first-argmax, mask-out) over its VMEM tile — k is tiny (a cohort,
+<= a few hundred) against B — and writes its local top-k (values + GLOBAL
+indices) to a ``[G, k]`` candidate table. The caller then reduces the
+``G*k`` candidates with one small ``lax.top_k``. Ties break toward the
+lowest index at both levels (first-argmax in-block, block-major candidate
+order across blocks), matching ``lax.top_k``'s tie order, so the two paths
+agree exactly on distinct-score inputs and on tie *order* as well.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_TOPK = 1024   # scores per grid program (lane-aligned: 8 x 128)
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int, block: int):
+    x = x_ref[...].astype(jnp.float32)                       # [1, B]
+    base = pl.program_id(0) * block
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)    # 2D iota (TPU)
+    kcol = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def body(j, carry):
+        xv, vals, idx = carry
+        m = jnp.max(xv)
+        # first index attaining the max (ties -> lowest, lax.top_k order)
+        a = jnp.min(jnp.where(xv == m, col, block))
+        vals = jnp.where(kcol == j, m, vals)
+        idx = jnp.where(kcol == j, base + a, idx)
+        xv = jnp.where(col == a, -jnp.inf, xv)               # extract
+        return xv, vals, idx
+
+    _, vals, idx = jax.lax.fori_loop(
+        0, k, body,
+        (x, jnp.full((1, k), -jnp.inf, jnp.float32),
+         jnp.zeros((1, k), jnp.int32)))
+    vals_ref[...] = vals
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def block_topk(scores: jax.Array, k: int, *, block: int = BLOCK_TOPK,
+               interpret: bool = True):
+    """Per-block top-k candidates of ``scores [M]`` (M % block == 0):
+    returns ``(vals [G, k], global_idx [G, k])`` with G = M // block."""
+    M = scores.shape[0]
+    assert M % block == 0 and k <= block, (M, block, k)
+    G = M // block
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, block=block),
+        grid=(G,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((G, k), jnp.float32),
+                   jax.ShapeDtypeStruct((G, k), jnp.int32)],
+        interpret=interpret,
+    )(scores.reshape(G, block).astype(jnp.float32))
+    return vals, idx

@@ -31,24 +31,29 @@ class RunSpec:
     staleness_fn: str = "eq2"            # Eq. 2 (Apodotiko) | Eq. 1
     data_plane: str = "auto"             # training-input transport
     #                                      (device | host | auto)
+    control_plane: str = "auto"          # fleet-state backing
+    #                                      (columnar | object | auto)
     overrides: Tuple[Tuple[str, Any], ...] = ()  # extra FLConfig fields
 
     @property
     def key(self) -> str:
         ov = ";".join(f"{k}={v}" for k, v in self.overrides)
         dp = "" if self.data_plane == "auto" else f"/dp={self.data_plane}"
+        cp = ("" if self.control_plane == "auto"
+              else f"/ctl={self.control_plane}")
         return (f"{self.dataset}/{self.scenario}/{self.strategy}"
                 f"/cr={self.concurrency_ratio:g}/{self.staleness_fn}"
-                f"/seed={self.seed}" + dp + (f"/{ov}" if ov else ""))
+                f"/seed={self.seed}" + dp + cp + (f"/{ov}" if ov else ""))
 
     @property
     def group(self) -> tuple:
         """Comparison group: strategies within one group share a baseline
-        (FedAvg) for speedup / cold-start / cost ratios. The data plane is
-        a group axis: a device cell must be ratioed against the device
-        FedAvg, never silently against the host one."""
+        (FedAvg) for speedup / cold-start / cost ratios. The data and
+        control planes are group axes: a device/columnar cell must be
+        ratioed against the matching-plane FedAvg, never silently against
+        another plane's."""
         return (self.dataset, self.scenario, self.seed, self.data_plane,
-                self.overrides)
+                self.control_plane, self.overrides)
 
 
 @dataclass(frozen=True)
@@ -86,6 +91,7 @@ class SweepSpec:
     concurrency_ratios: Sequence[float] = (0.3,)
     staleness_fns: Sequence[str] = ("eq2",)
     data_planes: Sequence[str] = ("auto",)   # device/host transport ablation
+    control_planes: Sequence[str] = ("auto",)  # columnar/object fleet state
     scale: SweepScale = field(default=BENCH_SCALE)
     overrides: Tuple[Tuple[str, Any], ...] = ()
 
@@ -93,7 +99,8 @@ class SweepSpec:
     def n_runs(self) -> int:
         return (len(self.datasets) * len(self.strategies) * len(self.seeds)
                 * len(self.scenarios) * len(self.concurrency_ratios)
-                * len(self.staleness_fns) * len(self.data_planes))
+                * len(self.staleness_fns) * len(self.data_planes)
+                * len(self.control_planes))
 
 
 def expand_grid(spec: SweepSpec) -> list[RunSpec]:
@@ -101,11 +108,11 @@ def expand_grid(spec: SweepSpec) -> list[RunSpec]:
     runs = [
         RunSpec(dataset=ds, strategy=strat, scenario=sc, seed=seed,
                 concurrency_ratio=cr, staleness_fn=fn, data_plane=dp,
-                overrides=tuple(spec.overrides))
-        for ds, sc, seed, cr, fn, dp, strat in product(
+                control_plane=cp, overrides=tuple(spec.overrides))
+        for ds, sc, seed, cr, fn, dp, cp, strat in product(
             spec.datasets, spec.scenarios, spec.seeds,
             spec.concurrency_ratios, spec.staleness_fns, spec.data_planes,
-            spec.strategies)
+            spec.control_planes, spec.strategies)
     ]
     keys = [r.key for r in runs]
     if len(set(keys)) != len(keys):

@@ -26,6 +26,12 @@ SMOKE_HEDGE_SCALE = SweepScale(n_clients=8, clients_per_round=4, rounds=3,
                                data_scale=0.06, local_epochs=1,
                                sim_budget=1500.0)
 
+# Fleet-scale selection demo: the widest fleet a bench-scale FL run
+# affords (selection/scoring at M=1e6 is benchmarked without training in
+# benchmarks/bench_round.py --controlplane)
+FLEET_SCALE = SweepScale(n_clients=256, clients_per_round=32, rounds=6,
+                         data_scale=0.06, local_epochs=1, sim_budget=2_000.0)
+
 PRESETS: dict[str, SweepSpec] = {
     # Tables IV-VI, one dataset at a time (all six strategies, paper's
     # heterogeneous 65/25/10 hardware mix)
@@ -77,6 +83,21 @@ PRESETS: dict[str, SweepSpec] = {
         name="dataplane_ablation", datasets=("mnist",),
         strategies=("fedavg", "apodotiko"),
         data_planes=("device", "host")),
+    # columnar-vs-object control-plane ablation: same strategies, same
+    # seeds, only the fleet-state backing differs — traces are
+    # bit-identical (tests/test_control_plane.py) while the score+select
+    # dispatch cost diverges (BENCH_controlplane.json quantifies it)
+    "controlplane_ablation": SweepSpec(
+        name="controlplane_ablation", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko"),
+        control_planes=("columnar", "object")),
+    # fleet-scale cohort selection: a 256-client fleet on the columnar
+    # plane, Algorithm 3 sampling vs the device-resident top-k selector
+    "fleet_scale": SweepSpec(
+        name="fleet_scale", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko", "apodotiko-topk"),
+        control_planes=("columnar",),
+        scale=FLEET_SCALE),
     # CI-sized end-to-end check (two strategies, seconds)
     "smoke": SweepSpec(name="smoke", datasets=("mnist",),
                        strategies=("fedavg", "apodotiko"),

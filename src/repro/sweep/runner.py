@@ -112,6 +112,7 @@ class LocalRunner:
             round_timeout=600.0, staleness_fn=run.staleness_fn,
             seed=run.seed, eval_every=s.eval_every,
             data_plane=run.data_plane,
+            control_plane=run.control_plane,
             max_sim_time=s.sim_budget or SIM_BUDGET.get(run.dataset, 2_000.0))
         if self.update_plane:
             cfg = replace(cfg, update_plane=self.update_plane)

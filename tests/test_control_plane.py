@@ -1,0 +1,299 @@
+"""Columnar control plane (DESIGN.md §10): golden-trace bit-identity of
+``REPRO_CONTROL_PLANE=columnar`` vs the ``object`` oracle across
+strategies / engines / update planes / data planes, vectorized-scoring
+bit-equality, checkpoint/resume parity of the columnar fleet state, the
+plane resolution order, and fleet-scale selection without per-client
+Python objects."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.controller import Controller, FLConfig
+from repro.core.database import ClientRecord, Database
+from repro.core.scheduler import Scheduler
+from repro.core.scoring import calculate_score, calculate_scores
+from repro.core.selection import select_clients
+from repro.core.services import resolve_control_plane
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import paper_fleet
+from repro.models.proxy_models import build_bench_model
+
+N_CLIENTS = 10
+ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
+                  "apodotiko")
+REACTIVE = ("apodotiko-hedge", "apodotiko-adaptive")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
+                                  seed=0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_bench_model("mnist")
+
+
+def _cfg_kw(**kw):
+    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
+                local_epochs=1, batch_size=5, base_step_time=0.5,
+                round_timeout=200.0, seed=0)
+    base.update(kw)
+    return base
+
+
+def _trace(engine):
+    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
+             l.n_stale) for l in engine.history]
+    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
+           for r in engine.platform.invocations]
+    return hist, inv
+
+
+def _assert_planes_identical(cfg_kw, model, data, engine_cls=Scheduler):
+    """One run per control plane; everything observable must be bit-equal."""
+    runs = {}
+    for cp in ("columnar", "object"):
+        eng = engine_cls(FLConfig(**{**cfg_kw, "control_plane": cp}), model,
+                         data, list(paper_fleet(N_CLIENTS)))
+        runs[cp] = (eng, eng.run())
+    col, m_col = runs["columnar"]
+    obj, m_obj = runs["object"]
+    assert _trace(col) == _trace(obj)
+    assert m_col["total_time"] == m_obj["total_time"]
+    assert m_col["total_cost_usd"] == m_obj["total_cost_usd"]
+    assert m_col["invocation_counts"] == m_obj["invocation_counts"]
+    for a, b in zip(jax.tree.leaves(col.params), jax.tree.leaves(obj.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert m_col["control_plane"] == "columnar"
+    assert m_obj["control_plane"] == "object"
+    # end-of-run fleet state agrees too (boosters evolve every selection)
+    for cid, rec in obj.db.clients.items():
+        mat = col.db.clients[cid]
+        assert mat.booster == rec.booster
+        assert mat.durations == rec.durations[-col.db.fleet.history:]
+        assert mat.n_invocations == rec.n_invocations
+        assert mat.n_failures == rec.n_failures
+        assert mat.status == rec.status
+    return m_col, m_obj
+
+
+# ------------------------------------------------------------ golden traces
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES + REACTIVE)
+def test_golden_controlplane_scheduler(strategy, data, model):
+    _assert_planes_identical(_cfg_kw(strategy=strategy), model, data)
+
+
+@pytest.mark.parametrize("strategy", ("fedavg", "apodotiko", "fedlesscan"))
+def test_golden_controlplane_legacy_engine(strategy, data, model):
+    _assert_planes_identical(_cfg_kw(strategy=strategy), model, data,
+                             engine_cls=Controller)
+
+
+@pytest.mark.parametrize("strategy", ("apodotiko", "scaffold"))
+def test_golden_controlplane_blob_update_plane(strategy, data, model):
+    _assert_planes_identical(_cfg_kw(strategy=strategy, update_plane="blob"),
+                             model, data)
+
+
+@pytest.mark.parametrize("strategy", ("apodotiko", "fedlesscan"))
+def test_golden_controlplane_host_data_plane(strategy, data, model):
+    _assert_planes_identical(_cfg_kw(strategy=strategy, data_plane="host"),
+                             model, data)
+
+
+def test_golden_controlplane_with_failures(data, model):
+    """Failure bookkeeping (mark_failed / hedge-sibling incr_failures)
+    takes the same paths on both planes."""
+    _assert_planes_identical(_cfg_kw(strategy="apodotiko", failure_rate=0.3,
+                                     rounds=3), model, data)
+    _assert_planes_identical(_cfg_kw(strategy="apodotiko-hedge",
+                                     failure_rate=0.3, rounds=3,
+                                     cold_start_s=60.0, keep_warm=30.0),
+                             model, data)
+
+
+def test_golden_controlplane_longer_run_boosters_compound(data, model):
+    """More rounds than the CR gate fills -> boosters promote repeatedly;
+    the f64 booster column must track the oracle bit-for-bit."""
+    _assert_planes_identical(_cfg_kw(strategy="apodotiko", rounds=6),
+                             model, data)
+
+
+# ---------------------------------------------------------- runtime churn
+def test_churn_mid_run_planes_identical(data, model):
+    """add/remove mid-run (ClientLeft cancels in-flight work, frees rows,
+    reorders candidates) must leave both planes in identical state."""
+    engines = {}
+    for cp in ("columnar", "object"):
+        eng = Scheduler(FLConfig(**_cfg_kw(strategy="apodotiko",
+                                           control_plane=cp)), model, data,
+                        list(paper_fleet(N_CLIENTS)))
+        eng.run()
+        eng.remove_clients([1, 4])
+        eng.add_clients(
+            [ClientRecord(client_id=N_CLIENTS + 7, hardware="cpu2",
+                          data_cardinality=int(data.n[0]), batch_size=5,
+                          local_epochs=1)],
+            [list(paper_fleet(N_CLIENTS))[0]])
+        engines[cp] = eng
+    col, obj = engines["columnar"], engines["object"]
+    assert col.db.client_ids() == obj.db.client_ids()
+    assert col.db.idle_client_ids() == obj.db.idle_client_ids()
+    sel_c = col.strategy.select(col.db, col.db.round)
+    sel_o = obj.strategy.select(obj.db, obj.db.round)
+    assert sel_c == sel_o
+
+
+# ----------------------------------------------------- vectorized scoring
+def test_calculate_scores_bitwise_vs_scalar():
+    rng = np.random.default_rng(0)
+    M, W = 500, 10
+    lens = rng.integers(0, W + 1, M)
+    durs = rng.uniform(0.3, 900.0, (M, W))      # newest first
+    card = rng.integers(1, 100_000, M).astype(np.int64)
+    epochs = rng.integers(1, 9, M).astype(np.int64)
+    batch = rng.integers(1, 64, M).astype(np.int64)
+    boost = rng.uniform(1.0, 4.0, M)
+    vec = calculate_scores(boost, durs, lens, card, epochs, batch, 0.8)
+    ref = np.array([
+        calculate_score(float(boost[i]),
+                        [float(d) for d in durs[i, :lens[i]]],
+                        int(card[i]), int(epochs[i]), int(batch[i]), 0.8)
+        for i in range(M)])
+    assert np.array_equal(ref, vec)
+
+
+def test_selection_stream_identical_over_rounds():
+    """Shared RNG stream, evolving state: selections stay identical
+    selection after selection (the bench CI gate, in-process)."""
+    rng = np.random.default_rng(5)
+    dbs = {cp: Database(control_plane=cp) for cp in ("object", "columnar")}
+    card = rng.integers(20, 400, 64)
+    for cp, db in dbs.items():
+        for cid in range(64):
+            db.register_client(ClientRecord(
+                client_id=cid, hardware="h", data_cardinality=int(card[cid]),
+                batch_size=10, local_epochs=5))
+    gens = {cp: np.random.default_rng(11) for cp in dbs}
+    for t in range(8):
+        sel = {cp: select_clients(db, 12, gens[cp])
+               for cp, db in dbs.items()}
+        assert sel["object"] == sel["columnar"]
+        for cp, db in dbs.items():
+            for j, cid in enumerate(sel[cp]):
+                db.mark_running(cid, t)
+                db.mark_complete(cid, 1.0 + ((cid * 13 + 7 * j + t) % 40))
+
+
+# ------------------------------------------------------- resolution order
+def test_resolve_control_plane(monkeypatch):
+    monkeypatch.delenv("REPRO_CONTROL_PLANE", raising=False)
+    assert resolve_control_plane("auto") == "columnar"
+    assert resolve_control_plane("") == "columnar"
+    assert resolve_control_plane("object") == "object"
+    monkeypatch.setenv("REPRO_CONTROL_PLANE", "object")
+    assert resolve_control_plane("auto") == "object"
+    assert resolve_control_plane("columnar") == "columnar"  # explicit wins
+    with pytest.raises(ValueError):
+        resolve_control_plane("dict")
+
+
+# ------------------------------------------------------ checkpoint/resume
+def test_columnar_checkpoint_resume_parity(tmp_path, data, model):
+    """Satellite: Database.save/load round-trips the columnar fleet state
+    (durations, boosters, live EMA/window terms) and a resumed columnar
+    run continues bit-identically to a resumed object run."""
+    resumed = {}
+    for cp in ("columnar", "object"):
+        ckpt = str(tmp_path / f"fl_{cp}")
+        cfg = FLConfig(**_cfg_kw(strategy="apodotiko", rounds=2,
+                                 control_plane=cp, checkpoint_dir=ckpt,
+                                 checkpoint_every=1))
+        eng = Scheduler(cfg, model, data, list(paper_fleet(N_CLIENTS)))
+        eng.run()
+        eng.checkpoint()
+        cfg2 = FLConfig(**_cfg_kw(strategy="apodotiko", rounds=4,
+                                  control_plane=cp, checkpoint_dir=ckpt))
+        eng2 = Scheduler.resume(cfg2, model, data,
+                                list(paper_fleet(N_CLIENTS)))
+        assert eng2.db.round == 2
+        assert eng2.control_plane == cp
+        # fleet state survived the round-trip exactly
+        for cid, rec in eng.db.clients.items():
+            rec2 = eng2.db.clients[cid]
+            assert rec2.booster == rec.booster
+            assert rec2.durations == rec.durations
+            assert rec2.n_invocations == rec.n_invocations
+        m = eng2.run()
+        resumed[cp] = (_trace(eng2), m["total_time"],
+                       jax.tree.leaves(eng2.params))
+    assert resumed["columnar"][0] == resumed["object"][0]
+    assert resumed["columnar"][1] == resumed["object"][1]
+    for a, b in zip(resumed["columnar"][2], resumed["object"][2]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_columnar_fleet_live_terms_roundtrip(tmp_path):
+    """The live score buffers (EMA + window terms) are part of the saved
+    state, not recomputed: save -> load -> bitwise equality."""
+    db = Database(control_plane="columnar")
+    rng = np.random.default_rng(2)
+    for cid in range(20):
+        db.register_client(ClientRecord(client_id=cid, hardware="h",
+                                        data_cardinality=50 + cid,
+                                        batch_size=10, local_epochs=5))
+    for t in range(30):
+        cid = int(rng.integers(0, 20))
+        db.mark_running(cid, t)
+        db.mark_complete(cid, float(rng.uniform(1, 60)))
+    db.round = 7
+    db.save(str(tmp_path / "db"))
+    db2 = Database.load(str(tmp_path / "db"))
+    assert db2.control_plane == "columnar" and db2.round == 7
+    for col in ("ema_num", "ema_den", "win_num", "win_den", "booster",
+                "dur_len", "ids"):
+        np.testing.assert_array_equal(getattr(db2.fleet, col),
+                                      getattr(db.fleet, col))
+    np.testing.assert_array_equal(db2.fleet.durations, db.fleet.durations)
+    # and the restored store scores identically
+    slots = db.fleet._registered_slots()
+    np.testing.assert_array_equal(db.fleet.window_scores(slots, 10, 0.8),
+                                  db2.fleet.window_scores(
+                                      np.asarray(slots), 10, 0.8))
+
+
+# -------------------------------------------------------- fleet-scale path
+def test_fleet_scale_selection_no_python_objects():
+    """Selection + scoring at a large simulated fleet without a single
+    ClientRecord: bulk registration, bulk history, vectorized select,
+    device top-k — the M=1e6 bench path at test-sized M."""
+    M = 50_000
+    fs_db = Database(control_plane="columnar")
+    rng = np.random.default_rng(0)
+    fs_db.fleet.add_batch(np.arange(M), rng.integers(10, 500, M), 10, 5)
+    fs_db.fleet.bulk_history(rng.uniform(1.0, 60.0, (M, 3)))
+    sel = select_clients(fs_db, 100, np.random.default_rng(1))
+    assert len(sel) == 100 and len(set(sel)) == 100
+    topk = fs_db.fleet.select_topk(100, 1.2)
+    assert len(topk) == 100 and len(set(topk)) == 100
+    assert not fs_db._clients        # no object materialization happened
+
+
+def test_topk_strategy_runs_on_scheduler(data, model):
+    """apodotiko-topk end-to-end: deterministic device-side selection on
+    the columnar plane, both engines."""
+    for engine_cls in (Scheduler, Controller):
+        eng = engine_cls(FLConfig(**_cfg_kw(strategy="apodotiko-topk",
+                                            rounds=2)), model, data,
+                         list(paper_fleet(N_CLIENTS)))
+        m = eng.run()
+        assert m["rounds"] == 2
+        assert np.isfinite(m["final_accuracy"])
+    # and it refuses the object plane
+    with pytest.raises(ValueError):
+        Scheduler(FLConfig(**_cfg_kw(strategy="apodotiko-topk",
+                                     control_plane="object")),
+                  model, data, list(paper_fleet(N_CLIENTS))).run()

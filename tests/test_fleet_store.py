@@ -1,0 +1,320 @@
+"""FleetStore unit tests: columnar membership (id->slot map, free-list,
+registration order), duration windows, incremental score terms, bulk ops,
+checkpoint state round-trip, and the client-churn storms at scale that
+the PR 3/PR 4 `remove_clients` fixes feed into (DESIGN.md §10)."""
+import numpy as np
+import pytest
+
+from repro.core.database import ClientRecord, Database
+from repro.core.fleet_store import IDLE, RUNNING, FleetStore
+from repro.core.scoring import calculate_score, decay_rate
+
+
+def _store(n=8, card=100, batch=10, epochs=5):
+    fs = FleetStore()
+    for cid in range(n):
+        fs.add(cid, card, batch, epochs)
+    return fs
+
+
+# -------------------------------------------------------------- membership
+def test_add_remove_slot_map_consistent():
+    fs = _store(6)
+    assert len(fs) == 6
+    assert fs.client_ids() == list(range(6))
+    assert fs.remove(3) and not fs.remove(3)
+    assert not fs.has(3) and len(fs) == 5
+    assert fs.client_ids() == [0, 1, 2, 4, 5]
+    # the freed slot is recycled but the re-registered id orders LAST,
+    # like a dict pop + re-insert
+    fs.add(99, 1, 1, 1)
+    assert fs.client_ids() == [0, 1, 2, 4, 5, 99]
+    for cid in fs.client_ids():
+        assert fs.ids[fs.slot_of(cid)] == cid
+
+
+def test_reregister_existing_id_keeps_order_resets_state():
+    """Overwriting a live id mirrors dict assignment: position kept,
+    record state reset."""
+    fs = _store(4)
+    fs.mark_running(1, 0)
+    fs.mark_complete(1, 7.5)
+    fs.add(1, 200, 20, 2)
+    assert fs.client_ids() == [0, 1, 2, 3]
+    s = fs.slot_of(1)
+    assert fs.n_invocations[s] == 0 and fs.dur_len[s] == 0
+    assert fs.cardinality[s] == 200
+
+
+def test_capacity_growth_and_free_list():
+    fs = FleetStore(capacity=2)
+    for cid in range(50):
+        fs.add(cid, 10, 5, 1)
+    assert len(fs) == 50 and fs.capacity >= 50
+    active = {fs.slot_of(c) for c in range(50)}
+    assert len(active) == 50
+    assert not (active & set(fs._free))
+
+
+def test_add_batch_matches_sequential_adds():
+    fs1 = FleetStore()
+    fs1.add_batch(np.arange(5), np.array([10, 20, 30, 40, 50]), 10, 5)
+    fs2 = _store(0)
+    for cid, card in enumerate((10, 20, 30, 40, 50)):
+        fs2.add(cid, card, 10, 5)
+    assert fs1.client_ids() == fs2.client_ids()
+    for c in range(5):
+        assert fs1.cardinality[fs1.slot_of(c)] == \
+            fs2.cardinality[fs2.slot_of(c)]
+    with pytest.raises(ValueError):
+        fs1.add_batch([3], [1], 1, 1)        # ids must be fresh
+
+
+# ---------------------------------------------------------- duration window
+def test_duration_window_newest_first_and_truncated():
+    fs = _store(2)
+    for i in range(15):                      # exceeds the history window
+        fs.mark_running(0, i)
+        fs.mark_complete(0, float(i))
+    assert fs.recent_durations(0, 5) == [10.0, 11.0, 12.0, 13.0, 14.0]
+    assert fs.recent_durations(0, 99) == [float(i) for i in range(5, 15)]
+    durs, lens = fs.duration_window(np.array([fs.slot_of(0)]), 10)
+    assert list(durs[0]) == [float(i) for i in range(14, 4, -1)]
+    assert lens[0] == 10
+    assert fs.recent_durations(1, 5) == []
+    assert fs.recent_durations(12345, 5) == []   # unknown id
+
+
+def test_recent_mean_matches_np_mean():
+    fs = _store(4)
+    seqs = {0: [3.0, 9.0, 1.0], 1: [5.0], 2: []}
+    for cid, seq in seqs.items():
+        for d in seq:
+            fs.mark_running(cid, 0)
+            fs.mark_complete(cid, d)
+    slots = np.array([fs.slot_of(c) for c in (0, 1, 2)])
+    means = fs.recent_mean(slots, 5)
+    assert means[0] == np.mean(seqs[0][-5:])
+    assert means[1] == np.mean(seqs[1][-5:])
+    assert means[2] == 0.0
+
+
+# -------------------------------------------------- incremental score terms
+def test_window_terms_match_oracle_after_streaming():
+    """The cached win_num/win_den refreshed per mark_complete must yield
+    the exact calculate_score value over the retained window."""
+    rng = np.random.default_rng(0)
+    fs = _store(3, card=120, batch=10, epochs=5)
+    lam = decay_rate(0.2)
+    hist = {c: [] for c in range(3)}
+    for _ in range(17):
+        cid = int(rng.integers(0, 3))
+        d = float(rng.uniform(0.5, 80.0))
+        fs.mark_running(cid, 0)
+        fs.mark_complete(cid, d)
+        hist[cid].append(d)
+    for cid in range(3):
+        slots = np.array([fs.slot_of(cid)])
+        got = fs.window_scores(slots, 10, lam)[0]
+        want = calculate_score(1.0, list(reversed(hist[cid][-10:])),
+                               120, 5, 10, lam)
+        assert got == want                   # bitwise
+
+
+def test_window_scores_fallback_other_window():
+    fs = _store(2, card=100)
+    for d in (4.0, 8.0, 16.0):
+        fs.mark_running(0, 0)
+        fs.mark_complete(0, d)
+    slots = np.array([fs.slot_of(0)])
+    lam = 0.8
+    fast = fs.window_scores(slots, 10, lam)[0]
+    slow = fs.window_scores(slots, 2, lam)[0]    # forces the recompute path
+    want2 = calculate_score(1.0, [16.0, 8.0], 100, 5, 10, lam)
+    assert slow == want2 and fast != slow
+
+
+def test_decay_setter_rebuilds_terms():
+    fs = _store(1, card=100)
+    for d in (2.0, 4.0):
+        fs.mark_running(0, 0)
+        fs.mark_complete(0, d)
+    slots = np.array([fs.slot_of(0)])
+    before = fs.window_scores(slots, 10, 0.8)[0]
+    fs.decay = 0.5
+    after = fs.window_scores(slots, 10, 0.5)[0]
+    assert after == calculate_score(1.0, [4.0, 2.0], 100, 5, 10, 0.5)
+    assert before != after
+
+
+# ------------------------------------------------------------- persistence
+def test_state_dict_roundtrip_identity():
+    rng = np.random.default_rng(1)
+    fs = _store(12)
+    for _ in range(40):
+        cid = int(rng.integers(0, 12))
+        if not fs.has(cid):
+            continue
+        fs.mark_running(cid, int(rng.integers(0, 5)))
+        if rng.random() < 0.8:
+            fs.mark_complete(cid, float(rng.uniform(1, 50)))
+        else:
+            fs.mark_failed(cid)
+    fs.remove(2)
+    fs.add(77, 10, 5, 1)
+    fs2 = FleetStore.from_state(fs.state_dict())
+    assert fs2.client_ids() == fs.client_ids()
+    assert fs2._free == fs._free
+    assert fs2._next_seq == fs._next_seq
+    for name in FleetStore.COLUMNS:
+        np.testing.assert_array_equal(getattr(fs2, name), getattr(fs, name))
+    np.testing.assert_array_equal(fs2.durations, fs.durations)
+    # and it keeps working: a new registration lands in a consistent slot
+    fs2.add(500, 1, 1, 1)
+    assert fs2.ids[fs2.slot_of(500)] == 500
+
+
+# ------------------------------------------------------------ churn storms
+def test_churn_storm_10k_consistency():
+    """ClientJoined/ClientLeft storms at M=10k: the id->slot map, the
+    free-list, and the selection masks stay mutually consistent."""
+    M = 10_000
+    fs = FleetStore()
+    rng = np.random.default_rng(0)
+    fs.add_batch(np.arange(M), rng.integers(10, 500, M), 10, 5)
+    live = set(range(M))
+    next_id = M
+    for wave in range(6):
+        leave = rng.choice(sorted(live), size=2000, replace=False)
+        for cid in leave:
+            assert fs.remove(int(cid))
+            live.discard(int(cid))
+        joins = range(next_id, next_id + 1500)
+        fs.add_batch(np.array(list(joins)),
+                     rng.integers(10, 500, 1500), 10, 5)
+        live.update(joins)
+        next_id += 1500
+        for cid in rng.choice(sorted(live), size=200, replace=False):
+            fs.mark_running(int(cid), wave)
+            fs.mark_complete(int(cid), float(rng.uniform(1, 30)))
+    assert len(fs) == len(live)
+    assert set(fs.client_ids()) == live
+    # slot map is a bijection onto active slots; free-list is its complement
+    slots = [fs.slot_of(c) for c in fs.client_ids()]
+    assert len(set(slots)) == len(slots)
+    assert fs.active[slots].all()
+    assert not set(slots) & set(fs._free)
+    assert len(slots) + len(fs._free) == fs.capacity
+    # selection masks agree with membership
+    assert set(fs.ids[fs.idle_slots()].tolist()) <= live
+    # ordering is registration order (seq strictly increasing)
+    seqs = fs.seq[np.array(slots)]
+    assert (np.diff(fs.seq[fs.ordered_slots()]) > 0).all()
+    assert len(seqs) == len(slots)
+
+
+def test_churn_matches_object_plane_ordering():
+    """After interleaved joins/leaves/overwrites, the columnar candidate
+    ordering must equal the object plane's dict ordering."""
+    rng = np.random.default_rng(3)
+    obj = Database(control_plane="object")
+    col = Database(control_plane="columnar")
+    live = set()
+    next_id = 0
+    for _ in range(300):
+        r = rng.random()
+        if r < 0.5 or not live:
+            cid = next_id if r < 0.45 or not live else \
+                int(rng.choice(sorted(live)))     # sometimes overwrite
+            next_id = max(next_id, cid + 1)
+            rec = ClientRecord(client_id=cid, hardware="h",
+                               data_cardinality=10, batch_size=5,
+                               local_epochs=1)
+            obj.register_client(rec)
+            col.register_client(rec)
+            live.add(cid)
+        elif r < 0.75:
+            cid = int(rng.choice(sorted(live)))
+            assert obj.unregister_client(cid) == col.unregister_client(cid)
+            live.discard(cid)
+        else:
+            cid = int(rng.choice(sorted(live)))
+            obj.mark_running(cid, 0)
+            col.mark_running(cid, 0)
+            if rng.random() < 0.7:
+                d = float(rng.uniform(1, 9))
+                obj.mark_complete(cid, d)
+                col.mark_complete(cid, d)
+    assert obj.client_ids() == col.client_ids()
+    assert obj.idle_client_ids() == col.idle_client_ids()
+    assert obj.any_idle() == col.any_idle()
+    for cid in obj.client_ids():
+        assert obj.recent_durations(cid, 5) == col.recent_durations(cid, 5)
+
+
+# ------------------------------------------------------ device top-k select
+def test_select_topk_bootstrap_then_score_order():
+    fs = _store(6, card=100)
+    # clients 0..2 have history: 0 fastest, 2 slowest; 3..5 uninvoked
+    for cid, d in ((0, 1.0), (1, 10.0), (2, 100.0)):
+        fs.mark_running(cid, 0)
+        fs.mark_complete(cid, d)
+    sel = fs.select_topk(4, beta=1.2)
+    assert set(sel[:3]) == {3, 4, 5}          # uninvoked first (bootstrap)
+    assert sel[3] == 0                        # then highest-throughput
+    # busy clients are masked out
+    fs.mark_running(0, 1)
+    sel = fs.select_topk(6, beta=1.2)
+    assert 0 not in sel
+    assert len(sel) == 5
+
+
+def test_select_topk_empty_and_overask():
+    fs = FleetStore()
+    assert fs.select_topk(4, 1.2) == []
+    fs.add(0, 10, 5, 1)
+    assert fs.select_topk(8, 1.2) == [0]
+
+
+def test_state_dict_preserves_device_topk_booster():
+    """The device-owned top-k booster survives checkpoint/resume — a
+    resumed apodotiko-topk run must not restart every booster at 1.0."""
+    fs = _store(6, card=100)
+    for cid, d in ((0, 1.0), (1, 2.0), (2, 4.0)):
+        fs.mark_running(cid, 0)
+        fs.mark_complete(cid, d)
+    fs.select_topk(2, beta=1.5)         # promotes the unselected idle
+    before = np.asarray(fs._dev.booster)
+    assert (before > 1.0).any()
+    fs2 = FleetStore.from_state(fs.state_dict())
+    np.testing.assert_array_equal(np.asarray(fs2._dev.booster), before)
+    # and selection continues identically on both stores
+    assert fs.select_topk(3, beta=1.5) == fs2.select_topk(3, beta=1.5)
+
+
+def test_register_prepopulated_record_matches_object_plane():
+    """A ClientRecord carrying history registers identically on both
+    planes: scores, counters, and the retained duration window agree."""
+    rec = ClientRecord(client_id=0, hardware="h", data_cardinality=120,
+                       batch_size=10, local_epochs=5, n_invocations=3,
+                       n_failures=1, invoked_rounds=[0, 1, 2],
+                       durations=[5.0, 7.0, 9.0])
+    fresh = ClientRecord(client_id=1, hardware="h", data_cardinality=80,
+                         batch_size=10, local_epochs=5)
+    dbs = {cp: Database(control_plane=cp) for cp in ("object", "columnar")}
+    for db in dbs.values():
+        db.register_client(rec)
+        db.register_client(fresh)
+    from repro.core.selection import select_clients
+    gens = {cp: np.random.default_rng(3) for cp in dbs}
+    for t in range(4):
+        sel = {cp: select_clients(db, 1, gens[cp]) for cp, db in dbs.items()}
+        assert sel["object"] == sel["columnar"]
+        for cp, db in dbs.items():
+            for cid in sel[cp]:
+                db.mark_running(cid, t)
+                db.mark_complete(cid, 3.0 + t)
+    col = dbs["columnar"].clients[0]
+    assert col.n_invocations >= 3 and col.n_failures == 1
+    assert dbs["columnar"].recent_durations(0, 3) == \
+        dbs["object"].recent_durations(0, 3)

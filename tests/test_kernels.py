@@ -134,3 +134,51 @@ def test_flash_attention_bf16():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+# -- masked top-k (control-plane cohort selection) ----------------------------
+
+@pytest.mark.parametrize("m,k,block", [
+    (64, 5, 32),        # small fleets still hit the kernel via small blocks
+    (1024, 1, 256),
+    (3000, 17, 1024),   # ragged tail pads with -inf
+    (4096, 100, 1024),
+])
+def test_masked_topk_pallas_matches_xla(m, k, block):
+    rng = np.random.default_rng(m * 100 + k)
+    s = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    v_x, i_x = ops.masked_topk(s, k, path="xla")
+    v_p, i_p = ops.masked_topk(s, k, path="pallas", interpret=True,
+                               block=block)
+    np.testing.assert_array_equal(np.asarray(v_x), np.asarray(v_p))
+    np.testing.assert_array_equal(np.asarray(i_x), np.asarray(i_p))
+
+
+def test_masked_topk_masked_entries():
+    """-inf-masked entries rank last and keep value -inf so the caller can
+    filter invalid picks."""
+    s = np.full(2048, -np.inf, np.float32)
+    s[[5, 900, 1999]] = [3.0, 1.0, 2.0]
+    v, i = ops.masked_topk(jnp.asarray(s), 8, path="pallas", interpret=True)
+    v, i = np.asarray(v), np.asarray(i)
+    assert list(i[:3]) == [5, 1999, 900]
+    assert (v[3:] == -np.inf).all()
+
+
+def test_masked_topk_ties_break_low_index():
+    s = np.zeros(4096, np.float32)
+    s[[7, 2000, 3000]] = 1.0              # equal scores across blocks
+    for path in ("xla", "pallas"):
+        _, i = ops.masked_topk(jnp.asarray(s), 3, path=path, interpret=True)
+        assert list(np.asarray(i)) == [7, 2000, 3000]
+
+
+def test_resolve_topk_path(monkeypatch):
+    monkeypatch.delenv("REPRO_TOPK_PATH", raising=False)
+    assert ops.resolve_topk_path("xla") == "xla"
+    assert ops.resolve_topk_path("pallas") == "pallas"
+    assert ops.resolve_topk_path(None) in ("xla", "pallas")  # auto: backend
+    monkeypatch.setenv("REPRO_TOPK_PATH", "pallas")
+    assert ops.resolve_topk_path(None) == "pallas"
+    with pytest.raises(ValueError):
+        ops.resolve_topk_path("mosaic")

@@ -105,3 +105,52 @@ def test_selection_respects_pool_and_busy(n_clients, per_round):
     assert len(sel) == len(set(sel))
     assert len(sel) <= per_round
     assert not (set(sel) & busy)
+
+
+@given(st.lists(st.floats(0.1, 1e4), min_size=1, max_size=40),
+       st.floats(0.3, 0.95), st.integers(1, 10_000))
+@settings(**SETTINGS)
+def test_incremental_ema_matches_full_recompute(durations, decay, card):
+    """The O(1) ema_push state equals the O(history) full recompute over
+    the complete duration history (Horner vs direct evaluation of the same
+    decay-weighted sum)."""
+    from repro.core.scoring import calculate_score, ema_push, ema_score
+    num, den = 0.0, 0.0
+    E, B = 5, 10
+    upd = card * E / B
+    for t in durations:                      # oldest -> newest
+        num, den = ema_push(num, den, card * (upd / max(t, 1e-9)), decay)
+    incremental = ema_score(2.0, num, den)
+    full = calculate_score(2.0, list(reversed(durations)), card, E, B, decay)
+    assert incremental == pytest.approx(full, rel=1e-9)
+    assert ema_score(2.0, 0.0, 0.0) == 0.0
+
+
+@given(st.integers(2, 60), st.integers(1, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_columnar_selection_equals_object_selection(n_clients, per_round,
+                                                    seed):
+    """Property form of the control-plane equivalence gate: arbitrary
+    fleet states select identically on both planes from a shared RNG."""
+    from repro.core.database import ClientRecord, Database
+    from repro.core.selection import select_clients
+    rng = np.random.default_rng(seed)
+    dbs = {cp: Database(control_plane=cp) for cp in ("object", "columnar")}
+    for cid in range(n_clients):
+        rec = ClientRecord(client_id=cid, hardware="h",
+                           data_cardinality=int(rng.integers(1, 500)),
+                           batch_size=5, local_epochs=1)
+        busy = rng.random() < 0.25
+        n_hist = int(rng.integers(0, 4))
+        durs = rng.uniform(0.5, 80.0, n_hist)
+        for db in dbs.values():
+            db.register_client(rec)
+            for t, d in enumerate(durs):
+                db.mark_running(cid, t)
+                db.mark_complete(cid, float(d))
+            if busy:
+                db.mark_running(cid, 99)
+    g = {cp: np.random.default_rng(seed + 1) for cp in dbs}
+    sel = {cp: select_clients(db, per_round, g[cp])
+           for cp, db in dbs.items()}
+    assert sel["object"] == sel["columnar"]

@@ -6,15 +6,22 @@ from repro.core.database import ClientRecord, Database, ResultRecord
 from repro.core.strategies.base import STRATEGIES, StrategyConfig, build_strategy
 
 
-def _db(n=20, invoked=None, durations=None):
-    db = Database()
+def _db(n=20, invoked=None, durations=None, control_plane="object"):
+    db = Database(control_plane=control_plane)
     for cid in range(n):
         rec = ClientRecord(client_id=cid, hardware="cpu1",
                            data_cardinality=100, batch_size=10, local_epochs=5)
-        if invoked and cid in invoked:
-            rec.n_invocations = 2
-            rec.durations = [durations.get(cid, 10.0)] if durations else [10.0]
         db.register_client(rec)
+        if invoked and cid in invoked:
+            if db.columnar:
+                db.mark_running(cid, 0)
+                db.mark_running(cid, 1)
+                db.mark_complete(cid, durations.get(cid, 10.0)
+                                 if durations else 10.0)
+            else:
+                rec.n_invocations = 2
+                rec.durations = ([durations.get(cid, 10.0)] if durations
+                                 else [10.0])
     return db
 
 
@@ -22,17 +29,25 @@ def _cfg(**kw):
     return StrategyConfig(clients_per_round=8, **kw)
 
 
-def test_all_six_strategies_registered():
+def test_all_strategies_registered():
     assert set(STRATEGIES) == {"fedavg", "fedprox", "scaffold", "fedlesscan",
-                               "fedbuff", "apodotiko"}
+                               "fedbuff", "apodotiko", "apodotiko-topk"}
 
 
 @pytest.mark.parametrize("name", list(STRATEGIES))
 def test_selection_count_and_uniqueness(name):
     s = build_strategy(name, _cfg())
-    db = _db(20, invoked=set(range(20)))
+    # apodotiko-topk selects over the columnar plane's device score state
+    plane = "columnar" if name == "apodotiko-topk" else "object"
+    db = _db(20, invoked=set(range(20)), control_plane=plane)
     sel = s.select(db, round_=3)
     assert len(sel) == 8 and len(set(sel)) == 8
+
+
+def test_topk_requires_columnar_plane():
+    s = build_strategy("apodotiko-topk", _cfg())
+    with pytest.raises(ValueError):
+        s.select(_db(20), round_=0)
 
 
 def test_sync_strategies_need_all_results():

@@ -206,3 +206,26 @@ def test_local_runner_shares_setup():
     f1, f2 = runner.fleet("heterogeneous"), runner.fleet("heterogeneous")
     assert f1 is f2
     assert np.sum([p.is_gpu for p in f1]) >= 0  # built from paper mix
+
+
+def test_control_plane_axis_expands():
+    spec = small_spec(strategies=("apodotiko",), datasets=("mnist",),
+                      seeds=(0,), control_planes=("columnar", "object"))
+    runs = expand_grid(spec)
+    assert len(runs) == spec.n_runs == 2
+    assert {r.control_plane for r in runs} == {"columnar", "object"}
+    assert all("/ctl=" in r.key for r in runs)
+    assert len({r.group for r in runs}) == 2  # planes never share a baseline
+    runner = LocalRunner(SweepScale(n_clients=6, clients_per_round=3))
+    cfg = runner.config(runs[0])
+    assert cfg.control_plane == runs[0].control_plane
+
+
+def test_controlplane_presets_registered():
+    spec = get_preset("controlplane_ablation")
+    assert set(spec.control_planes) == {"columnar", "object"}
+    assert len(expand_grid(spec)) == spec.n_runs
+    fleet = get_preset("fleet_scale")
+    assert fleet.control_planes == ("columnar",)
+    assert "apodotiko-topk" in fleet.strategies
+    assert fleet.scale.n_clients >= 256
