@@ -17,6 +17,16 @@ columnar plane removes). Lands in ``BENCH_controlplane.json``; exits
 nonzero if object and columnar selections diverge on the shared RNG
 stream (the CI equivalence gate).
 
+``--megastep`` measures the fused round megastep (DESIGN.md §11): a
+provably quiescent run driven by the stepwise event engine (one Python
+pump + several jit dispatches per round) vs ``REPRO_MEGASTEP=fused``
+(the whole run of rounds lowered into one jitted ``lax.scan``). Reports
+wall time per round for both modes, protocol events dispatched per
+round (0 for fused steady state — the headline), and the Python-overhead
+share the fusion removes. Lands in ``BENCH_megastep.json``; exits
+nonzero if the fused run diverges bitwise from the stepwise oracle or
+dispatches any Python event during quiescent rounds (the CI gate).
+
 ``--dataplane`` measures the *input* half of the transport story
 (DESIGN.md §2, "data plane"): per-cohort-dispatch latency and H2D
 training-input bytes with the dataset resident on device
@@ -494,7 +504,8 @@ def run_dataplane(smoke: bool = False, json_path: str = "") -> dict:
 # ----------------------------------------------------------- control plane
 
 
-def _control_states(M: int, seed: int = 0, history: int = 3):
+def _control_states(M: int, seed: int = 0, history: int = 3,
+                    planes=("object", "columnar")):
     """Identical fleet state on both control planes: M clients, everyone
     invoked `history` times with shared random durations (so selection
     exercises the scored path, not the uninvoked bootstrap)."""
@@ -504,12 +515,15 @@ def _control_states(M: int, seed: int = 0, history: int = 3):
     card = rng.integers(50, 500, M).astype(np.int64)
     durs = rng.uniform(1.0, 60.0, (M, history))
 
-    col = Database(control_plane="columnar")
-    col.fleet.add_batch(np.arange(M), card, 10, 5)
-    col.fleet.bulk_history(durs)
+    col = None
+    if "columnar" in planes:
+        col = Database(control_plane="columnar")
+        col.fleet.add_batch(np.arange(M), card, 10, 5)
+        col.fleet.bulk_history(durs)
 
     obj = None
-    if M <= 200_000:        # a million ClientRecords is the wall itself
+    if "object" in planes and M <= 200_000:
+        # a million ClientRecords is the wall itself
         obj = Database(control_plane="object")
         for cid in range(M):
             rec = ClientRecord(client_id=cid, hardware="cpu1",
@@ -522,9 +536,13 @@ def _control_states(M: int, seed: int = 0, history: int = 3):
 
 
 def _controlplane_cell(M: int, K: int, iters: int) -> dict:
+    """Each timed mode gets its own freshly built, identically seeded
+    fleet state and its own identically seeded draw stream. Selection
+    mutates the state it times (booster promotions), so sharing one state
+    across modes made later sections depend on how many iterations the
+    earlier ones ran — rebuilding per mode keeps every section comparable
+    run-to-run and section-to-section."""
     from repro.core.selection import select_clients
-
-    obj, col = _control_states(M)
 
     def timed(fn):
         fn(np.random.default_rng(99))               # warmup/compile
@@ -536,8 +554,11 @@ def _controlplane_cell(M: int, K: int, iters: int) -> dict:
             times.append(time.perf_counter() - t0)
         return float(np.median(times))
 
+    col = _control_states(M, planes=("columnar",))[1]
     col_s = timed(lambda r: select_clients(col, K, r))
+    col = _control_states(M, planes=("columnar",))[1]
     topk_s = timed(lambda r: col.fleet.select_topk(K, 1.2))
+    obj = _control_states(M, planes=("object",))[0]
     obj_s = timed(lambda r: select_clients(obj, K, r)) if obj else None
     return {"M": M, "K": K, "object_s": obj_s, "columnar_s": col_s,
             "topk_s": topk_s,
@@ -597,6 +618,118 @@ def run_controlplane(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# --------------------------------------------------------------- megastep
+
+
+def _megastep_engine(mode: str, rounds: int, model, data):
+    """A run the fused path provably engages on: zero-variability fleet,
+    deterministic top-k selection, CR gate = full cohort, no eval or
+    checkpoint barriers, instances never cool."""
+    from repro.core.scheduler import Scheduler
+    from repro.core.services import FLConfig
+    from repro.faas.hardware import HardwareProfile
+
+    n = len(data.n)
+    fleet = [HardwareProfile(f"det{i % 3}", speed=(1.0, 1.45, 1.9)[i % 3],
+                             vcpus=1.0, mem_gib=2.0, variability=0.0)
+             for i in range(n)]
+    cfg = FLConfig(n_clients=n, clients_per_round=4, rounds=rounds,
+                   local_epochs=1, batch_size=5, base_step_time=0.5,
+                   strategy="apodotiko-topk", concurrency_ratio=1.0,
+                   eval_every=0, keep_warm=1e9, seed=0, megastep=mode)
+    return Scheduler(cfg, model, data, fleet)
+
+
+def _run_trace(engine):
+    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
+             l.n_stale) for l in engine.history]
+    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
+           for r in engine.platform.invocations]
+    return hist, inv
+
+
+def run_megastep(smoke: bool = False, json_path: str = "") -> dict:
+    from repro.data.synthetic import make_federated_dataset
+    from repro.models.proxy_models import build_bench_model
+
+    B = 3                              # ceil(10/4) stepwise bootstrap rounds
+    R = 6 if smoke else 32             # quiescent rounds per timed segment
+    data = make_federated_dataset("mnist", n_clients=10, scale=0.05, seed=0)
+    model = build_bench_model("mnist")
+
+    def segment(mode):
+        """Bootstrap, then two warmup segments of R rounds (the first
+        compiles the scan on the fused path, the second settles runtime
+        warmup), then a timed warm segment of R more."""
+        eng = _megastep_engine(mode, B, model, data)
+        eng.run()
+        for _ in range(2):
+            eng.cfg.rounds += R
+            eng.run()
+        ev0, r0 = eng.n_events, eng.db.round
+        eng.cfg.rounds += R
+        t0 = time.perf_counter()
+        m = eng.run()
+        wall = time.perf_counter() - t0
+        n_rounds = eng.db.round - r0
+        return m, {"mode": mode, "wall_s": round(wall, 4),
+                   "rounds_timed": n_rounds,
+                   "wall_us_per_round": round(1e6 * wall / n_rounds, 1),
+                   "events_per_round": round(
+                       (eng.n_events - ev0) / n_rounds, 3)}
+
+    m_f, fused = segment("fused")
+    _, step = segment("stepwise")
+    fused["megastep_scans"] = m_f["megastep_scans"]
+    fused["megastep_rounds"] = m_f["megastep_rounds"]
+    share = ((step["wall_s"] - fused["wall_s"]) / step["wall_s"]
+             if step["wall_s"] > 0 else 0.0)
+
+    # divergence gate: fresh full runs on both modes, compared bitwise
+    engines = {}
+    for mode in ("stepwise", "fused"):
+        eng = _megastep_engine(mode, B + R, model, data)
+        engines[mode] = (eng, eng.run())
+    s_eng, s_m = engines["stepwise"]
+    f_eng, f_m = engines["fused"]
+    identical = (
+        _run_trace(s_eng) == _run_trace(f_eng)
+        and s_m["total_time"] == f_m["total_time"]
+        and all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(s_eng.params),
+                                jax.tree.leaves(f_eng.params))))
+
+    print(f"megastep/stepwise,{step['wall_us_per_round']:.0f},"
+          f"events_per_round={step['events_per_round']}")
+    print(f"megastep/fused,{fused['wall_us_per_round']:.0f},"
+          f"events_per_round={fused['events_per_round']} "
+          f"scans={fused['megastep_scans']} "
+          f"rounds={fused['megastep_rounds']}")
+    print(f"megastep/python_overhead_share,{share:.3f},"
+          f"speedup={step['wall_s'] / fused['wall_s']:.2f}x "
+          f"bit_identical={identical}")
+    out = {"bench": "megastep", "smoke": smoke,
+           "backend": jax.default_backend(),
+           "bootstrap_rounds": B, "rounds_per_segment": R,
+           "stepwise": step, "fused": fused,
+           "python_overhead_share": round(share, 4),
+           "python_dispatches_per_quiescent_round":
+               fused["events_per_round"],
+           "bit_identical": identical}
+    path = json_path or os.path.join(_ROOT, "BENCH_megastep.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    if not identical:
+        print("FAIL: fused megastep diverged from the stepwise oracle")
+        sys.exit(1)
+    if fused["events_per_round"] != 0.0:
+        print("FAIL: fused path dispatched Python events during "
+              f"quiescent rounds ({fused['events_per_round']}/round)")
+        sys.exit(1)
+    return out
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     jp = ""
@@ -608,5 +741,7 @@ if __name__ == "__main__":
         run_dataplane(smoke=smoke, json_path=jp)
     elif "--controlplane" in sys.argv:
         run_controlplane(smoke=smoke, json_path=jp)
+    elif "--megastep" in sys.argv:
+        run_megastep(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

@@ -223,6 +223,32 @@ def weighted_aggregate_rows(buffer, row_idx, weights,
     return out
 
 
+def rows_dispatch(buffer_rows: int, k: int, n_params: int,
+                  path: Optional[str] = None) -> tuple[bool, bool, bool]:
+    """Resolve the ``weighted_aggregate_rows`` dispatch predicates
+    *statically* -> ``(sparse, use_pallas, interpret)``.
+
+    The fused-round megastep must bake the aggregation route into its
+    jitted scan at trace time, so the route has to be decided from static
+    facts only (buffer capacity, K, model size, env/path policy). The
+    expressions here are verbatim from ``weighted_aggregate_rows`` —
+    keeping them in this module means a policy change cannot silently
+    fork the two paths. The one dynamic behavior that cannot be
+    replicated in-trace is the Pallas runtime-raise fallback
+    (``_PALLAS_OK`` flipping False mid-process); a trace-time raise
+    simply aborts megastep entry and the round runs stepwise."""
+    path = path or os.environ.get("REPRO_AGG_PATH", "auto")
+    if path not in ("auto", "pallas", "xla"):
+        raise ValueError(f"unknown aggregation path {path!r}")
+    sparse = (path != "pallas"
+              and buffer_rows >= 4 * max(k, kernel_ops.SUBLANE))
+    use_pallas = (path == "pallas"
+                  or (path == "auto" and _pallas_validated()
+                      and (kernel_ops.on_tpu()
+                           or n_params <= _INTERP_MAX_N)))
+    return sparse, use_pallas, kernel_ops.default_interpret()
+
+
 def incremental_aggregate(acc: Optional[Pytree], update: Pytree,
                           weight: float) -> Pytree:
     """Streaming form: acc += w * update (callers normalize at the end).

@@ -315,6 +315,21 @@ class CohortTrainer:
         out_params, ci_new, losses = fn(*lead)
         return trim(out_params), trim(ci_new), np.asarray(losses)[:K]
 
+    def cohort_fn_indexed(self, store, K: int, max_steps_raw: int):
+        """The compiled indexed-flat cohort fn for a fixed (K, step-budget)
+        regime -> ``(fn, Kp, max_steps)``. Same cache key construction as
+        ``train_cohort_indexed`` with ``flat_updates=True``, so the fused
+        round megastep (``core.megastep``) calls through the IDENTICAL
+        compiled entry the stepwise path dispatches — jit-in-jit inlines it
+        into the scan body with the same traced ops."""
+        Kp = _bucket(K, self.cohort_floor)
+        max_steps = _steps_bucket(int(max_steps_raw))
+        cache_key = self._config_key() + (Kp, max_steps, store.X.shape[1:],
+                                          store.y.dtype, True, "device")
+        fn = self._compiled(cache_key, max_steps, flat_updates=True,
+                            indexed=True)
+        return fn, Kp, max_steps
+
     def _run_flat(self, fn, lead, update_sink, Kp, K, trim):
         # padded cohort entries run 0 active steps, so their rows hold
         # the unchanged global model — written then recycled right away

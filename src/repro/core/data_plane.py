@@ -76,6 +76,13 @@ class DatasetStore:
         # per-round counter is CohortTrainer.data_h2d_bytes)
         self.resident_bytes = int(self.X.nbytes + self.y.nbytes)
 
+    def arrays(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """The resident ``(X, y)`` device buffers — the exact operands the
+        jitted cohort fn receives per dispatch. Shared by the per-round
+        trainer path (``core.client``) and the fused-round megastep, so
+        both feed the identical arrays into the identical compiled fn."""
+        return self.X, self.y
+
     def gather(self, selection) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Device gather of a cohort's (X, y) — debug/oracle convenience;
         the hot path gathers per-minibatch inside the jitted cohort fn."""

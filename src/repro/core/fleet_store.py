@@ -77,6 +77,13 @@ class FleetStore:
         "last_round": np.int64, "dur_len": np.int32,
         "ema_num": np.float64, "ema_den": np.float64,
         "win_num": np.float64, "win_den": np.float64,
+        # f32 twins of the EMA terms, folded *in f32 from the start* so the
+        # device score state (and the megastep's in-scan score evolution)
+        # is reproducible from host state without a f64->f32 cast of an
+        # f64 fold — the cast of a fold and a fold of casts differ in ulps,
+        # and the fused-round scan carries these exact f32 values
+        "ema_num32": np.float32, "ema_den32": np.float32,
+        "upd32": np.float32,   # f32(card * E / max(B, 1)), set at add time
     }
 
     def __init__(self, capacity: int = 0, history: int = HISTORY_WINDOW,
@@ -116,6 +123,7 @@ class FleetStore:
         self._rebuild_window_terms(slots)
         self.ema_num[slots] = self.win_num[slots]
         self.ema_den[slots] = self.win_den[slots]
+        self._rebuild_mirror32(slots)
         self._dev_dirty.update(slots.tolist())
 
     # ------------------------------------------------------------ capacity
@@ -165,6 +173,10 @@ class FleetStore:
         self.ema_den[slot] = 0.0
         self.win_num[slot] = 0.0
         self.win_den[slot] = 0.0
+        self.ema_num32[slot] = 0.0
+        self.ema_den32[slot] = 0.0
+        self.upd32[slot] = np.float32(
+            int(cardinality) * int(local_epochs) / max(int(batch_size), 1))
         self._touch(slot, reset_booster=True)
         return slot
 
@@ -190,8 +202,12 @@ class FleetStore:
         self.local_epochs[slots] = np.asarray(local_epochs, np.int64)
         self.booster[slots] = 1.0
         for name in ("n_invocations", "n_failures", "dur_len",
-                     "ema_num", "ema_den", "win_num", "win_den"):
+                     "ema_num", "ema_den", "win_num", "win_den",
+                     "ema_num32", "ema_den32"):
             getattr(self, name)[slots] = 0
+        self.upd32[slots] = (
+            (self.cardinality[slots] * self.local_epochs[slots])
+            / np.maximum(self.batch_size[slots], 1)).astype(np.float32)
         self.last_round[slots] = -1
         self._order = None
         self._dev_dirty.update(slots.tolist())
@@ -263,6 +279,14 @@ class FleetStore:
             s, self._decay)
         self.win_num[slot], self.win_den[slot] = window_accumulate(
             row[:m].tolist(), card, epochs, batch, self._decay)
+        # f32 twin fold (the device-score / megastep-scan evolution): same
+        # ema_push structure, every operand and intermediate f32
+        dec32 = np.float32(self._decay)
+        s32 = np.float32(card) * (
+            self.upd32[slot]
+            / np.maximum(np.float32(duration), np.float32(1e-9)))
+        self.ema_num32[slot] = s32 + dec32 * self.ema_num32[slot]
+        self.ema_den32[slot] = np.float32(1.0) + dec32 * self.ema_den32[slot]
         self._touch(slot)
 
     def mark_failed(self, client_id: int) -> None:
@@ -348,6 +372,25 @@ class FleetStore:
         self.win_num[slots] = ws
         self.win_den[slots] = nm
 
+    def _rebuild_mirror32(self, slots: np.ndarray) -> None:
+        """Restart the f32 EMA twins from the retained window (the only
+        recoverable history — the same compromise the f64 path makes on a
+        decay change), folding oldest -> newest entirely in f32."""
+        m = np.minimum(self.dur_len[slots], self.history)
+        num32 = np.zeros(len(slots), np.float32)
+        den32 = np.zeros(len(slots), np.float32)
+        dec32 = np.float32(self._decay)
+        card32 = self.cardinality[slots].astype(np.float32)
+        u32 = self.upd32[slots]
+        for j in range(self.history - 1, -1, -1):   # oldest -> newest
+            valid = j < m
+            d32 = self.durations[slots, j].astype(np.float32)
+            s32 = card32 * (u32 / np.maximum(d32, np.float32(1e-9)))
+            num32 = np.where(valid, s32 + dec32 * num32, num32)
+            den32 = np.where(valid, np.float32(1.0) + dec32 * den32, den32)
+        self.ema_num32[slots] = num32
+        self.ema_den32[slots] = den32
+
     def recent_mean(self, slots: np.ndarray, k: int) -> np.ndarray:
         """Mean of the last <=k durations per slot (0.0 when empty) —
         bit-identical to ``np.mean(record.durations[-k:])``: the masked
@@ -384,12 +427,23 @@ class FleetStore:
             / np.maximum(self.batch_size[slots], 1)
         num = np.zeros(M, np.float64)
         den = np.zeros(M, np.float64)
+        num32 = np.zeros(M, np.float32)
+        den32 = np.zeros(M, np.float32)
+        dec32 = np.float32(self._decay)
+        card32 = self.cardinality[slots].astype(np.float32)
+        u32 = self.upd32[slots]
         for i in range(h):          # oldest -> newest, the ema_push order
             s = self.cardinality[slots] * (upd / np.maximum(durations[:, i],
                                                             1e-9))
             num, den = ema_push(num, den, s, self._decay)  # array-safe
+            s32 = card32 * (u32 / np.maximum(
+                durations[:, i].astype(np.float32), np.float32(1e-9)))
+            num32 = s32 + dec32 * num32
+            den32 = np.float32(1.0) + dec32 * den32
         self.ema_num[slots] = num
         self.ema_den[slots] = den
+        self.ema_num32[slots] = num32
+        self.ema_den32[slots] = den32
         self._rebuild_window_terms(slots)
         self.n_invocations[slots] = np.maximum(self.n_invocations[slots], h)
         self._dev_dirty.update(slots.tolist())
@@ -413,11 +467,19 @@ class FleetStore:
         epochs = int(self.local_epochs[slot])
         batch = int(self.batch_size[slot])
         num = den = 0.0
+        num32 = den32 = np.float32(0.0)
+        dec32 = np.float32(self._decay)
+        u32 = self.upd32[slot]
         for d in durations:                            # full history EMA
             num, den = ema_push(num, den,
                                 per_round_score(d, card, epochs, batch),
                                 self._decay)
+            s32 = np.float32(card) * (
+                u32 / np.maximum(np.float32(d), np.float32(1e-9)))
+            num32 = s32 + dec32 * num32
+            den32 = np.float32(1.0) + dec32 * den32
         self.ema_num[slot], self.ema_den[slot] = num, den
+        self.ema_num32[slot], self.ema_den32[slot] = num32, den32
         self.win_num[slot], self.win_den[slot] = window_accumulate(
             keep[::-1], card, epochs, batch, self._decay)
         self.n_invocations[slot] = max(int(n_invocations), 0)
@@ -441,8 +503,11 @@ class FleetStore:
         self._dev_dirty.clear()
         if idx.size == 0:
             return
+        # the f32 twin columns ARE the device values (no cast of an f64
+        # fold): the megastep scan carries and evolves these exact numbers,
+        # so its in-scan selection is bitwise the stepwise selection
         dev.scatter(idx,
-                    self.ema_num[idx], self.ema_den[idx],
+                    self.ema_num32[idx], self.ema_den32[idx],
                     self.active[idx] & (self.status[idx] == IDLE),
                     self.active[idx] & (self.n_invocations[idx] > 0))
 
@@ -493,8 +558,20 @@ class FleetStore:
                  decay=float(state["decay"][0]))
         cap = len(state["ids"])
         fs.capacity = cap
-        for name in cls.COLUMNS:
-            setattr(fs, name, np.asarray(state[name]).copy())
+        for name, dt in cls.COLUMNS.items():
+            if name in state:
+                setattr(fs, name, np.asarray(state[name]).copy())
+            else:
+                setattr(fs, name, np.zeros((cap,), dt))
+        if "ema_num32" not in state:
+            # checkpoint from before the f32 twin columns: rebuild from
+            # the retained duration window (the only recoverable history)
+            fs.upd32 = ((fs.cardinality * fs.local_epochs)
+                        / np.maximum(fs.batch_size, 1)).astype(np.float32)
+            fs.durations = np.asarray(state["durations"]).copy()
+            live = np.flatnonzero(fs.active)
+            if live.size:
+                fs._rebuild_mirror32(live)
         fs.durations = np.asarray(state["durations"]).copy()
         fs._free = [int(i) for i in state["free"]]
         fs._next_seq = int(state["next_seq"][0])
@@ -551,23 +628,16 @@ class _DeviceScores:
 @functools.lru_cache(maxsize=None)
 def _score_topk_fn():
     """Build the jitted score+topk+booster kernel lazily so importing the
-    store never pays jax startup."""
+    store never pays jax startup. The body is ``kernels.ops.scored_topk``
+    — the single selection definition shared with the fused-round
+    megastep's scan, which is what keeps the two paths bitwise equal."""
     import jax
-    import jax.numpy as jnp
 
-    from repro.kernels.ops import masked_topk
+    from repro.kernels.ops import scored_topk
 
     @functools.partial(jax.jit, static_argnames=("k",))
     def fn(num, den, booster, eligible, ever, beta, *, k):
-        score = booster * (num / jnp.maximum(den, 1e-12))
-        score = jnp.where(ever, score, jnp.inf)       # bootstrap: uninvoked
-        score = jnp.where(eligible, score, -jnp.inf)  # mask busy/removed
-        vals, idx = masked_topk(score, k)
-        valid = vals > -jnp.inf
-        chosen = jnp.zeros(score.shape, bool).at[idx].set(valid)
-        boost = jnp.where(chosen, 1.0,
-                          jnp.where(eligible, booster * beta, booster))
-        return idx, valid, boost
+        return scored_topk(num, den, booster, eligible, ever, beta, k)
 
     return fn
 

@@ -42,7 +42,7 @@ from repro.core.protocol import (Action, Aggregate, CancelInvocation,
                                  LoopDrained, ReactivePolicy, RoundStarted,
                                  SetTimer, TimerFired)
 from repro.core.services import (FLConfig, FLRuntime, RoundLog, resolve_engine,
-                                 strategy_config)
+                                 resolve_megastep, strategy_config)
 from repro.core.strategies.reactive import is_reactive, make_policy
 
 
@@ -70,6 +70,12 @@ class Scheduler(FLRuntime):
         self._progress: Optional[Callable[[RoundLog], None]] = None
         self.n_events = 0               # protocol events dispatched
         self.n_coalesced = 0            # actions merged into batched dispatches
+        # fused-round megastep (core.megastep): opportunistic lowering of
+        # quiescent-round runs into one jitted lax.scan
+        self.megastep = resolve_megastep(cfg.megastep)
+        self.megastep_rounds = 0        # rounds executed inside fused scans
+        self.megastep_scans = 0         # fused scans entered
+        self.megastep_fallback_reason = "unattempted"
 
     # -------------------------------------------------------------------- run
     def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
@@ -198,6 +204,19 @@ class Scheduler(FLRuntime):
 
     # ------------------------------------------------------------- round flow
     def _open_round(self) -> None:
+        # Fused fast path: before handing the round to the policy, try to
+        # lower a run of provably quiescent rounds into one jitted scan
+        # (core.megastep). The loop re-checks after each scan because the
+        # completions it replays extend keep-warm windows, which can make
+        # further rounds eligible. Any ineligibility falls through to the
+        # event-driven engine — the bit-exact oracle — for this round.
+        if self.megastep == "fused":
+            from repro.core.megastep import try_megastep
+            while try_megastep(self):
+                if (self.db.round >= self.cfg.rounds
+                        or self.loop.now >= self.cfg.max_sim_time):
+                    self._done = True
+                    return
         self._t0 = self.loop.now
         self._invoked_this_round = False
         self._dispatch(RoundStarted(t=self.loop.now, round=self.db.round))
@@ -237,6 +256,10 @@ class Scheduler(FLRuntime):
         m["strategy"] = self.policy.name
         m["n_events"] = self.n_events
         m["n_coalesced"] = self.n_coalesced
+        m["megastep"] = self.megastep
+        m["megastep_rounds"] = self.megastep_rounds
+        m["megastep_scans"] = self.megastep_scans
+        m["megastep_fallback_reason"] = self.megastep_fallback_reason
         m.update(self.policy.metrics())
         return m
 

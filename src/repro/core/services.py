@@ -89,6 +89,20 @@ def resolve_engine(mode: str) -> str:
     return mode
 
 
+def resolve_megastep(mode: str) -> str:
+    """'fused' (default: the scheduler opportunistically lowers runs of
+    quiescent rounds into one jitted ``lax.scan`` megastep — see
+    ``core.megastep``) | 'stepwise' (always drive rounds through the
+    event-driven engine, the bit-exact oracle).
+    Resolution: explicit config value > ``REPRO_MEGASTEP`` > 'fused'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_MEGASTEP", "fused")
+    if mode not in ("fused", "stepwise"):
+        raise ValueError(f"unknown megastep mode {mode!r} "
+                         "(expected 'fused', 'stepwise', or 'auto')")
+    return mode
+
+
 @dataclass
 class FLConfig:
     """Experiment configuration. Each field maps to a paper quantity
@@ -158,6 +172,14 @@ class FLConfig:
     #                                 fancy-index + per-dispatch upload;
     #                                 "auto" defers to REPRO_DATA_PLANE
     #                                 (default device)
+    megastep: str = "auto"         # fused-round execution: "fused"
+    #                                 (default) lets the scheduler lower
+    #                                 runs of quiescent rounds into one
+    #                                 jitted lax.scan (zero Python
+    #                                 dispatches per round) with automatic
+    #                                 fallback to the event-driven engine;
+    #                                 "stepwise" disables the fast path;
+    #                                 "auto" defers to REPRO_MEGASTEP
     # -- harness ---------------------------------------------------------------
     eval_every: int = 1            # evaluate global model every k rounds
     seed: int = 0                  # RNG seed: selection, init, platform noise
@@ -621,7 +643,15 @@ class FLRuntime:
             # cardinality weighting so the aggregation stays well-defined
             weights = np.array([r.n_samples for r in pending], np.float64)
             total = weights.sum() or 1.0
-        weights = (weights / total).astype(np.float32)
+        # cast THEN normalize in f32: when the weights are integer-valued
+        # (the all-current-round case — eq2(T,T)=1 exactly, so the weight
+        # is n_samples) both operands are exactly representable and the
+        # quotient is a single correctly-rounded f32 division, making the
+        # result independent of host-vs-device summation order — the
+        # anchor that lets the fused megastep's in-scan normalization be
+        # bitwise identical to this line
+        weights = weights.astype(np.float32)
+        weights = weights / weights.sum()
         out_dtype = jax.tree.leaves(self.params)[0].dtype
         if self.update_plane == "device":
             # row-index fast path: gather rows out of the persistent device

@@ -191,6 +191,14 @@ class UpdateStore:
                 self._free.append(i)
 
     # ----------------------------------------------------------- inventory
+    def free_stack(self) -> np.ndarray:
+        """The LIFO free-list as an ``[n_free] int32`` array, bottom ->
+        top (``alloc`` pops from the END). The fused-round megastep
+        (``core.megastep``) carries this stack through its scan so in-scan
+        row allocation emits exactly the id sequence ``alloc`` will
+        produce when the host replays the rounds afterwards."""
+        return np.asarray(self._free, np.int32)
+
     @property
     def live_count(self) -> int:
         return len(self._live)

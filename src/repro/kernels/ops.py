@@ -34,7 +34,7 @@ from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.fused_adam import fused_adam  # noqa: F401
 from repro.kernels.quant8 import QBLOCK, ROWS, dequantize_q8, quantize_q8  # noqa: F401
 from repro.kernels.staleness_agg import BLOCK_N, staleness_agg  # noqa: F401
-from repro.kernels.topk import BLOCK_TOPK, block_topk  # noqa: F401
+from repro.kernels.topk import BLOCK_TOPK, block_topk, chosen_mask  # noqa: F401
 
 Pytree = Any
 
@@ -169,6 +169,35 @@ def aggregate_rows_gather(buffer: jax.Array, row_idx, weights) -> jax.Array:
     return _gather_weighted_sum(buffer, jnp.asarray(idx), jnp.asarray(w))
 
 
+def aggregate_rows_traced(buffer: jax.Array, row_idx: jax.Array,
+                          weights: jax.Array, *, sparse: bool,
+                          use_pallas: bool, interpret: bool) -> jax.Array:
+    """Fully traceable twin of the ``aggregate_rows*`` dispatch for use
+    INSIDE a jit (the fused-round megastep's scan body): ``row_idx`` /
+    ``weights`` may be tracers, the dispatch predicates are static
+    (pre-resolved by ``core.aggregation.rows_dispatch``), and the
+    aggregation layer's host-sync finiteness guard becomes a ``lax.cond``
+    whose true branch is the identity — bitwise equal to the stepwise
+    path whenever the data is finite, and the same exact-rows recompute
+    when it is not. Runs the same inner jitted kernels (jit-in-jit
+    inlines), on identically padded operands."""
+    idx = jnp.asarray(row_idx, jnp.int32)
+    w = jnp.asarray(weights, jnp.float32)
+    pad_k = (-idx.shape[0]) % SUBLANE
+    if pad_k:       # zero-weight repeats of row 0, as _pad_rows does
+        idx = jnp.concatenate([idx, jnp.repeat(idx[:1], pad_k)])
+        w = jnp.concatenate([w, jnp.zeros((pad_k,), jnp.float32)])
+    if sparse:
+        return _gather_weighted_sum(buffer, idx, w)
+    flat = (_scatter_w_agg(buffer, idx, w, interpret) if use_pallas
+            else _scatter_w_matvec(buffer, idx, w))
+    return jax.lax.cond(
+        jnp.all(jnp.isfinite(flat)),
+        lambda f, b, i, ww: f,
+        lambda f, b, i, ww: _gather_weighted_sum(b, i, ww),
+        flat, buffer, idx, w)
+
+
 # --------------------------------------------------------- top-k selection
 def resolve_topk_path(path: Optional[str] = None) -> str:
     """'xla' (lax.top_k — the fast path everywhere off-TPU) | 'pallas'
@@ -207,6 +236,30 @@ def masked_topk(scores: jax.Array, k: int, *,
     cand_v, cand_i = vals.reshape(-1), idx.reshape(-1)
     top_v, pos = jax.lax.top_k(cand_v, k)
     return top_v, cand_i[pos]
+
+
+def scored_topk(num: jax.Array, den: jax.Array, booster: jax.Array,
+                eligible: jax.Array, ever: jax.Array, beta,
+                k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The full Algorithm-3 top-k selection step as one traceable
+    composition: CEF score (``booster * num/den``), bootstrap (+inf for
+    never-invoked), eligibility masking (-inf), ``masked_topk``, and the
+    in-kernel booster update (selected -> 1, idle-unselected -> * beta).
+    Returns ``(idx [k], valid [k], new_booster [M])``.
+
+    This is THE selection op: ``FleetStore.select_topk`` jits it per
+    round and the fused-round megastep (``core.megastep``) inlines it in
+    its ``lax.scan`` body — one definition, so both paths are bitwise the
+    same program. ``k`` must be static under jit."""
+    score = booster * (num / jnp.maximum(den, 1e-12))
+    score = jnp.where(ever, score, jnp.inf)       # bootstrap: uninvoked
+    score = jnp.where(eligible, score, -jnp.inf)  # mask busy/removed
+    vals, idx = masked_topk(score, k)
+    valid = vals > -jnp.inf
+    chosen = chosen_mask(idx, valid, score.shape[0])
+    boost = jnp.where(chosen, 1.0,
+                      jnp.where(eligible, booster * beta, booster))
+    return idx, valid, boost
 
 
 def aggregate_pytree(updates: Sequence[Pytree], weights,

@@ -69,3 +69,11 @@ def block_topk(scores: jax.Array, k: int, *, block: int = BLOCK_TOPK,
         interpret=interpret,
     )(scores.reshape(G, block).astype(jnp.float32))
     return vals, idx
+
+
+def chosen_mask(idx: jax.Array, valid: jax.Array, n: int) -> jax.Array:
+    """Scatter a top-k result back to an ``[n]`` bool membership mask
+    (invalid slots — ``-inf`` scores that padded the k — stay False).
+    Traceable; shared by the selection kernel wrapper (``kernels.ops``)
+    and the fused-round megastep's in-scan booster update."""
+    return jnp.zeros((n,), bool).at[idx].set(valid)

@@ -1,0 +1,91 @@
+"""Bench smoke layer: every benchmarks/ module imports cleanly, each
+bench_round section's ``--smoke`` path runs end to end, writes its JSON
+artifact, and keeps its CI gate green — and the per-mode RNG seeding is
+independent, so sections are comparable run-to-run (every timed mode
+rebuilds identically seeded state instead of mutating a shared one)."""
+import importlib
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+MODULES = sorted(p.stem for p in BENCH_DIR.glob("*.py"))
+
+
+def _import(name):
+    if str(BENCH_DIR) not in sys.path:
+        sys.path.insert(0, str(BENCH_DIR))
+    return importlib.import_module(name)
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_bench_module_imports(name):
+    assert _import(name) is not None
+
+
+@pytest.fixture(scope="module")
+def bench_round():
+    return _import("bench_round")
+
+
+def test_round_smoke(bench_round, tmp_path):
+    path = tmp_path / "round.json"
+    cells = bench_round.run(smoke=True, json_path=str(path))
+    assert cells and cells[0]["K"] == 10
+    assert cells[0]["plane_host_bytes"] == 0
+    assert json.loads(path.read_text())["smoke"] is True
+
+
+def test_controlplane_smoke(bench_round, tmp_path):
+    path = tmp_path / "cp.json"
+    out = bench_round.run_controlplane(smoke=True, json_path=str(path))
+    assert out["selection_identical"] is True
+    assert json.loads(path.read_text())["cells"]
+
+
+def test_scheduler_smoke(bench_round, tmp_path):
+    path = tmp_path / "sched.json"
+    out = bench_round.run_scheduler(smoke=True, json_path=str(path))
+    assert out["eventloop"]["plain_events_per_s"] > 0
+    assert len(out["dispatch"]) == 2
+    assert path.exists()
+
+
+def test_dataplane_smoke(bench_round, tmp_path):
+    path = tmp_path / "dp.json"
+    out = bench_round.run_dataplane(smoke=True, json_path=str(path))
+    e2e_dev = next(r for r in out["end_to_end"]
+                   if r["data_plane"] == "device")
+    assert e2e_dev["data_host_bytes"] == 0
+    assert json.loads(path.read_text())["cells"]
+
+
+def test_megastep_smoke_gate(bench_round, tmp_path):
+    """The --megastep CI gate: fused engages, dispatches zero Python
+    events per quiescent round, and stays bit-identical to stepwise."""
+    path = tmp_path / "ms.json"
+    out = bench_round.run_megastep(smoke=True, json_path=str(path))
+    assert out["bit_identical"] is True
+    assert out["python_dispatches_per_quiescent_round"] == 0.0
+    assert out["fused"]["megastep_rounds"] > 0
+    assert out["stepwise"]["events_per_round"] > 0
+    assert "python_overhead_share" in json.loads(path.read_text())
+
+
+def test_controlplane_modes_independently_seeded(bench_round):
+    """Two builds of a mode's state are bitwise identical — no mode
+    consumes another's RNG stream or mutated fleet state."""
+    a = bench_round._control_states(500, planes=("columnar",))[1]
+    b = bench_round._control_states(500, planes=("columnar",))[1]
+    for col in ("ema_num", "ema_den", "win_num", "win_den", "booster",
+                "dur_len"):
+        np.testing.assert_array_equal(getattr(a.fleet, col),
+                                      getattr(b.fleet, col))
+    np.testing.assert_array_equal(a.fleet.durations, b.fleet.durations)
+    obj = bench_round._control_states(500, planes=("object",))[0]
+    assert obj is not None and len(obj.clients) == 500
+    # and the skip threshold still guards the object wall
+    assert bench_round._control_states(300_000, planes=("object",))[0] is None

@@ -15,58 +15,24 @@ from repro.core.scheduler import Scheduler
 from repro.core.scoring import calculate_score, calculate_scores
 from repro.core.selection import select_clients
 from repro.core.services import resolve_control_plane
-from repro.data.synthetic import make_federated_dataset
 from repro.faas.hardware import paper_fleet
-from repro.models.proxy_models import build_bench_model
 
-N_CLIENTS = 10
-ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
-                  "apodotiko")
-REACTIVE = ("apodotiko-hedge", "apodotiko-adaptive")
+from trace_harness import (ALL_STRATEGIES, N_CLIENTS, REACTIVE, base_cfg_kw,
+                           data, model, run_flag_pair,
+                           trace as _trace)  # noqa: F401
 
-
-@pytest.fixture(scope="module")
-def data():
-    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
-                                  seed=0)
-
-
-@pytest.fixture(scope="module")
-def model():
-    return build_bench_model("mnist")
-
-
-def _cfg_kw(**kw):
-    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
-                local_epochs=1, batch_size=5, base_step_time=0.5,
-                round_timeout=200.0, seed=0)
-    base.update(kw)
-    return base
-
-
-def _trace(engine):
-    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
-             l.n_stale) for l in engine.history]
-    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
-           for r in engine.platform.invocations]
-    return hist, inv
+_cfg_kw = base_cfg_kw
 
 
 def _assert_planes_identical(cfg_kw, model, data, engine_cls=Scheduler):
-    """One run per control plane; everything observable must be bit-equal."""
-    runs = {}
-    for cp in ("columnar", "object"):
-        eng = engine_cls(FLConfig(**{**cfg_kw, "control_plane": cp}), model,
-                         data, list(paper_fleet(N_CLIENTS)))
-        runs[cp] = (eng, eng.run())
+    """One run per control plane; everything observable must be bit-equal
+    (common asserts live in trace_harness.run_flag_pair)."""
+    runs = run_flag_pair(cfg_kw, "control_plane", ("columnar", "object"),
+                         model, data, engine_cls=engine_cls)
     col, m_col = runs["columnar"]
     obj, m_obj = runs["object"]
-    assert _trace(col) == _trace(obj)
-    assert m_col["total_time"] == m_obj["total_time"]
     assert m_col["total_cost_usd"] == m_obj["total_cost_usd"]
     assert m_col["invocation_counts"] == m_obj["invocation_counts"]
-    for a, b in zip(jax.tree.leaves(col.params), jax.tree.leaves(obj.params)):
-        assert np.array_equal(np.asarray(a), np.asarray(b))
     assert m_col["control_plane"] == "columnar"
     assert m_obj["control_plane"] == "object"
     # end-of-run fleet state agrees too (boosters evolve every selection)

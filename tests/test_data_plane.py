@@ -18,54 +18,22 @@ from repro.core.protocol import (Aggregate, CancelInvocation, Hedge, Invoke,
 from repro.core.scheduler import Scheduler
 from repro.data.synthetic import make_federated_dataset
 from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
-from repro.models.proxy_models import build_bench_model
 
-N_CLIENTS = 10
-ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
-                  "apodotiko")
-REACTIVE = ("apodotiko-hedge", "apodotiko-adaptive")
-
-
-@pytest.fixture(scope="module")
-def data():
-    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
-                                  seed=0)
-
-
-@pytest.fixture(scope="module")
-def model():
-    return build_bench_model("mnist")
+from trace_harness import (ALL_STRATEGIES, N_CLIENTS, REACTIVE, base_cfg_kw,
+                           data, model, run_flag_pair)  # noqa: F401
 
 
 def _cfg(**kw):
-    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
-                local_epochs=1, batch_size=5, base_step_time=0.5,
-                round_timeout=200.0, seed=0)
-    base.update(kw)
-    return FLConfig(**base)
-
-
-def _trace(engine):
-    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
-             l.n_stale) for l in engine.history]
-    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
-           for r in engine.platform.invocations]
-    return hist, inv
+    return FLConfig(**base_cfg_kw(**kw))
 
 
 def _assert_planes_identical(cfg_kw, model, data, engine_cls=Scheduler):
-    """One run per data plane; everything observable must be bit-equal."""
-    runs = {}
-    for dp in ("device", "host"):
-        eng = engine_cls(FLConfig(**{**cfg_kw, "data_plane": dp}), model,
-                         data, list(paper_fleet(N_CLIENTS)))
-        runs[dp] = (eng, eng.run())
-    dev, m_dev = runs["device"]
-    host, m_host = runs["host"]
-    assert _trace(dev) == _trace(host)
-    assert m_dev["total_time"] == m_host["total_time"]
-    for a, b in zip(jax.tree.leaves(dev.params), jax.tree.leaves(host.params)):
-        assert np.array_equal(np.asarray(a), np.asarray(b))
+    """One run per data plane; everything observable must be bit-equal
+    (common asserts live in trace_harness.run_flag_pair)."""
+    runs = run_flag_pair(cfg_kw, "data_plane", ("device", "host"), model,
+                         data, engine_cls=engine_cls)
+    _, m_dev = runs["device"]
+    _, m_host = runs["host"]
     # the H2D asymmetry is the whole point
     assert m_dev["data_host_bytes"] == 0
     assert m_host["data_host_bytes"] > 0
@@ -77,38 +45,27 @@ def _assert_planes_identical(cfg_kw, model, data, engine_cls=Scheduler):
 # ------------------------------------------------------------ golden traces
 @pytest.mark.parametrize("strategy", ALL_STRATEGIES + REACTIVE)
 def test_golden_dataplane_scheduler(strategy, data, model):
-    _assert_planes_identical(
-        dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
-             local_epochs=1, batch_size=5, base_step_time=0.5,
-             round_timeout=200.0, seed=0, strategy=strategy), model, data)
+    _assert_planes_identical(base_cfg_kw(strategy=strategy), model, data)
 
 
 @pytest.mark.parametrize("strategy", ("fedavg", "apodotiko", "scaffold"))
 def test_golden_dataplane_blob_update_plane(strategy, data, model):
-    _assert_planes_identical(
-        dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
-             local_epochs=1, batch_size=5, base_step_time=0.5,
-             round_timeout=200.0, seed=0, strategy=strategy,
-             update_plane="blob"), model, data)
+    _assert_planes_identical(base_cfg_kw(strategy=strategy,
+                                         update_plane="blob"), model, data)
 
 
 @pytest.mark.parametrize("strategy", ("fedavg", "apodotiko", "scaffold"))
 def test_golden_dataplane_legacy_engine(strategy, data, model):
-    _assert_planes_identical(
-        dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
-             local_epochs=1, batch_size=5, base_step_time=0.5,
-             round_timeout=200.0, seed=0, strategy=strategy),
-        model, data, engine_cls=Controller)
+    _assert_planes_identical(base_cfg_kw(strategy=strategy), model, data,
+                             engine_cls=Controller)
 
 
 def test_golden_dataplane_legacy_engine_blob_plane(data, model):
     """The full legacy stack (poll loop + blob updates) against itself
     across data planes."""
-    _assert_planes_identical(
-        dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
-             local_epochs=1, batch_size=5, base_step_time=0.5,
-             round_timeout=200.0, seed=0, strategy="apodotiko",
-             update_plane="blob"), model, data, engine_cls=Controller)
+    _assert_planes_identical(base_cfg_kw(strategy="apodotiko",
+                                         update_plane="blob"), model, data,
+                             engine_cls=Controller)
 
 
 # ----------------------------------------------------------- resolve + store

@@ -7,67 +7,18 @@ on both update planes — the redesign's backwards-compatibility contract.
 round boundaries (t_start/t_end of every round), aggregation counts,
 accuracies, final global parameters, and total simulated time.
 """
-import jax
-import numpy as np
 import pytest
 
-from repro.core.controller import Controller, FLConfig
-from repro.core.scheduler import Scheduler
-from repro.data.synthetic import make_federated_dataset
+from repro.core.controller import FLConfig
 from repro.faas.hardware import HARDWARE_PROFILES, paper_fleet
-from repro.models.proxy_models import build_bench_model
 
-N_CLIENTS = 10
-ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
-                  "apodotiko")
-
-
-@pytest.fixture(scope="module")
-def data():
-    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
-                                  seed=0)
-
-
-@pytest.fixture(scope="module")
-def model():
-    return build_bench_model("mnist")
+from trace_harness import (ALL_STRATEGIES, N_CLIENTS, base_cfg_kw,
+                           assert_engines_equivalent as _assert_equivalent,
+                           data, model)  # noqa: F401
 
 
 def _cfg(**kw):
-    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=3,
-                local_epochs=1, batch_size=5, base_step_time=0.5,
-                round_timeout=200.0, seed=0)
-    base.update(kw)
-    return FLConfig(**base)
-
-
-def _trace(engine):
-    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
-             l.n_stale) for l in engine.history]
-    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
-           for r in engine.platform.invocations]
-    return hist, inv
-
-
-def _assert_equivalent(cfg, model, data, fleet):
-    legacy = Controller(cfg, model, data, list(fleet))
-    m_legacy = legacy.run()
-    sched = Scheduler(cfg, model, data, list(fleet))
-    m_sched = sched.run()
-
-    h_legacy, i_legacy = _trace(legacy)
-    h_sched, i_sched = _trace(sched)
-    assert h_sched == h_legacy          # rounds, boundaries, accuracies
-    assert i_sched == i_legacy          # every selection & invocation
-    assert m_sched["total_time"] == m_legacy["total_time"]
-    assert m_sched["total_cost_usd"] == m_legacy["total_cost_usd"]
-    for a, b in zip(jax.tree.leaves(legacy.params),
-                    jax.tree.leaves(sched.params)):
-        assert np.array_equal(np.asarray(a), np.asarray(b))
-    # the adapter must be invisible in the reported strategy name
-    assert m_sched["strategy"] == m_legacy["strategy"]
-    assert m_sched["engine"] == "scheduler"
-    assert m_legacy["engine"] == "controller"
+    return FLConfig(**base_cfg_kw(**{"rounds": 3, **kw}))
 
 
 @pytest.mark.parametrize("strategy", ALL_STRATEGIES)

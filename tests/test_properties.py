@@ -126,6 +126,61 @@ def test_incremental_ema_matches_full_recompute(durations, decay, card):
     assert ema_score(2.0, 0.0, 0.0) == 0.0
 
 
+@given(st.lists(st.floats(0.5, 1e4), min_size=1, max_size=10),
+       st.floats(0.3, 0.95), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_ema_push_out_of_order_landings(durations, decay, seed):
+    """Results land in arrival order, not invocation order. Invariants of
+    the fold under ANY landing permutation: the denominator depends only
+    on the landing COUNT (bitwise — it is the same geometric sum), and
+    the normalized score stays inside the convex hull of the per-round
+    scores."""
+    from repro.core.scoring import ema_push, per_round_score
+    rng = np.random.default_rng(seed)
+    card, E, B = 100, 5, 10
+    scores = [per_round_score(t, card, E, B) for t in durations]
+    shuffled = list(scores)
+    rng.shuffle(shuffled)
+    num_a = den_a = num_b = den_b = 0.0
+    for s in scores:
+        num_a, den_a = ema_push(num_a, den_a, s, decay)
+    for s in shuffled:
+        num_b, den_b = ema_push(num_b, den_b, s, decay)
+    assert den_a == den_b                       # count-only, order-free
+    for num, den in ((num_a, den_a), (num_b, den_b)):
+        assert min(scores) - 1e-9 <= num / den <= max(scores) + 1e-9
+
+
+@given(st.lists(st.floats(0.5, 1e4), min_size=1, max_size=10),
+       st.floats(0.3, 0.95), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_window_accumulate_out_of_order_landings(durations, decay, seed):
+    """window_accumulate over a shuffled landing order: the norm depends
+    only on the window length (bitwise), and the windowed score stays in
+    the per-round-score hull. The incremental EMA fold over the SAME
+    landing order equals the windowed recompute of that order's
+    newest-first history — the O(1) and O(W) paths agree for every
+    arrival permutation, not just the in-order one."""
+    from repro.core.scoring import ema_push, per_round_score, window_accumulate
+    rng = np.random.default_rng(seed)
+    card, E, B = 100, 5, 10
+    arrival = list(durations)
+    rng.shuffle(arrival)                        # out-of-order landings
+    ws_in, norm_in = window_accumulate(list(reversed(durations)),
+                                       card, E, B, decay)
+    ws_arr, norm_arr = window_accumulate(list(reversed(arrival)),
+                                         card, E, B, decay)
+    assert norm_in == norm_arr                  # length-only, order-free
+    per_round = [per_round_score(t, card, E, B) for t in durations]
+    assert min(per_round) - 1e-9 <= ws_arr / norm_arr \
+        <= max(per_round) + 1e-9
+    num, den = 0.0, 0.0
+    for t in arrival:
+        num, den = ema_push(num, den, per_round_score(t, card, E, B), decay)
+    assert num == pytest.approx(ws_arr, rel=1e-9)
+    assert den == pytest.approx(norm_arr, rel=1e-9)
+
+
 @given(st.integers(2, 60), st.integers(1, 12), st.integers(0, 2**31 - 1))
 @settings(max_examples=25, deadline=None)
 def test_columnar_selection_equals_object_selection(n_clients, per_round,

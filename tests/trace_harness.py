@@ -1,0 +1,213 @@
+"""Shared differential round-trace harness (DESIGN.md §11).
+
+Every golden-trace suite in this repo asserts the same contract — two
+configurations of the runtime produce *bit-identical* runs: selections
+(every invocation record), round boundaries, aggregation counts,
+accuracies, final global parameters, and total simulated time. This
+module is the single home for that machinery:
+
+* ``data`` / ``model`` — the module-scoped MNIST fixtures every suite
+  imports (``from trace_harness import data, model  # noqa: F401``).
+* ``trace(engine)`` — the canonical observable trace.
+* ``assert_engines_equivalent`` — Controller-vs-Scheduler equivalence
+  (the reactive redesign's backwards-compatibility contract).
+* ``run_flag_pair`` — generic "run once per flag value, assert the
+  common observables bit-equal" helper backing the control-plane and
+  data-plane suites (each adds its own plane-specific asserts on top).
+* ``det_fleet`` / ``megastep_cfg`` / ``assert_fused_matches_stepwise``
+  — the fused-megastep differential layer: a zero-variability fleet
+  plus a deep end-state comparison (fleet columns, device score state,
+  update-store free list, trainer RNG key) between ``megastep=fused``
+  and the stepwise event-driven oracle.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.controller import Controller, FLConfig
+from repro.core.scheduler import Scheduler
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import HardwareProfile, paper_fleet
+from repro.models.proxy_models import build_bench_model
+
+N_CLIENTS = 10
+ALL_STRATEGIES = ("fedavg", "fedprox", "scaffold", "fedlesscan", "fedbuff",
+                  "apodotiko")
+REACTIVE = ("apodotiko-hedge", "apodotiko-adaptive")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_federated_dataset("mnist", n_clients=N_CLIENTS, scale=0.05,
+                                  seed=0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_bench_model("mnist")
+
+
+def base_cfg_kw(**kw):
+    """The shared golden-trace config: small fleet, short rounds, fixed
+    seed. Suites override per-test (rounds, strategy, planes, ...)."""
+    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=2,
+                local_epochs=1, batch_size=5, base_step_time=0.5,
+                round_timeout=200.0, seed=0)
+    base.update(kw)
+    return base
+
+
+def trace(engine):
+    """Everything externally observable about a run, as plain tuples."""
+    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
+             l.n_stale) for l in engine.history]
+    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed)
+           for r in engine.platform.invocations]
+    return hist, inv
+
+
+def assert_params_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def assert_engines_equivalent(cfg, model, data, fleet):
+    """Legacy poll loop vs adapter-on-scheduler: bit-identical runs."""
+    legacy = Controller(cfg, model, data, list(fleet))
+    m_legacy = legacy.run()
+    sched = Scheduler(cfg, model, data, list(fleet))
+    m_sched = sched.run()
+
+    h_legacy, i_legacy = trace(legacy)
+    h_sched, i_sched = trace(sched)
+    assert h_sched == h_legacy          # rounds, boundaries, accuracies
+    assert i_sched == i_legacy          # every selection & invocation
+    assert m_sched["total_time"] == m_legacy["total_time"]
+    assert m_sched["total_cost_usd"] == m_legacy["total_cost_usd"]
+    assert_params_equal(legacy.params, sched.params)
+    # the adapter must be invisible in the reported strategy name
+    assert m_sched["strategy"] == m_legacy["strategy"]
+    assert m_sched["engine"] == "scheduler"
+    assert m_legacy["engine"] == "controller"
+
+
+def run_flag_pair(cfg_kw, flag, values, model, data, engine_cls=Scheduler,
+                  fleet=None):
+    """One run per ``flag`` value; assert the common observables (trace,
+    total simulated time, final params) bit-equal, then hand the engines
+    and metrics back for plane-specific asserts. Returns
+    ``{value: (engine, metrics)}``."""
+    n = cfg_kw.get("n_clients", N_CLIENTS)
+    runs = {}
+    for v in values:
+        fl = list(fleet) if fleet is not None else list(paper_fleet(n))
+        eng = engine_cls(FLConfig(**{**cfg_kw, flag: v}), model, data, fl)
+        runs[v] = (eng, eng.run())
+    first, m_first = runs[values[0]]
+    for v in values[1:]:
+        other, m_other = runs[v]
+        assert trace(first) == trace(other)
+        assert m_first["total_time"] == m_other["total_time"]
+        assert_params_equal(first.params, other.params)
+    return runs
+
+
+# ------------------------------------------------------- megastep layer
+def det_fleet(n, speeds=(1.0, 1.45, 1.9)):
+    """Zero-variability hardware: invocation durations become pure
+    functions of (profile, step count), the precondition for the fused
+    megastep's eligibility proof."""
+    return [HardwareProfile(f"det{i % len(speeds)}",
+                            speed=speeds[i % len(speeds)], vcpus=1.0,
+                            mem_gib=2.0, variability=0.0)
+            for i in range(n)]
+
+
+def megastep_cfg(**kw):
+    """A config the fused path actually engages on: deterministic top-k
+    selection, CR gate = full cohort, no eval/checkpoint barriers, and a
+    keep-warm window long enough that no instance ever goes cold."""
+    base = dict(n_clients=N_CLIENTS, clients_per_round=4, rounds=8,
+                local_epochs=1, batch_size=5, base_step_time=0.5,
+                strategy="apodotiko-topk", concurrency_ratio=1.0,
+                eval_every=0, keep_warm=1e9, seed=0)
+    base.update(kw)
+    return base
+
+
+def assert_fleet_state_equal(a, b):
+    """Deep end-state equality between two engines: columnar fleet
+    columns (f64 EMA + f32 mirrors, status, invocation counts, duration
+    rings), the flushed device score state, the update-store free list,
+    and the trainer's RNG key."""
+    fa, fb = a.db.fleet, b.db.fleet
+    for col in ("ema_num", "ema_den", "ema_num32", "ema_den32", "booster",
+                "status", "n_invocations", "n_failures", "dur_len"):
+        assert np.array_equal(getattr(fa, col), getattr(fb, col)), col
+    assert np.array_equal(fa.durations, fb.durations)
+    fa._flush_device()
+    fb._flush_device()
+    for col in ("num", "den", "booster", "eligible", "ever"):
+        assert np.array_equal(np.asarray(getattr(fa._dev, col)),
+                              np.asarray(getattr(fb._dev, col))), col
+    sa, sb = getattr(a, "store", None), getattr(b, "store", None)
+    if sa is not None and sb is not None:
+        assert sa._free == sb._free
+    assert np.array_equal(np.asarray(a.trainer._key),
+                          np.asarray(b.trainer._key))
+
+
+def assert_fused_matches_stepwise(cfg_kw, model, data, fleet=None,
+                                  min_fused_rounds=0):
+    """The megastep differential contract: a ``megastep=fused`` run must
+    be bit-identical — trace, simulated time, params, and (on the
+    columnar plane) the full fleet/device/store end state — to the
+    stepwise event-driven oracle, whether or not the fused path ever
+    engaged. ``min_fused_rounds > 0`` additionally demands engagement.
+    Returns ``(m_stepwise, m_fused)``."""
+    n = cfg_kw.get("n_clients", N_CLIENTS)
+    runs = {}
+    for mode in ("stepwise", "fused"):
+        fl = list(fleet) if fleet is not None else det_fleet(n)
+        eng = Scheduler(FLConfig(**{**cfg_kw, "megastep": mode}), model,
+                        data, fl)
+        runs[mode] = (eng, eng.run())
+    step, m_step = runs["stepwise"]
+    fused, m_fused = runs["fused"]
+    assert m_step["megastep_rounds"] == 0
+    assert m_fused["megastep_rounds"] >= min_fused_rounds, \
+        m_fused["megastep_fallback_reason"]
+    assert trace(fused) == trace(step)
+    assert m_fused["total_time"] == m_step["total_time"]
+    assert m_fused["total_cost_usd"] == m_step["total_cost_usd"]
+    assert_params_equal(step.params, fused.params)
+    if step.db.columnar and fused.db.columnar:
+        assert_fleet_state_equal(step, fused)
+    return m_step, m_fused
+
+
+# ----------------------------------------------------- harness self-tests
+def test_det_fleet_is_deterministic_hardware():
+    fleet = det_fleet(7)
+    assert len(fleet) == 7
+    assert all(hw.variability == 0.0 for hw in fleet)
+    assert fleet[0].speed == fleet[3].speed          # profiles cycle
+
+
+def test_megastep_cfg_engagement_preconditions():
+    kw = megastep_cfg(rounds=3)
+    cfg = FLConfig(**kw)
+    assert cfg.strategy == "apodotiko-topk"
+    assert cfg.concurrency_ratio == 1.0
+    assert cfg.eval_every == 0 and cfg.rounds == 3
+    assert cfg.keep_warm >= 1e9
+
+
+def test_trace_shapes_on_fresh_engine(data, model):
+    eng = Scheduler(FLConfig(**base_cfg_kw(strategy="fedavg")), model, data,
+                    list(paper_fleet(N_CLIENTS)))
+    hist, inv = trace(eng)
+    assert hist == [] and inv == []      # nothing ran yet
