@@ -36,6 +36,13 @@ runs on both planes (events/s re-measure, ``data_host_bytes``
 accounting). Lands in ``BENCH_dataplane.json``; exits nonzero if the
 device plane moved any training-input bytes (the CI gate).
 
+``--faults`` measures the fault-injection subsystem (DESIGN.md §12): the
+same seeded run clean, under the crash-heavy chaos profile, and under
+that profile with the retry/timeout/quarantine recovery layer armed —
+failure/retry counts, simulated-time impact, recovery wall overhead.
+Lands in ``BENCH_faults.json``; exits nonzero if a seeded fault schedule
+replays differently on the two engines (the cross-engine chaos gate).
+
 Measures the aggregation+transfer component of one controller round — the
 path between cohort training finishing and the new global model existing —
 at K ∈ {10, 100} clients x N ∈ {1e4, 1e6} parameters:
@@ -730,6 +737,124 @@ def run_megastep(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# ----------------------------------------------------------------- faults
+
+
+def _fault_engine(engine_cls, model, data, rounds: int, **cfg_overrides):
+    """One seeded FL run under a fault profile (paper hardware mix, the
+    same tiny setup as the scheduler dispatch bench)."""
+    from repro.core.services import FLConfig
+    from repro.faas.hardware import paper_fleet
+
+    n = len(data.n)
+    cfg = FLConfig(n_clients=n, clients_per_round=4, rounds=rounds,
+                   local_epochs=1, batch_size=5, base_step_time=0.8,
+                   concurrency_ratio=0.5, seed=0, strategy="apodotiko",
+                   **cfg_overrides)
+    eng = engine_cls(cfg, model, data, list(paper_fleet(n)))
+    t0 = time.perf_counter()
+    m = eng.run()
+    wall = time.perf_counter() - t0
+    return eng, m, wall
+
+
+def _fault_trace(eng):
+    """The chaos-trace observables (tests/chaos_harness.py): round history
+    plus per-invocation fault attribution."""
+    hist = [(l.round, l.t_start, l.t_end, l.accuracy, l.n_aggregated,
+             l.n_stale) for l in eng.history]
+    inv = [(r.client_id, r.round, r.t_invoked, r.cold, r.duration, r.failed,
+            r.failed_phase, r.lost, r.timed_out, r.cancelled)
+           for r in eng.platform.invocations]
+    return hist, inv
+
+
+def run_faults(smoke: bool = False, json_path: str = "") -> dict:
+    """Fault-injection overhead + recovery benefit (DESIGN.md §12): the
+    same seeded run clean, under the crash-heavy chaos profile, and under
+    the same profile with the retry/timeout/quarantine recovery layer
+    armed. Reports failure/retry counts, simulated time, and the recovery
+    layer's wall-clock overhead. The CI gate replays a seeded schedule
+    through both engines and exits nonzero on any trace divergence."""
+    from repro.core.controller import Controller
+    from repro.core.scheduler import Scheduler
+    from repro.data.synthetic import make_federated_dataset
+    from repro.models.proxy_models import build_bench_model
+
+    rounds = 3 if smoke else 8
+    data = make_federated_dataset("mnist", n_clients=8, scale=0.06, seed=0)
+    model = build_bench_model("mnist")
+    _fault_engine(Scheduler, model, data, 1)    # compile warmup, discarded
+
+    recovery = dict(invocation_timeout=300.0, retry_budget=8,
+                    quarantine_threshold=3)
+    modes = [("clean", "", {}),
+             ("crash-heavy", "crash-heavy", {}),
+             ("crash-heavy+recovery", "crash-heavy", recovery)]
+    runs = []
+    for label, profile, rec in modes:
+        _, m, wall = _fault_engine(Scheduler, model, data, rounds,
+                                   fault_profile=profile, **rec)
+        d = {"label": label, "fault_profile": profile,
+             "recovery": bool(rec), "rounds": m["rounds"],
+             "wall_s": round(wall, 3),
+             "sim_time_s": round(m["total_time"], 1),
+             "final_acc": round(m.get("final_accuracy", 0.0), 4),
+             "n_invocations": m["n_invocations"],
+             "n_failures": m["n_failures"], "n_retries": m["n_retries"],
+             "n_timeouts": m["n_timeouts"],
+             "n_quarantined": m["n_quarantined"],
+             "retry_latency_s": round(m["retry_latency_s"], 1),
+             "failures_by_phase": m["failures_by_phase"]}
+        runs.append(d)
+        print(f"faults/{label},{wall * 1e6:.0f},"
+              f"sim={d['sim_time_s']}s failures={d['n_failures']} "
+              f"retries={d['n_retries']} quarantined={d['n_quarantined']}")
+
+    clean, chaos, recov = runs
+    overhead = {
+        # what the chaos profile costs an unprotected run
+        "chaos_sim_slowdown": (round(chaos["sim_time_s"]
+                                     / clean["sim_time_s"], 3)
+                               if clean["sim_time_s"] else None),
+        # what the recovery layer claws back (or costs) under chaos
+        "recovery_sim_ratio": (round(recov["sim_time_s"]
+                                     / chaos["sim_time_s"], 3)
+                               if chaos["sim_time_s"] else None),
+        "recovery_wall_overhead_s": round(recov["wall_s"]
+                                          - chaos["wall_s"], 3),
+    }
+    print(f"faults/recovery_overhead,{overhead['recovery_wall_overhead_s']},"
+          f"chaos_slowdown={overhead['chaos_sim_slowdown']}x "
+          f"recovery_ratio={overhead['recovery_sim_ratio']}")
+
+    # CI gate: a seeded schedule must replay bit-identically on both
+    # engines (recovery off — it is scheduler-only by design)
+    gate_profiles = (("crash-heavy",) if smoke
+                     else ("crash-heavy", "lossy-network", "outage-window"))
+    gate = {}
+    for profile in gate_profiles:
+        legacy = _fault_engine(Controller, model, data, rounds,
+                               fault_profile=profile)[0]
+        sched = _fault_engine(Scheduler, model, data, rounds,
+                              fault_profile=profile)[0]
+        gate[profile] = _fault_trace(legacy) == _fault_trace(sched)
+        print(f"faults/gate/{profile},0,identical={gate[profile]}")
+
+    out = {"bench": "faults", "smoke": smoke,
+           "backend": jax.default_backend(), "runs": runs,
+           "overhead": overhead, "cross_engine_identical": gate}
+    path = json_path or os.path.join(_ROOT, "BENCH_faults.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    if not all(gate.values()):
+        bad = sorted(p for p, ok in gate.items() if not ok)
+        print(f"FAIL: chaos trace diverged across engines for {bad}")
+        sys.exit(1)
+    return out
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     jp = ""
@@ -743,5 +868,7 @@ if __name__ == "__main__":
         run_controlplane(smoke=smoke, json_path=jp)
     elif "--megastep" in sys.argv:
         run_megastep(smoke=smoke, json_path=jp)
+    elif "--faults" in sys.argv:
+        run_faults(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

@@ -13,9 +13,14 @@ Train_Global_Model loop:
   5. Aggregate with cardinality x staleness weights (Eq. 2), write the new
      global model, evaluate, and start the next round immediately.
 
-Fault tolerance: failed invocations (crash/preemption) simply never produce
-results — sync strategies absorb them via the round timeout, async ones are
-oblivious; the controller checkpoints {global model, client records, scores,
+Fault tolerance: failed invocations (crash/preemption — the Bernoulli
+``failure_rate`` coin or any seeded ``fault_profile`` schedule,
+faas/faults.py) simply never produce results — sync strategies absorb them
+via the round timeout, async ones are oblivious. This engine is purely
+*passive*: the active recovery layer (retry/backoff, timeouts, circuit
+breaker, quorum degradation — DESIGN.md §12) is scheduler-only, so
+recovery knobs must stay off for cross-engine differential runs. The
+controller checkpoints {global model, client records, scores,
 boosters, round} and can resume from the database (tests/test_controller.py).
 Elasticity: clients may join/leave between rounds (add_clients/remove_clients).
 

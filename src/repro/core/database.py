@@ -56,6 +56,9 @@ class ClientRecord:
     durations: list = field(default_factory=list)   # most-recent-LAST
     n_invocations: int = 0
     n_failures: int = 0
+    consec_failures: int = 0       # failures since the last landed result
+    quarantined_until: int = 0     # benched until this round (exclusive;
+    #                                0 = never quarantined)
 
     @property
     def ever_invoked(self) -> bool:
@@ -122,7 +125,9 @@ class Database:
             invoked_rounds=[last] if last >= 0 else [],
             durations=fs.recent_durations(client_id, fs.history),
             n_invocations=int(fs.n_invocations[s]),
-            n_failures=int(fs.n_failures[s]))
+            n_failures=int(fs.n_failures[s]),
+            consec_failures=int(fs.consec_failures[s]),
+            quarantined_until=int(fs.quarantined_until[s]))
 
     def register_client(self, rec: ClientRecord) -> None:
         if self.columnar:
@@ -141,6 +146,10 @@ class Database:
                     n_failures=rec.n_failures,
                     last_round=(rec.invoked_rounds[-1]
                                 if rec.invoked_rounds else -1))
+            if rec.consec_failures or rec.quarantined_until:
+                slot = self.fleet.slot_of(rec.client_id)
+                self.fleet.consec_failures[slot] = rec.consec_failures
+                self.fleet.quarantined_until[slot] = rec.quarantined_until
         else:
             self._clients[rec.client_id] = rec
 
@@ -165,6 +174,7 @@ class Database:
         c = self._clients[client_id]
         c.status = "idle"
         c.durations.append(duration)
+        c.consec_failures = 0           # a landed result heals the streak
 
     def mark_failed(self, client_id: int) -> None:
         if self.columnar:
@@ -173,6 +183,7 @@ class Database:
         c = self._clients[client_id]
         c.status = "idle"
         c.n_failures += 1
+        c.consec_failures += 1
 
     def incr_failures(self, client_id: int) -> None:
         """Count a failure without touching status (a hedge sibling is
@@ -180,7 +191,31 @@ class Database:
         if self.columnar:
             self.fleet.incr_failures(client_id)
         else:
-            self._clients[client_id].n_failures += 1
+            c = self._clients[client_id]
+            c.n_failures += 1
+            c.consec_failures += 1
+
+    # ------------------------------------------- recovery / circuit breaker
+    def quarantine(self, client_id: int, until_round: int) -> None:
+        """Bench the client until ``until_round`` (exclusive): it drops
+        out of ``idle_client_ids``/``any_idle`` and every strategy's
+        selection mask while ``round < until_round`` (DESIGN.md §12)."""
+        if self.columnar:
+            self.fleet.quarantine(client_id, until_round)
+        else:
+            self._clients[client_id].quarantined_until = int(until_round)
+
+    def consecutive_failures(self, client_id: int) -> int:
+        if self.columnar:
+            return int(self.fleet.consec_failures[
+                self.fleet.slot_of(client_id)])
+        return self._clients[client_id].consec_failures
+
+    def is_quarantined(self, client_id: int) -> bool:
+        if self.columnar:
+            return bool(self.fleet.quarantined_until[
+                self.fleet.slot_of(client_id)] > self.round)
+        return self._clients[client_id].quarantined_until > self.round
 
     def release_client(self, client_id: int) -> None:
         """Return a running client to idle without recording a duration
@@ -210,18 +245,21 @@ class Database:
         return list(self._clients)
 
     def idle_client_ids(self) -> list[int]:
-        """Idle client ids in registration order — the shared selection
-        candidate list (both planes produce the identical list, so shared
-        downstream ``rng.choice`` draws stay bit-identical)."""
+        """Idle, non-quarantined client ids in registration order — the
+        shared selection candidate list (both planes produce the identical
+        list, so shared downstream ``rng.choice`` draws stay
+        bit-identical). Quarantine defaults keep this exactly the old
+        idle list when the recovery layer is off."""
         if self.columnar:
-            return self.fleet.idle_ids()
+            return self.fleet.idle_ids(self.round)
         return [c.client_id for c in self._clients.values()
-                if c.status == "idle"]
+                if c.status == "idle" and c.quarantined_until <= self.round]
 
     def any_idle(self) -> bool:
         if self.columnar:
-            return self.fleet.any_idle()
-        return any(c.status == "idle" for c in self._clients.values())
+            return self.fleet.any_idle(self.round)
+        return any(c.status == "idle" and c.quarantined_until <= self.round
+                   for c in self._clients.values())
 
     def recent_durations(self, client_id: int, k: int) -> list[float]:
         """The client's last <=k training durations, oldest first (empty

@@ -75,6 +75,11 @@ class FleetStore:
         "local_epochs": np.int64, "booster": np.float64,
         "n_invocations": np.int64, "n_failures": np.int64,
         "last_round": np.int64, "dur_len": np.int32,
+        # recovery-layer circuit breaker (DESIGN.md §12): consecutive
+        # failures since the last completed result, and the round until
+        # which the client is benched (0 = never quarantined — always
+        # eligible, so zero-filled legacy checkpoints behave identically)
+        "consec_failures": np.int64, "quarantined_until": np.int64,
         "ema_num": np.float64, "ema_den": np.float64,
         "win_num": np.float64, "win_den": np.float64,
         # f32 twins of the EMA terms, folded *in f32 from the start* so the
@@ -166,6 +171,8 @@ class FleetStore:
         self.booster[slot] = float(booster)
         self.n_invocations[slot] = 0
         self.n_failures[slot] = 0
+        self.consec_failures[slot] = 0
+        self.quarantined_until[slot] = 0
         self.last_round[slot] = -1
         self.dur_len[slot] = 0
         self.durations[slot, :] = 0.0
@@ -201,7 +208,8 @@ class FleetStore:
         self.batch_size[slots] = np.asarray(batch_size, np.int64)
         self.local_epochs[slots] = np.asarray(local_epochs, np.int64)
         self.booster[slots] = 1.0
-        for name in ("n_invocations", "n_failures", "dur_len",
+        for name in ("n_invocations", "n_failures", "consec_failures",
+                     "quarantined_until", "dur_len",
                      "ema_num", "ema_den", "win_num", "win_den",
                      "ema_num32", "ema_den32"):
             getattr(self, name)[slots] = 0
@@ -265,6 +273,7 @@ class FleetStore:
         (DESIGN.md §10)."""
         slot = self._slot[int(client_id)]
         self.status[slot] = IDLE
+        self.consec_failures[slot] = 0      # a landed result heals the streak
         row = self.durations[slot]
         row[1:] = row[:-1]          # numpy buffers overlapping base-slices
         row[0] = float(duration)
@@ -293,11 +302,20 @@ class FleetStore:
         slot = self._slot[int(client_id)]
         self.status[slot] = IDLE
         self.n_failures[slot] += 1
+        self.consec_failures[slot] += 1
         self._touch(slot)
 
     def incr_failures(self, client_id: int) -> None:
         slot = self._slot[int(client_id)]
         self.n_failures[slot] += 1
+        self.consec_failures[slot] += 1
+
+    def quarantine(self, client_id: int, until_round: int) -> None:
+        """Bench the client until ``until_round`` (exclusive) — it drops
+        out of the idle pool and every selection mask meanwhile."""
+        slot = self._slot[int(client_id)]
+        self.quarantined_until[slot] = int(until_round)
+        self._touch(slot)
 
     def set_idle(self, client_id: int) -> bool:
         """Return a running client to idle (cancellation path)."""
@@ -309,15 +327,23 @@ class FleetStore:
         return True
 
     # ------------------------------------------------------------- queries
-    def any_idle(self) -> bool:
-        return bool(np.any(self.active & (self.status == IDLE)))
+    def any_idle(self, now_round: Optional[int] = None) -> bool:
+        """Any active idle client; with ``now_round``, quarantined clients
+        (``quarantined_until > now_round``) don't count."""
+        mask = self.active & (self.status == IDLE)
+        if now_round is not None:
+            mask &= self.quarantined_until <= now_round
+        return bool(np.any(mask))
 
-    def idle_slots(self) -> np.ndarray:
+    def idle_slots(self, now_round: Optional[int] = None) -> np.ndarray:
         order = self.ordered_slots()
-        return order[self.status[order] == IDLE]
+        mask = self.status[order] == IDLE
+        if now_round is not None:
+            mask &= self.quarantined_until[order] <= now_round
+        return order[mask]
 
-    def idle_ids(self) -> list[int]:
-        return self.ids[self.idle_slots()].tolist()
+    def idle_ids(self, now_round: Optional[int] = None) -> list[int]:
+        return self.ids[self.idle_slots(now_round)].tolist()
 
     def recent_durations(self, client_id: int, k: int) -> list[float]:
         """The last <=k training durations, oldest first — exactly the
@@ -511,13 +537,17 @@ class FleetStore:
                     self.active[idx] & (self.status[idx] == IDLE),
                     self.active[idx] & (self.n_invocations[idx] > 0))
 
-    def select_topk(self, k: int, beta: float) -> list[int]:
+    def select_topk(self, k: int, beta: float,
+                    now_round: Optional[int] = None) -> list[int]:
         """Fleet-scale cohort selection: one jitted vectorized kernel over
         the device-resident score state. Idle uninvoked clients rank first
         (score +inf, the Algorithm 3 bootstrap), then the masked top-k of
         ``booster * ema_num/ema_den``; the booster update (selected -> 1,
         idle-unselected -> * beta) happens in the same kernel. Returns at
-        most k client ids (fewer when fewer clients are eligible)."""
+        most k client ids (fewer when fewer clients are eligible).
+        ``now_round`` applies the quarantine mask host-side: benched
+        clients are filtered from the returned cohort (their device score
+        state is untouched, so they rank normally once released)."""
         if not self._slot:
             return []
         self._flush_device()
@@ -531,7 +561,9 @@ class FleetStore:
         dev.booster = boost
         idx = np.asarray(idx)
         valid = np.asarray(valid)
-        return [int(self.ids[s]) for s, v in zip(idx, valid) if v]
+        return [int(self.ids[s]) for s, v in zip(idx, valid)
+                if v and (now_round is None
+                          or self.quarantined_until[s] <= now_round)]
 
     # --------------------------------------------------------- persistence
     def state_dict(self) -> dict:

@@ -108,6 +108,12 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
 
     cfg = sched.cfg
     db = sched.db
+    # config-level refusals first: they name the *user-set* knob even when
+    # a knob also changes the policy object (RecoveryPolicy wrapping)
+    if cfg.invocation_timeout or cfg.retry_budget or cfg.quarantine_threshold:
+        return None, "retry/timeout recovery enabled"
+    if cfg.quorum_fraction < 1.0:
+        return None, "partial-cohort quorum enabled"
     if type(sched.policy) is not LegacyStrategyAdapter \
             or sched.policy.strategy.name != "apodotiko-topk":
         return None, "strategy is not adapter-wrapped apodotiko-topk"
@@ -125,6 +131,11 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
         return None, "target-accuracy early stop enabled"
     if cfg.failure_rate != 0.0:
         return None, "nonzero failure rate"
+    faults = sched.platform.faults
+    if faults is not None and faults.active and faults.stochastic:
+        # stochastic faults perturb any round; outage windows are handled
+        # below by shrinking the horizon to stop short of the window
+        return None, "stochastic fault schedule active"
     if sched.strategy.needs_scaffold:
         return None, "scaffold variates"
     K = int(cfg.clients_per_round)
@@ -151,6 +162,8 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
         return None, "clients not idle"
     if np.any(fleet.n_invocations[slots] <= 0):
         return None, "bootstrap rounds remain (uninvoked clients)"
+    if np.any(fleet.quarantined_until[slots] > db.round):
+        return None, "clients quarantined"
     if slots.size < K:
         return None, "K exceeds idle-client count"
     ids = fleet.ids[slots].astype(np.int64)
@@ -210,6 +223,20 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
         R -= 1
     if R < 1:
         return None, "no quiescent horizon (keep-warm or sim budget)"
+    if faults is not None and faults.active:
+        # deterministic outage windows: fused launches happen at t0 + r*D,
+        # so shrink the horizon to stop strictly before any window that
+        # overlaps it. A window already behind us (end <= t0) is ignored —
+        # megastep re-engages once simulated time passes the outage.
+        for w in faults.outage_windows():
+            if w.end <= t0 or w.start >= t0 + R * D:
+                continue
+            if w.start > t0 and D > 0:
+                R = min(R, int(np.floor((w.start - t0) / D + 1e-12)))
+            else:
+                R = 0
+        if R < 1:
+            return None, "fault window overlaps horizon"
 
     from repro.core.aggregation import rows_dispatch
     from repro.core.scoring import promotion_rate

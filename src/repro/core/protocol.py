@@ -15,9 +15,11 @@ Events (what happened)            Actions (what the policy wants)
 ``RoundStarted``                  ``Invoke`` — run clients this round
 ``ResultLanded``                  ``Aggregate`` — close the round now
 ``InvocationFailed``              ``SetTimer`` — wake me at now+delay
-``TimerFired``                    ``CancelInvocation`` — kill in-flight
-``ClientJoined`` / ``ClientLeft`` ``Hedge`` — re-invoke outstanding
-``LoopDrained``                   ``EndRun`` — terminate the run
+``InvocationTimedOut``            ``CancelInvocation`` — kill in-flight
+``TimerFired``                    ``Hedge`` — re-invoke outstanding
+``ClientJoined`` / ``ClientLeft`` ``Retry`` — re-invoke after a delay
+``LoopDrained``                   ``Quarantine`` — bench a repeat offender
+                                  ``EndRun`` — terminate the run
 
 Policies must treat the view as read-only; the one sanctioned exception is
 ``DatabaseView.db``, the mutable database handle the legacy strategies'
@@ -65,6 +67,18 @@ class ResultLanded(Event):
 class InvocationFailed(Event):
     """An invocation crashed (or was preempted) and will never produce a
     result. Hedge siblings, if any, keep racing."""
+
+    round: int
+    client_id: int
+
+
+@dataclass(frozen=True)
+class InvocationTimedOut(Event):
+    """The scheduler's per-invocation timeout (``FLConfig.
+    invocation_timeout``, distinct from the sync round deadline) killed an
+    in-flight invocation: the container was cancelled, the payload
+    released, and the failure counted. Only emitted when the recovery
+    layer is enabled (DESIGN.md §12)."""
 
     round: int
     client_id: int
@@ -154,6 +168,30 @@ class Hedge(Action):
     cancels the sibling; a failed original leaves the hedge racing."""
 
     clients: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class Retry(Action):
+    """Re-invoke ``client_id`` after ``delay`` sim-seconds (the recovery
+    layer's backoff step). The scheduler arms a runtime timer scoped to
+    the current round: it is dropped if the round closes first, skipped
+    if the client left, was quarantined, or is busy again when it fires;
+    otherwise the client is re-trained against the *current* global model
+    and re-invoked without resetting the sync gating set."""
+
+    client_id: int
+    delay: float
+
+
+@dataclass(frozen=True)
+class Quarantine(Action):
+    """Circuit-break ``client_id``: mark it quarantined until round
+    ``until_round`` (exclusive). Quarantined clients are dropped from the
+    idle pool and every strategy's selection mask until the round counter
+    passes ``until_round``."""
+
+    client_id: int
+    until_round: int
 
 
 @dataclass(frozen=True)

@@ -7,7 +7,8 @@ simulation occurrence — an invocation completing or failing, a timer
 elapsing, the platform quiescing — is dispatched as a typed protocol
 event to a :class:`~repro.core.protocol.ReactivePolicy`, and the returned
 actions (``Invoke``/``Aggregate``/``SetTimer``/``CancelInvocation``/
-``Hedge``/``EndRun``) are executed against the runtime services. All six
+``Hedge``/``Retry``/``Quarantine``/``EndRun``) are executed against the
+runtime services. All six
 legacy strategies run unchanged through ``LegacyStrategyAdapter`` with
 bit-identical round traces (tests/test_golden_trace.py); the natively
 reactive policies (``apodotiko-hedge``, ``apodotiko-adaptive``) express
@@ -33,17 +34,34 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.controller import Controller
 from repro.core.database import Database
 from repro.core.protocol import (Action, Aggregate, CancelInvocation,
                                  DatabaseView, EndRun, Event, Hedge, Invoke,
-                                 LoopDrained, ReactivePolicy, RoundStarted,
-                                 SetTimer, TimerFired)
-from repro.core.services import (FLConfig, FLRuntime, RoundLog, resolve_engine,
-                                 resolve_megastep, strategy_config)
+                                 LoopDrained, Quarantine, ReactivePolicy,
+                                 Retry, RoundStarted, SetTimer, TimerFired)
+from repro.core.recovery import RecoveryPolicy, recovery_enabled
+from repro.core.services import (FLConfig, FLRuntime, Inflight, RoundLog,
+                                 resolve_engine, resolve_megastep,
+                                 strategy_config)
 from repro.core.strategies.reactive import is_reactive, make_policy
+
+#: timer-heap round key for runtime timers (invocation timeouts, retries
+#: armed against the *current* round use ``db.round`` instead). The huge
+#: sentinel keeps ``_peek_timer``'s round-closed purge from ever dropping
+#: a timeout whose invocation outlives its round.
+_RUNTIME_ROUND = 1 << 62
+
+
+@dataclass
+class _RetryTag:
+    """Timer payload for a pending backoff re-invocation."""
+
+    client_id: int
+    t_failed: float     # when the failure fired (retry-latency metric)
 
 
 class Scheduler(FLRuntime):
@@ -57,6 +75,8 @@ class Scheduler(FLRuntime):
                  db: Optional[Database] = None, init_params=None):
         if policy is None:
             policy = make_policy(cfg.strategy, strategy_config(cfg))
+        if recovery_enabled(cfg) and not isinstance(policy, RecoveryPolicy):
+            policy = RecoveryPolicy(policy, cfg)
         self.policy = policy
         super().__init__(cfg, model, data, fleet, db=db,
                          init_params=init_params, strategy=policy.strategy)
@@ -99,22 +119,45 @@ class Scheduler(FLRuntime):
 
     # ------------------------------------------------------------------- pump
     def _peek_timer(self) -> Optional[float]:
-        while self._timers and self._timers[0][2] < self.db.round:
-            heapq.heappop(self._timers)     # stale: its round closed
-        return self._timers[0][0] if self._timers else None
+        while self._timers:
+            t, _, round_, tag = self._timers[0]
+            if round_ < self.db.round:
+                heapq.heappop(self._timers)     # stale: its round closed
+            elif isinstance(tag, Inflight) and tag.done:
+                heapq.heappop(self._timers)     # invocation already settled
+            else:
+                return t
+        return None
 
     def _pump_one(self) -> bool:
         """Advance simulated time by one occurrence — the earliest of the
         next platform event and the next timer (events win ties, matching
-        the poll loop's pop-then-check-deadline order). Returns False when
-        quiescent."""
+        the poll loop's pop-then-check-deadline order: a result landing at
+        exactly the timeout instant counts as completed). Returns False
+        when quiescent."""
         t_ev = self.loop.peek()
         t_tm = self._peek_timer()
+        # runtime timers (timeouts/retries — non-str tags) are scheduler
+        # machinery, not policy deadlines: they fire on a drained loop
+        # regardless of the policy's legacy-compat fire_timers_on_drain
+        runtime_head = bool(self._timers
+                            and not isinstance(self._timers[0][3], str))
         fire_timer = t_tm is not None and (
-            (t_ev is None and self.policy.fire_timers_on_drain)
+            (t_ev is None and (self.policy.fire_timers_on_drain
+                               or runtime_head))
             or (t_ev is not None and t_tm < t_ev))
         if fire_timer:
             t, _, round_, tag = heapq.heappop(self._timers)
+            if isinstance(tag, Inflight):
+                # never move the clock backward for runtime timers (a
+                # budget barrier may already have pushed now past t)
+                self.loop.now = max(self.loop.now, t)
+                self.timeout_invocation(tag)
+                return True
+            if isinstance(tag, _RetryTag):
+                self.loop.now = max(self.loop.now, t)
+                self._fire_retry(tag)
+                return True
             # the clock may move backward here: a "budget" barrier armed
             # past max_sim_time replays run_until's ``now = max_time``
             self.loop.now = t
@@ -123,6 +166,31 @@ class Scheduler(FLRuntime):
         if t_ev is None:
             return False
         return self.loop.step()     # completion callbacks _emit protocol events
+
+    # ----------------------------------------------------------- recovery
+    def _launch(self, cid: int, round_: int, steps: float, payload,
+                n_samples: int, loss: float, *, is_hedge: bool = False
+                ) -> Inflight:
+        inv = super()._launch(cid, round_, steps, payload, n_samples, loss,
+                              is_hedge=is_hedge)
+        if self.cfg.invocation_timeout > 0:
+            heapq.heappush(self._timers,
+                           (self.loop.now + self.cfg.invocation_timeout,
+                            next(self._timer_seq), _RUNTIME_ROUND, inv))
+        return inv
+
+    def _fire_retry(self, tag: _RetryTag) -> None:
+        """A backoff timer elapsed: re-invoke the client against the
+        *current* global model — unless it left the fleet, got quarantined
+        meanwhile, or is already busy (a hedge or manual re-invoke won the
+        race)."""
+        cid = tag.client_id
+        if (not self.db.has_client(cid) or self.db.is_quarantined(cid)
+                or any(not i.done for i in self.inflight.get(cid, ()))):
+            return
+        self.n_retries += 1
+        self.retry_latency_s += self.loop.now - tag.t_failed
+        self.invoke_round(self.db.round, [cid], reset_completed=False)
 
     # --------------------------------------------------------------- dispatch
     def _emit(self, event: Event) -> None:
@@ -195,6 +263,16 @@ class Scheduler(FLRuntime):
             heapq.heappush(self._timers,
                            (self.loop.now + action.delay,
                             next(self._timer_seq), self.db.round, action.tag))
+        elif isinstance(action, Retry):
+            # round-scoped (pushed with db.round): a pending retry is
+            # abandoned when its round closes
+            heapq.heappush(self._timers,
+                           (self.loop.now + action.delay,
+                            next(self._timer_seq), self.db.round,
+                            _RetryTag(action.client_id, self.loop.now)))
+        elif isinstance(action, Quarantine):
+            self.db.quarantine(action.client_id, action.until_round)
+            self.n_quarantined += 1
         elif isinstance(action, Aggregate):
             self._close_round()
         elif isinstance(action, EndRun):

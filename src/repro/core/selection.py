@@ -39,8 +39,13 @@ def select_clients(
         return _select_clients_columnar(db, clients_per_round, rng,
                                         adjustment_rate, history_window)
     clients = list(db.clients.values())
-    uninvoked = [c for c in clients if not c.ever_invoked and c.status == "idle"]
-    invoked = [c for c in clients if c.ever_invoked and c.status == "idle"]
+    # "available" = idle and not quarantined by the recovery layer's
+    # circuit breaker (quarantined_until defaults to 0, so the mask is
+    # the plain idle mask whenever recovery is off)
+    avail = [c for c in clients
+             if c.status == "idle" and c.quarantined_until <= db.round]
+    uninvoked = [c for c in avail if not c.ever_invoked]
+    invoked = [c for c in avail if c.ever_invoked]
 
     # Lines 4-6: prioritize uninvoked clients to gather scoring data.
     if len(uninvoked) >= clients_per_round:
@@ -68,8 +73,14 @@ def select_clients(
         else:
             norm = scores / smax                    # scale to (0, 1]
             probs = norm / norm.sum()
-        picks = rng.choice(len(invoked), size=need, replace=False, p=probs)
-        selection += [invoked[i].client_id for i in picks]
+        # zero-score clients (every invocation failed, so no duration
+        # history) carry probability 0 — sampling without replacement
+        # cannot draw more than the nonzero-probability count
+        need = min(need, int(np.count_nonzero(probs)))
+        if need > 0:
+            picks = rng.choice(len(invoked), size=need, replace=False,
+                               p=probs)
+            selection += [invoked[i].client_id for i in picks]
 
     _update_boosters(db, selection, adjustment_rate)
     return selection
@@ -83,7 +94,7 @@ def _update_boosters(db: Database, selection: Sequence[int],
     for c in db.clients.values():
         if c.client_id in chosen:
             c.booster = 1.0
-        elif c.status == "idle":
+        elif c.status == "idle" and c.quarantined_until <= db.round:
             c.booster *= beta
 
 
@@ -101,7 +112,8 @@ def _select_clients_columnar(
     instead of an O(M) Python loop, bit-identical draws (module docstring)."""
     fleet = db.fleet
     order = fleet.ordered_slots()
-    idle = fleet.status[order] == 0
+    idle = ((fleet.status[order] == 0)
+            & (fleet.quarantined_until[order] <= db.round))
     ever = fleet.n_invocations[order] > 0
     unv = order[idle & ~ever]
     inv = order[idle & ever]
@@ -126,8 +138,11 @@ def _select_clients_columnar(
         else:
             norm = scores / smax                    # scale to (0, 1]
             probs = norm / norm.sum()
-        picks = rng.choice(len(inv), size=need, replace=False, p=probs)
-        selection += fleet.ids[inv[picks]].tolist()
+        # zero-score clients cap the draw, mirroring the object plane
+        need = min(need, int(np.count_nonzero(probs)))
+        if need > 0:
+            picks = rng.choice(len(inv), size=need, replace=False, p=probs)
+            selection += fleet.ids[inv[picks]].tolist()
 
     _update_boosters_columnar(db, selection, adjustment_rate)
     return selection
@@ -141,7 +156,8 @@ def _update_boosters_columnar(db: Database, selection: Sequence[int],
     fleet = db.fleet
     beta = promotion_rate(adjustment_rate)
     chosen = np.array([fleet.slot_of(c) for c in selection], np.int64)
-    idle = fleet.active & (fleet.status == 0)
+    idle = (fleet.active & (fleet.status == 0)
+            & (fleet.quarantined_until <= db.round))
     if len(chosen):
         idle[chosen] = False
         fleet.booster[chosen] = 1.0

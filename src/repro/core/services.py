@@ -37,13 +37,15 @@ from repro.core.client import CohortTrainer
 from repro.core.data_plane import DatasetStore, dataset_store, resolve_data_plane
 from repro.core.database import ClientRecord, Database, ResultRecord
 from repro.core.protocol import (ClientJoined, ClientLeft, Event,
-                                 InvocationFailed, ResultLanded)
+                                 InvocationFailed, InvocationTimedOut,
+                                 ResultLanded)
 from repro.core.scoring import decay_rate
 from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
 from repro.core.update_store import (UpdateStore, gather_stacked,
                                      grow_stacked, scatter_stacked_tree)
 from repro.faas.cost import CostModel
 from repro.faas.events import EventLoop
+from repro.faas.faults import build_fault_model, resolve_fault_profile
 from repro.faas.hardware import HardwareProfile
 from repro.faas.platform import FaaSPlatform, InvocationRecord
 from repro.kernels.ops import RavelSpec
@@ -141,6 +143,27 @@ class FLConfig:
     base_step_time: float = 0.05   # 1vCPU-seconds per optimizer step
     #                                 (hardware profiles scale this, Fig. 1/3)
     failure_rate: float = 0.0      # P(invocation crash) — fault tolerance
+    fault_profile: str = "auto"    # fault injection (DESIGN.md §12): a
+    #                                 FAULT_PROFILES name ("crash-heavy",
+    #                                 "outage-window", "lossy-network") or a
+    #                                 raw faults.parse_faults spec string;
+    #                                 "auto" defers to REPRO_FAULTS (default
+    #                                 off — no extra RNG draws, every
+    #                                 pre-existing trace bit-identical)
+    # -- recovery layer (DESIGN.md §12; scheduler engine only) -----------------
+    invocation_timeout: float = 0.0  # per-invocation kill timer, sim-seconds
+    #                                 (distinct from round_timeout; 0 = off)
+    retry_budget: int = 0          # max retries per round (0 = no retries)
+    retry_base_delay: float = 2.0  # backoff: delay = base * backoff^(k-1)
+    retry_backoff: float = 2.0     #   * (1 + jitter * U[0,1)) for the k-th
+    retry_jitter: float = 0.1      #   retry of a client within a round
+    quarantine_threshold: int = 0  # circuit breaker: quarantine a client
+    #                                 after this many consecutive failures
+    #                                 (0 = off)
+    quarantine_rounds: int = 3     # rounds a quarantined client sits out
+    quorum_fraction: float = 1.0   # sync rounds aggregate once this cohort
+    #                                 fraction completed (graceful
+    #                                 degradation; 1.0 = legacy full gate)
     # -- aggregation (§III-B) --------------------------------------------------
     prox_mu: float = 0.01          # mu, FedProx proximal coefficient
     staleness_fn: str = "eq2"      # "eq2" = 1/sqrt(T - t_i + 1) (Eq. 2,
@@ -199,6 +222,7 @@ def strategy_config(cfg: FLConfig) -> StrategyConfig:
         prox_mu=cfg.prox_mu,
         staleness_fn=cfg.staleness_fn,
         hedge_fraction=cfg.hedge_fraction,
+        quorum_fraction=cfg.quorum_fraction,
         seed=cfg.seed)
 
 
@@ -258,9 +282,14 @@ class FLRuntime:
         self.data = data        # FederatedDataset (repro.data)
         self.fleet = fleet
         self.loop = EventLoop()
+        # fault injection (faas.faults): off by default — the model owns a
+        # separate RNG stream, so the platform's legacy draw order (the
+        # golden-trace bit-identity anchor) is untouched either way
+        self.fault_profile = resolve_fault_profile(cfg.fault_profile)
         self.platform = FaaSPlatform(
             keep_warm=cfg.keep_warm, cold_start_s=cfg.cold_start_s,
-            seed=cfg.seed, failure_rate=cfg.failure_rate)
+            seed=cfg.seed, failure_rate=cfg.failure_rate,
+            faults=build_fault_model(self.fault_profile, cfg.seed))
         self.cost_model = CostModel()
         self.strategy: Strategy = (
             strategy if strategy is not None
@@ -321,6 +350,11 @@ class FLRuntime:
         self.n_hedges = 0           # speculative re-invocations issued
         self.n_hedge_wins = 0       # hedges that beat their original
         self.n_cancelled = 0        # invocations cancelled (race/explicit)
+        # recovery-layer observability (DESIGN.md §12)
+        self.n_retries = 0          # backoff re-invocations fired
+        self.n_timeouts = 0         # invocations killed by the timeout
+        self.n_quarantined = 0      # circuit-breaker quarantines issued
+        self.retry_latency_s = 0.0  # total failure->retry delay, sim-seconds
 
         # -- update plane: device-resident flat-buffer client updates ------
         self.update_plane = resolve_update_plane(cfg.update_plane)
@@ -579,6 +613,36 @@ class FLRuntime:
         if pay.refs <= 0 and not pay.landed:
             self._free_payload(pay)
 
+    def timeout_invocation(self, inv: Inflight) -> None:
+        """Kill an in-flight invocation that outlived the per-invocation
+        timeout (the recovery layer's ``FLConfig.invocation_timeout``):
+        the container is cancelled at ``now``, the payload released, the
+        failure counted against the client, and ``InvocationTimedOut``
+        emitted so the recovery policy can retry or quarantine."""
+        if inv.done:
+            return
+        inv.done = True
+        self.loop.cancel(inv.event)
+        self._drop_inflight(inv)
+        live = [i.rec.t_completed
+                for i in self.inflight.get(inv.client_id, ()) if not i.done]
+        self.platform.cancel(inv.rec, self.loop.now,
+                             live_until=max(live) if live else None)
+        inv.rec.failed = True
+        inv.rec.timed_out = True
+        inv.rec.failed_phase = "timeout"
+        pay = inv.payload
+        pay.refs -= 1
+        if pay.refs <= 0 and not pay.landed:
+            self._free_payload(pay)
+        if live:
+            self.db.incr_failures(inv.client_id)    # a sibling still races
+        else:
+            self.db.mark_failed(inv.client_id)
+        self.n_timeouts += 1
+        self._emit(InvocationTimedOut(t=self.loop.now, round=inv.round,
+                                      client_id=inv.client_id))
+
     def _free_payload(self, pay: _Payload) -> None:
         if self.update_plane == "device" and pay.row >= 0:
             self.store.free([pay.row])
@@ -759,10 +823,31 @@ class FLRuntime:
             "n_hedges": self.n_hedges,
             "n_hedge_wins": self.n_hedge_wins,
             "n_cancelled": self.n_cancelled,
+            # failure / recovery observability (DESIGN.md §12)
+            "fault_profile": self.fault_profile,
+            "n_failures": sum(1 for r in inv if r.failed),
+            "n_timeouts": self.n_timeouts,
+            "n_retries": self.n_retries,
+            "n_quarantined": self.n_quarantined,
+            "retry_latency_s": self.retry_latency_s,
+            "failures_by_phase": self._failures_by_phase(inv),
             "selection_bias": (max(count_arr) - min(count_arr)) if count_arr else 0,
             "invocation_counts": count_arr,
             "history": [(l.t_end, l.round, l.accuracy) for l in self.history],
         }
+
+    @staticmethod
+    def _failures_by_phase(inv) -> dict:
+        """Count failed invocations by attributed phase. Legacy Bernoulli
+        failures carry phase "train"; records predating the fault model
+        (empty phase) land under "unattributed"."""
+        by: dict[str, int] = {}
+        for r in inv:
+            if not r.failed:
+                continue
+            phase = r.failed_phase or "unattributed"
+            by[phase] = by.get(phase, 0) + 1
+        return by
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
         for l in self.history:

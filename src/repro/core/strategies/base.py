@@ -39,6 +39,10 @@ class StrategyConfig:
     #                                  "eq1" = t_i/T (Eq. 1, FedLesScan)
     hedge_fraction: float = 0.5    # apodotiko-hedge: fraction of outstanding
     #                                  invocations re-invoked at the CR gate
+    quorum_fraction: float = 1.0   # graceful degradation (DESIGN.md §12):
+    #                                  sync rounds close once this fraction
+    #                                  of the cohort completed (1.0 = the
+    #                                  legacy full-cohort gate, bit-exact)
     seed: int = 0                  # selection RNG seed
 
 
@@ -120,8 +124,7 @@ class FedLesScan(Strategy):
             # (FleetStore.recent_mean replays np.mean's summation order),
             # identical rng.choice draws -> bit-identical tiers
             fleet = db.fleet
-            order = fleet.ordered_slots()
-            idle = order[fleet.status[order] == 0]
+            idle = fleet.idle_slots(db.round)   # quarantine-aware
             ever = fleet.n_invocations[idle] > 0
             unv, inv = idle[~ever], idle[ever]
             if len(unv) >= cfg.clients_per_round:
@@ -135,7 +138,8 @@ class FedLesScan(Strategy):
             inv_ids = fleet.ids[inv].tolist()
         else:
             clients = list(db.clients.values())
-            idle = [c for c in clients if c.status == "idle"]
+            idle = [c for c in clients if c.status == "idle"
+                    and c.quarantined_until <= db.round]
             uninvoked = [c for c in idle if not c.ever_invoked]
             if len(uninvoked) >= cfg.clients_per_round:
                 picks = self.rng.choice(len(uninvoked), cfg.clients_per_round,
@@ -211,7 +215,8 @@ class ApodotikoTopK(Apodotiko):
                 "(REPRO_CONTROL_PLANE=columnar)")
         return db.fleet.select_topk(
             self.cfg.clients_per_round,
-            promotion_rate(self.cfg.adjustment_rate))
+            promotion_rate(self.cfg.adjustment_rate),
+            now_round=round_)
 
 
 STRATEGIES = {

@@ -61,7 +61,15 @@ class LegacyStrategyAdapter(ReactivePolicy):
         s = self.strategy
         if s.is_async:
             return len(view.pending_results()) >= s.results_needed()
-        return self._selection <= view.completed_this_round
+        q = getattr(s.cfg, "quorum_fraction", 1.0)
+        if q >= 1.0:
+            # the legacy full-cohort gate, kept verbatim for bit-identity
+            return self._selection <= view.completed_this_round
+        # graceful degradation (DESIGN.md §12): close once a quorum of
+        # the selected cohort has landed; the stragglers' results arrive
+        # too late and are simply unusable (sync usable() wants round == T)
+        need = max(int(np.ceil(q * len(self._selection))), 1)
+        return len(self._selection & view.completed_this_round) >= need
 
     def _open(self, view: DatabaseView) -> list[Action]:
         """Round start (or re-select once a client went idle)."""

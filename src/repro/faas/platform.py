@@ -10,11 +10,14 @@ Models the serverless client lifecycle the paper measures (IV-A5):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 
 from repro.faas.hardware import HardwareProfile
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.faas.faults import FaultModel
 
 
 @dataclass
@@ -28,6 +31,12 @@ class InvocationRecord:
     failed: bool = False
     cancelled: bool = False    # killed mid-flight (hedge loser / explicit
     #                            cancel); duration is truncated at the kill
+    failed_phase: str = ""     # fault attribution: startup | train | upload
+    #                            | oom | outage | loss | timeout ("" = ok)
+    lost: bool = False         # zombie: ran to completion, result never
+    #                            landed (container survives — stays warm)
+    timed_out: bool = False    # killed by the scheduler's per-invocation
+    #                            timeout (recovery layer)
 
 
 @dataclass
@@ -39,12 +48,14 @@ class _Instance:
 class FaaSPlatform:
     def __init__(self, *, keep_warm: float = 600.0, cold_start_s: float = 8.0,
                  model_load_s: float = 2.0, upload_s: float = 1.0,
-                 seed: int = 0, failure_rate: float = 0.0):
+                 seed: int = 0, failure_rate: float = 0.0,
+                 faults: Optional["FaultModel"] = None):
         self.keep_warm = keep_warm
         self.cold_start_s = cold_start_s
         self.model_load_s = model_load_s
         self.upload_s = upload_s
         self.failure_rate = failure_rate
+        self.faults = faults
         self._instances: dict[int, _Instance] = {}
         self._rng = np.random.default_rng(seed)
         self.invocations: list[InvocationRecord] = []
@@ -65,11 +76,45 @@ class FaaSPlatform:
         if failed:
             # fail partway through (crash / preemption)
             duration = startup + self.model_load_s + train_time * self._rng.uniform(0.1, 0.9)
+        phase = "train" if failed else ""
+        lost = False
+        # fault injection rides on TOP of the legacy draws above (which are
+        # consumed verbatim, keeping pre-existing traces bit-identical);
+        # the FaultModel owns a separate RNG stream and draws a fixed
+        # number of values per invocation — nothing when faults are off
+        if self.faults is not None and self.faults.active and not failed:
+            out = self.faults.evaluate(client_id, now, hw)
+            if out.slowdown != 1.0:
+                train_time *= out.slowdown
+                duration = (startup + self.model_load_s + train_time
+                            + self.upload_s)
+            if out.failed_phase:
+                failed = True
+                phase = out.failed_phase
+                if phase in ("startup", "outage"):
+                    duration = startup * out.frac
+                elif phase in ("train", "oom"):
+                    duration = (startup + self.model_load_s
+                                + train_time * out.frac)
+                elif phase == "upload":
+                    duration = (startup + self.model_load_s + train_time
+                                + self.upload_s * out.frac)
+                elif phase == "loss":
+                    # zombie: full duration, the result just never lands
+                    lost = True
+            elif out.late_by:
+                duration += out.late_by
         rec = InvocationRecord(client_id, round_, now, cold,
                                duration=duration, t_completed=now + duration,
-                               failed=failed)
+                               failed=failed, failed_phase=phase, lost=lost)
         inst.busy_until = rec.t_completed
-        inst.warm_until = rec.t_completed + self.keep_warm
+        if failed and not lost:
+            # a crashed container is gone — the platform reclaims it, so
+            # the next invocation pays a cold start (a keep-warm window
+            # here undercounted cold starts); zombies survive their loss
+            inst.warm_until = rec.t_completed
+        else:
+            inst.warm_until = rec.t_completed + self.keep_warm
         self.invocations.append(rec)
         return rec
 

@@ -33,6 +33,8 @@ class RunSpec:
     #                                      (device | host | auto)
     control_plane: str = "auto"          # fleet-state backing
     #                                      (columnar | object | auto)
+    fault_profile: str = "auto"          # fault schedule (repro.faas.faults)
+    #                                      (auto = REPRO_FAULTS env, "" off)
     overrides: Tuple[Tuple[str, Any], ...] = ()  # extra FLConfig fields
 
     @property
@@ -41,9 +43,11 @@ class RunSpec:
         dp = "" if self.data_plane == "auto" else f"/dp={self.data_plane}"
         cp = ("" if self.control_plane == "auto"
               else f"/ctl={self.control_plane}")
+        fp = ("" if self.fault_profile == "auto"
+              else f"/faults={self.fault_profile or 'none'}")
         return (f"{self.dataset}/{self.scenario}/{self.strategy}"
                 f"/cr={self.concurrency_ratio:g}/{self.staleness_fn}"
-                f"/seed={self.seed}" + dp + cp + (f"/{ov}" if ov else ""))
+                f"/seed={self.seed}" + dp + cp + fp + (f"/{ov}" if ov else ""))
 
     @property
     def group(self) -> tuple:
@@ -51,9 +55,11 @@ class RunSpec:
         (FedAvg) for speedup / cold-start / cost ratios. The data and
         control planes are group axes: a device/columnar cell must be
         ratioed against the matching-plane FedAvg, never silently against
-        another plane's."""
+        another plane's. Likewise the fault profile: a chaos cell's
+        speedup is measured against the FedAvg that suffered the same
+        schedule."""
         return (self.dataset, self.scenario, self.seed, self.data_plane,
-                self.control_plane, self.overrides)
+                self.control_plane, self.fault_profile, self.overrides)
 
 
 @dataclass(frozen=True)
@@ -92,6 +98,7 @@ class SweepSpec:
     staleness_fns: Sequence[str] = ("eq2",)
     data_planes: Sequence[str] = ("auto",)   # device/host transport ablation
     control_planes: Sequence[str] = ("auto",)  # columnar/object fleet state
+    fault_profiles: Sequence[str] = ("auto",)  # chaos axis ("" = faults off)
     scale: SweepScale = field(default=BENCH_SCALE)
     overrides: Tuple[Tuple[str, Any], ...] = ()
 
@@ -100,7 +107,7 @@ class SweepSpec:
         return (len(self.datasets) * len(self.strategies) * len(self.seeds)
                 * len(self.scenarios) * len(self.concurrency_ratios)
                 * len(self.staleness_fns) * len(self.data_planes)
-                * len(self.control_planes))
+                * len(self.control_planes) * len(self.fault_profiles))
 
 
 def expand_grid(spec: SweepSpec) -> list[RunSpec]:
@@ -108,11 +115,12 @@ def expand_grid(spec: SweepSpec) -> list[RunSpec]:
     runs = [
         RunSpec(dataset=ds, strategy=strat, scenario=sc, seed=seed,
                 concurrency_ratio=cr, staleness_fn=fn, data_plane=dp,
-                control_plane=cp, overrides=tuple(spec.overrides))
-        for ds, sc, seed, cr, fn, dp, cp, strat in product(
+                control_plane=cp, fault_profile=fp,
+                overrides=tuple(spec.overrides))
+        for ds, sc, seed, cr, fn, dp, cp, fp, strat in product(
             spec.datasets, spec.scenarios, spec.seeds,
             spec.concurrency_ratios, spec.staleness_fns, spec.data_planes,
-            spec.control_planes, spec.strategies)
+            spec.control_planes, spec.fault_profiles, spec.strategies)
     ]
     keys = [r.key for r in runs]
     if len(set(keys)) != len(keys):

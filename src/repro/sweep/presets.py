@@ -98,6 +98,19 @@ PRESETS: dict[str, SweepSpec] = {
         strategies=("fedavg", "apodotiko", "apodotiko-topk"),
         control_planes=("columnar",),
         scale=FLEET_SCALE),
+    # fault-injection robustness grid (DESIGN.md §12): the same two
+    # strategies under no faults vs each canned chaos profile, with the
+    # retry/quarantine recovery layer armed — `fault_profile` is a group
+    # axis, so every speedup ratio compares runs that suffered the same
+    # seeded schedule
+    "chaos": SweepSpec(
+        name="chaos", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko"),
+        fault_profiles=("none", "crash-heavy", "outage-window",
+                        "lossy-network"),
+        scale=SMOKE_SCALE,
+        overrides=(("retry_budget", 8), ("invocation_timeout", 300.0),
+                   ("quarantine_threshold", 3))),
     # CI-sized end-to-end check (two strategies, seconds)
     "smoke": SweepSpec(name="smoke", datasets=("mnist",),
                        strategies=("fedavg", "apodotiko"),

@@ -27,10 +27,11 @@ from repro.sweep.grid import RunSpec
 
 SCHEMA = (
     "sweep", "dataset", "scenario", "strategy", "seed", "concurrency_ratio",
-    "staleness_fn", "data_plane", "rounds", "target_acc", "time_to_target_s",
-    "speedup_vs_fedavg", "final_acc", "best_acc", "sim_time_s",
-    "cold_starts", "cold_start_ratio", "cold_start_reduction_vs_fedavg",
-    "cost_usd", "cost_vs_fedavg", "n_invocations", "error",
+    "staleness_fn", "data_plane", "fault_profile", "rounds", "target_acc",
+    "time_to_target_s", "speedup_vs_fedavg", "final_acc", "best_acc",
+    "sim_time_s", "cold_starts", "cold_start_ratio",
+    "cold_start_reduction_vs_fedavg", "cost_usd", "cost_vs_fedavg",
+    "n_invocations", "n_failures", "n_retries", "n_quarantined", "error",
 )
 
 BASELINE = "fedavg"
@@ -94,7 +95,8 @@ class ResultTable:
                        scenario=run.scenario, strategy=run.strategy,
                        seed=run.seed, concurrency_ratio=run.concurrency_ratio,
                        staleness_fn=run.staleness_fn,
-                       data_plane=run.data_plane)
+                       data_plane=run.data_plane,
+                       fault_profile=run.fault_profile)
             m = metrics_list[i]
             if m is None or "error" in m:
                 row["error"] = (m or {}).get("error", "missing")
@@ -127,7 +129,10 @@ class ResultTable:
                 cost_usd=round(m.get("total_cost_usd", 0.0), 4),
                 cost_vs_fedavg=_ratio(m.get("total_cost_usd"),
                                       bm.get("total_cost_usd") if bm else None),
-                n_invocations=n_inv)
+                n_invocations=n_inv,
+                n_failures=m.get("n_failures"),
+                n_retries=m.get("n_retries"),
+                n_quarantined=m.get("n_quarantined"))
             rows.append(row)
         return cls(rows)
 

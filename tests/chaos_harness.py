@@ -1,0 +1,142 @@
+"""Shared chaos-testing harness (DESIGN.md §12), extending
+``trace_harness`` with fault-schedule machinery:
+
+* ``chaos_trace(engine)`` — the fault-aware observable trace: everything
+  ``trace()`` sees plus per-invocation phase attribution, zombie/loss
+  flags, timeout kills, and cancellations.
+* ``run_chaos_pair`` — Controller-vs-Scheduler bit-identity under one
+  seeded ``fault_profile`` (the cross-engine chaos contract: identical
+  schedules must produce identical traces on both engines), plus the
+  leak/consistency invariants on both.
+* ``assert_no_leaks`` — after a crash storm, no leaked update-store
+  rows, no stale blob entries, no dead in-flight registry entries.
+* ``assert_fleet_consistent`` — FleetStore slot-map/free-list
+  consistency (disjoint, exhaustive, id-coherent).
+
+Imported by tests/test_chaos.py; the self-tests at the bottom keep the
+harness itself honest.
+"""
+import numpy as np
+
+from trace_harness import (N_CLIENTS, base_cfg_kw, data,  # noqa: F401
+                           model, trace, assert_params_equal)
+
+from repro.core.controller import Controller, FLConfig
+from repro.core.scheduler import Scheduler
+from repro.faas.hardware import paper_fleet
+
+
+def chaos_trace(engine):
+    """``trace()`` plus the fault-attribution fields — the bit-identity
+    unit for chaos runs."""
+    hist, inv = trace(engine)
+    faults = [(r.client_id, r.round, r.failed_phase, r.lost, r.timed_out,
+               r.cancelled) for r in engine.platform.invocations]
+    return hist, inv, faults
+
+
+def assert_no_leaks(engine):
+    """Crash-storm hygiene: every in-flight registry entry is live, and
+    every allocated update row / stored blob is reachable from either an
+    un-aggregated result or a live un-landed payload."""
+    live_rows, live_blobs = set(), set()
+    for cid, invs in engine.inflight.items():
+        assert invs, f"empty inflight bucket leaked for client {cid}"
+        for inv in invs:
+            assert not inv.done, \
+                f"settled invocation leaked in registry for client {cid}"
+            if not inv.payload.landed:
+                if inv.payload.row >= 0:
+                    live_rows.add(inv.payload.row)
+                if inv.payload.blob is not None:
+                    live_blobs.add(id(inv.payload.blob))
+
+    db = engine.db
+    pending_rows = {r.update_row for r in db.results
+                    if not r.aggregated and r.update_row >= 0}
+    store = getattr(engine, "store", None)
+    if store is not None and engine.update_plane == "device":
+        free = list(store._free)
+        assert len(free) == len(set(free)), "duplicate free-list entries"
+        allocated = set(range(store.capacity)) - set(free)
+        assert allocated == pending_rows | live_rows, (
+            f"leaked update rows: {sorted(allocated - pending_rows - live_rows)}"
+            f" / lost rows: {sorted((pending_rows | live_rows) - allocated)}")
+    # blob plane: the blob dict holds exactly the un-aggregated updates
+    # plus the retained global models (in-flight payload blobs live only
+    # on the Inflight entry until they land)
+    expected = {r.update_key for r in db.results
+                if not r.aggregated and r.update_key}
+    expected |= set(db.global_models.values())
+    assert set(db.blobs) == expected, (
+        f"leaked blobs: {sorted(set(db.blobs) - expected)}"
+        f" / lost blobs: {sorted(expected - set(db.blobs))}")
+
+
+def assert_fleet_consistent(engine):
+    """FleetStore invariants: the slot map and the free list partition
+    the capacity, and every mapped slot carries its own id."""
+    db = engine.db
+    if not db.columnar:
+        return
+    fleet = db.fleet
+    free = list(fleet._free)
+    assert len(free) == len(set(free)), "duplicate fleet free-list entries"
+    active = set(np.flatnonzero(fleet.active).tolist())
+    assert active.isdisjoint(free), "slot both active and free"
+    assert active | set(free) == set(range(fleet.capacity)), \
+        "slots neither active nor free"
+    assert set(fleet._slot.values()) == active, "slot map out of sync"
+    for cid, slot in fleet._slot.items():
+        assert int(fleet.ids[slot]) == int(cid), "slot id mismatch"
+
+
+def assert_chaos_invariants(engine):
+    assert_no_leaks(engine)
+    assert_fleet_consistent(engine)
+
+
+def run_chaos_pair(cfg_kw, model, data, fleet=None):
+    """Run the same seeded fault schedule through both engines and assert
+    bit-identical chaos traces + the post-run invariants. Recovery knobs
+    must be off (they are scheduler-only). Returns (legacy, sched)."""
+    n = cfg_kw.get("n_clients", N_CLIENTS)
+    cfg = FLConfig(**cfg_kw)
+    assert not (cfg.invocation_timeout or cfg.retry_budget
+                or cfg.quarantine_threshold or cfg.quorum_fraction < 1.0), \
+        "recovery is scheduler-only; cross-engine runs must disable it"
+    fl = list(fleet) if fleet is not None else list(paper_fleet(n))
+    legacy = Controller(cfg, model, data, list(fl))
+    m_legacy = legacy.run()
+    sched = Scheduler(FLConfig(**cfg_kw), model, data, list(fl))
+    m_sched = sched.run()
+    assert chaos_trace(sched) == chaos_trace(legacy)
+    assert m_sched["total_time"] == m_legacy["total_time"]
+    assert m_sched["n_failures"] == m_legacy["n_failures"]
+    assert m_sched["failures_by_phase"] == m_legacy["failures_by_phase"]
+    assert_params_equal(legacy.params, sched.params)
+    for eng in (legacy, sched):
+        assert_chaos_invariants(eng)
+    return legacy, sched
+
+
+# ----------------------------------------------------- harness self-tests
+def test_chaos_trace_extends_trace(data, model):
+    eng = Scheduler(FLConfig(**base_cfg_kw(strategy="fedavg")), model, data,
+                    list(paper_fleet(N_CLIENTS)))
+    hist, inv, faults = chaos_trace(eng)
+    assert hist == [] and inv == [] and faults == []
+
+
+def test_invariants_hold_on_clean_run(data, model):
+    eng = Scheduler(FLConfig(**base_cfg_kw(strategy="fedavg")), model, data,
+                    list(paper_fleet(N_CLIENTS)))
+    eng.run()
+    assert_chaos_invariants(eng)
+
+
+def test_run_chaos_pair_rejects_recovery_configs(data, model):
+    import pytest
+    with pytest.raises(AssertionError, match="scheduler-only"):
+        run_chaos_pair(base_cfg_kw(strategy="fedavg", retry_budget=2),
+                       model, data)

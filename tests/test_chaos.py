@@ -1,0 +1,558 @@
+"""Chaos suite (DESIGN.md §12): fault injection + retry/backoff recovery.
+
+Layers under test:
+
+* ``faas.faults`` — spec parsing, profile resolution, the fixed-draw
+  determinism contract, phase attribution (OOM tiers, outage groups).
+* ``faas.platform`` — the crashed-container keep-warm bugfix, zombie
+  (lost-result) warm semantics, ``cancel`` edge cases.
+* cross-engine chaos bit-identity — identical seeded schedules through
+  the legacy poll loop and the event scheduler produce identical traces,
+  with no leaked update rows / blobs / in-flight entries after storms.
+* the recovery layer — per-invocation timeouts, backoff retries with a
+  per-round budget, the quarantine circuit breaker (FleetStore columns
+  feeding the selection mask), and partial-cohort quorum rounds.
+* megastep interaction — recovery knobs and stochastic schedules refuse
+  fusion with an attributable reason; deterministic outage windows only
+  shrink the horizon, and fusion re-engages once the window has passed.
+"""
+import numpy as np
+import pytest
+
+from chaos_harness import (assert_chaos_invariants, chaos_trace,
+                           run_chaos_pair)
+from trace_harness import (ALL_STRATEGIES, N_CLIENTS,
+                           assert_engines_equivalent, base_cfg_kw, data,
+                           model, det_fleet, megastep_cfg,
+                           assert_fused_matches_stepwise)  # noqa: F401
+
+from repro.core.controller import FLConfig
+from repro.core.scheduler import Scheduler
+from repro.core.recovery import RecoveryPolicy, recovery_enabled
+from repro.faas.faults import (FAULT_PROFILES, CrashFault, FaultModel,
+                               FaultSchedule, OOMFault, OutageWindow,
+                               ResultLossFault, SlowdownFault,
+                               build_fault_model, parse_faults,
+                               resolve_fault_profile)
+from repro.faas.hardware import HardwareProfile, paper_fleet
+from repro.faas.platform import FaaSPlatform
+
+
+HW = HardwareProfile("t", speed=1.0, vcpus=1.0, mem_gib=2.0)
+
+
+# ---------------------------------------------------------------- faults unit
+def test_parse_faults_all_kinds():
+    faults = parse_faults("crash:train:0.2,slow:2.5:0.1,loss:0.15:0.2:45,"
+                          "oom:2.0:0.3,outage:150-400:mod3=1")
+    assert faults == (CrashFault("train", 0.2), SlowdownFault(0.1, 2.5),
+                      ResultLossFault(0.15, 0.2, 45.0), OOMFault(0.3, 2.0),
+                      OutageWindow(150.0, 400.0, 3, 1))
+
+
+def test_parse_faults_explicit_outage_clients():
+    (w,) = parse_faults("outage:10-20:3+7")
+    assert w.clients == (3, 7)
+    assert w.hits(3, 15.0) and w.hits(7, 10.0)
+    assert not w.hits(4, 15.0)          # explicit list overrides mod/rem
+    assert not w.hits(3, 20.0)          # end-exclusive
+
+
+def test_parse_faults_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown fault spec"):
+        parse_faults("meteor:0.5")
+    with pytest.raises(ValueError, match="unknown crash phase"):
+        parse_faults("crash:teardown:0.5")
+
+
+def test_resolve_fault_profile_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert resolve_fault_profile("auto") == ""
+    monkeypatch.setenv("REPRO_FAULTS", "crash-heavy")
+    assert resolve_fault_profile("auto") == "crash-heavy"
+    assert resolve_fault_profile("") == "crash-heavy"
+    # explicit config beats the env var; none/off disable
+    assert resolve_fault_profile("lossy-network") == "lossy-network"
+    assert resolve_fault_profile("none") == ""
+    assert resolve_fault_profile("off") == ""
+    with pytest.raises(ValueError):
+        resolve_fault_profile("not:a:profile")
+
+
+def test_build_fault_model_off_is_none():
+    assert build_fault_model("", 0) is None
+    model = build_fault_model("crash-heavy", 3)
+    assert model is not None and model.active
+    assert len(model.stochastic) == 3
+
+
+def test_fault_model_is_replayable():
+    def outcomes(seed):
+        m = FaultModel(FaultSchedule(seed=seed, faults=parse_faults(
+            "crash:train:0.3,loss:0.2:0.5:10,slow:2.0:0.3")))
+        return [m.evaluate(cid, float(t), HW)
+                for t in range(50) for cid in range(4)]
+
+    a, b = outcomes(7), outcomes(7)
+    assert a == b                        # same seed: bit-identical outcomes
+    assert outcomes(8) != a              # seed actually matters
+    kinds = {o.failed_phase for o in a}
+    assert "train" in kinds and ("loss" in kinds or
+                                 any(o.late_by for o in a))
+
+
+def test_outage_window_is_deterministic_no_draws():
+    sched = FaultSchedule(seed=0, faults=parse_faults("outage:10-20:mod2=0"))
+    m = FaultModel(sched)
+    assert m.evaluate(2, 15.0, HW).failed_phase == "outage"
+    assert m.evaluate(3, 15.0, HW).failed_phase == ""
+    assert m.evaluate(2, 25.0, HW).failed_phase == ""
+    # outage-only schedules consume exactly one draw (the frac) per call,
+    # so two fresh models at the same seed stay in lockstep forever
+    m1, m2 = FaultModel(sched), FaultModel(sched)
+    for t in range(30):
+        assert m1.evaluate(t % 5, float(t), HW) == \
+            m2.evaluate(t % 5, float(t), HW)
+
+
+def test_oom_keys_on_hardware_tier():
+    m = FaultModel(FaultSchedule(seed=0, faults=(OOMFault(rate=1.0,
+                                                          mem_below_gib=2.0),)))
+    big = HardwareProfile("big", speed=1.0, vcpus=2.0, mem_gib=4.0)
+    assert m.evaluate(0, 0.0, HW).failed_phase == "oom"
+    assert m.evaluate(0, 0.0, big).failed_phase == ""
+
+
+# ----------------------------------------------------------- platform faults
+def test_crashed_container_goes_cold():
+    """Satellite bugfix: a crashed instance must NOT stay warm — the next
+    invocation pays a cold start again."""
+    p = FaaSPlatform(seed=0, failure_rate=1.0, keep_warm=600.0)
+    rec = p.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    assert rec.failed and rec.failed_phase == "train"
+    assert p._instances[0].warm_until == rec.t_completed
+    rec2 = p.invoke(0, 1, rec.t_completed + 1.0, 10.0, HW, 0.5)
+    assert rec2.cold                     # pre-fix: warm (the bug)
+
+
+def test_zombie_keeps_container_warm():
+    """A lost (zombie) invocation ran to completion: the container
+    survives and stays warm for the keep-warm window."""
+    p = FaaSPlatform(seed=0, keep_warm=600.0,
+                     faults=build_fault_model("loss:1.0", 0))
+    rec = p.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    assert rec.failed and rec.lost and rec.failed_phase == "loss"
+    assert p._instances[0].warm_until == rec.t_completed + 600.0
+    rec2 = p.invoke(0, 1, rec.t_completed + 1.0, 10.0, HW, 0.5)
+    assert not rec2.cold
+
+
+def test_fault_injection_attributes_phases():
+    p = FaaSPlatform(seed=0, faults=build_fault_model(
+        "crash:startup:0.3,crash:upload:0.3", 1))
+    recs = [p.invoke(i % 4, 0, float(i * 100), 10.0, HW, 0.5)
+            for i in range(60)]
+    phases = {r.failed_phase for r in recs if r.failed}
+    assert phases <= {"startup", "upload"}
+    assert len(phases) == 2
+    for r in recs:
+        if r.failed_phase == "startup":
+            # crashed during boot: duration is a fraction of startup only
+            assert r.duration < p.cold_start_s * 1.3
+    assert any(not r.failed for r in recs)
+
+
+def test_slowdown_stretches_train_time():
+    slow = FaaSPlatform(seed=0, faults=build_fault_model("slow:3.0:1.0", 0))
+    base = FaaSPlatform(seed=0)
+    r_slow = slow.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    r_base = base.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    assert not r_slow.failed
+    assert r_slow.duration > r_base.duration   # train time tripled
+
+
+def test_late_landing_extends_duration():
+    late = FaaSPlatform(seed=0, faults=build_fault_model("loss:1.0:1.0:60", 0))
+    base = FaaSPlatform(seed=0)
+    r_late = late.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    r_base = base.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    assert not r_late.failed and not r_late.lost
+    assert r_late.duration == pytest.approx(r_base.duration + 60.0)
+
+
+# ------------------------------------------------------------- cancel edges
+def test_cancel_after_completion_is_noop():
+    p = FaaSPlatform(seed=0)
+    rec = p.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    d = rec.duration
+    p.cancel(rec, rec.t_completed + 5.0)
+    assert not rec.cancelled and rec.duration == d
+
+
+def test_cancel_truncates_and_stops_clocks():
+    p = FaaSPlatform(seed=0, keep_warm=600.0)
+    rec = p.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    mid = rec.t_completed / 2
+    p.cancel(rec, mid)
+    assert rec.cancelled and rec.duration == mid and rec.t_completed == mid
+    assert p._instances[0].busy_until == mid
+    assert p._instances[0].warm_until == mid + 600.0
+
+
+def test_cancel_hedge_loser_respects_live_sibling():
+    """Cancelling the hedge loser must roll clocks back only to the
+    surviving sibling's completion, not to ``now``."""
+    p = FaaSPlatform(seed=0, keep_warm=600.0)
+    a = p.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    b = p.invoke(0, 0, 1.0, 10.0, HW, 0.5)     # hedge on the same instance
+    winner, loser = (a, b) if a.t_completed <= b.t_completed else (b, a)
+    p.cancel(loser, winner.t_completed, live_until=winner.t_completed)
+    assert loser.cancelled
+    assert p._instances[0].busy_until == winner.t_completed
+    assert p._instances[0].warm_until == winner.t_completed + 600.0
+
+
+def test_cancel_failed_invocation_midflight():
+    p = FaaSPlatform(seed=0, failure_rate=1.0)
+    rec = p.invoke(0, 0, 0.0, 10.0, HW, 0.5)
+    assert rec.failed
+    mid = rec.t_completed / 2
+    p.cancel(rec, mid)
+    assert rec.cancelled and rec.failed and rec.t_completed == mid
+
+
+# ----------------------------------------------- cross-engine chaos identity
+@pytest.mark.parametrize("profile", sorted(FAULT_PROFILES))
+def test_cross_engine_identity_under_profile(profile, data, model):
+    run_chaos_pair(base_cfg_kw(strategy="fedavg", fault_profile=profile),
+                   model, data)
+
+
+def test_cross_engine_identity_blob_plane(data, model):
+    run_chaos_pair(base_cfg_kw(strategy="fedavg", fault_profile="crash-heavy",
+                               update_plane="blob"), model, data)
+
+
+def test_cross_engine_identity_async_strategy(data, model):
+    run_chaos_pair(base_cfg_kw(strategy="apodotiko",
+                               fault_profile="lossy-network"), model, data)
+
+
+def test_chaos_run_is_replayable(data, model):
+    kw = base_cfg_kw(strategy="fedavg", fault_profile="crash-heavy")
+    runs = []
+    for _ in range(2):
+        eng = Scheduler(FLConfig(**kw), model, data,
+                        list(paper_fleet(N_CLIENTS)))
+        eng.run()
+        runs.append(chaos_trace(eng))
+    assert runs[0] == runs[1]
+
+
+@pytest.mark.parametrize("update_plane", ("device", "blob"))
+def test_crash_storm_leaves_no_leaks(update_plane, data, model):
+    kw = base_cfg_kw(strategy="apodotiko", update_plane=update_plane,
+                     fault_profile="crash:train:0.5,crash:startup:0.2,"
+                                   "crash:upload:0.2")
+    eng = Scheduler(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m = eng.run()
+    assert m["n_failures"] > 0
+    assert set(m["failures_by_phase"]) <= {"startup", "train", "upload"}
+    assert_chaos_invariants(eng)
+
+
+def test_outage_targets_only_its_group(data, model):
+    kw = base_cfg_kw(strategy="fedavg",
+                     fault_profile="outage:0-100000:mod2=1")
+    eng = Scheduler(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m = eng.run()
+    assert m["n_failures"] > 0
+    for r in eng.platform.invocations:
+        if r.client_id % 2 == 1:
+            assert r.failed and r.failed_phase == "outage"
+        else:
+            assert not r.failed
+    assert_chaos_invariants(eng)
+
+
+def test_faults_off_matches_pre_fault_trace(data, model):
+    """fault_profile="" must be a true no-op: same trace as a run where
+    the platform has no fault model at all."""
+    kw = base_cfg_kw(strategy="fedavg")
+    a = Scheduler(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    a.run()
+    assert a.platform.faults is None
+    b = Scheduler(FLConfig(**kw, fault_profile="none"), model, data,
+                  list(paper_fleet(N_CLIENTS)))
+    b.run()
+    assert chaos_trace(a) == chaos_trace(b)
+
+
+# --------------------------------------------------------------- recovery
+class _StubDB:
+    def __init__(self, consec=0, quarantined=False):
+        self._consec = consec
+        self._quar = quarantined
+
+    def consecutive_failures(self, cid):
+        return self._consec
+
+    def is_quarantined(self, cid):
+        return self._quar
+
+
+class _StubView:
+    def __init__(self, round_=0, **db_kw):
+        self.round = round_
+        self.db = _StubDB(**db_kw)
+
+
+class _StubEvent:
+    def __init__(self, cid, round_):
+        self.client_id = cid
+        self.round = round_
+
+
+class _StubInner:
+    """Minimal inner policy: records the events it was shown."""
+
+    strategy = None
+    name = "stub"
+    fire_timers_on_drain = False
+
+    def __init__(self):
+        self.seen = []
+
+    def on_event(self, ev, view):
+        self.seen.append(ev)
+        return []
+
+
+def _recovery_cfg(**kw):
+    return FLConfig(**base_cfg_kw(strategy="fedavg", **kw))
+
+
+def _recovery_policy(cfg):
+    return RecoveryPolicy(_StubInner(), cfg)
+
+
+def test_recovery_enabled_gate():
+    assert not recovery_enabled(_recovery_cfg())
+    assert recovery_enabled(_recovery_cfg(retry_budget=1))
+    assert recovery_enabled(_recovery_cfg(invocation_timeout=10.0))
+    assert recovery_enabled(_recovery_cfg(quarantine_threshold=3))
+
+
+def test_retry_backoff_is_exponential_and_budgeted():
+    cfg = _recovery_cfg(retry_budget=3, retry_base_delay=2.0,
+                        retry_backoff=2.0, retry_jitter=0.0)
+    pol = _recovery_policy(cfg)
+    view = _StubView(round_=0)
+    delays = [pol._recover(_StubEvent(5, 0), view) for _ in range(4)]
+    assert [a[0].delay for a in delays[:3]] == [2.0, 4.0, 8.0]
+    assert delays[3] == []               # per-round budget exhausted
+    # a new round resets attempts and budget
+    from repro.core.protocol import RoundStarted
+    pol.on_event(RoundStarted(t=0.0, round=1), _StubView(round_=1))
+    assert pol._budget == 3 and pol._attempts == {}
+    assert [a.delay for a in pol._recover(_StubEvent(5, 1),
+                                          _StubView(round_=1))] == [2.0]
+
+
+def test_retry_jitter_is_seeded_and_bounded():
+    cfg = _recovery_cfg(retry_budget=50, retry_base_delay=2.0,
+                        retry_backoff=1.0, retry_jitter=0.25)
+    a, b = _recovery_policy(cfg), _recovery_policy(cfg)
+    view = _StubView(round_=0)
+    da = [a._recover(_StubEvent(i, 0), view)[0].delay for i in range(20)]
+    db = [b._recover(_StubEvent(i, 0), view)[0].delay for i in range(20)]
+    assert da == db                      # same seed: same jitter stream
+    assert all(2.0 <= d < 2.0 * 1.25 for d in da)
+    assert len(set(da)) > 1              # jitter actually varies
+
+
+def test_timeout_event_translated_for_inner_policy():
+    from repro.core.protocol import (InvocationFailed, InvocationTimedOut,
+                                     Retry)
+    cfg = _recovery_cfg(retry_budget=1, retry_jitter=0.0)
+    pol = _recovery_policy(cfg)
+    acts = pol.on_event(InvocationTimedOut(t=3.0, round=0, client_id=7),
+                        _StubView(round_=0))
+    assert any(isinstance(a, Retry) for a in acts)
+    (seen,) = pol.inner.seen
+    assert isinstance(seen, InvocationFailed)   # inner never sees the
+    assert seen.client_id == 7 and seen.t == 3.0  # new event type
+
+
+def test_retry_skips_stale_round_failures():
+    cfg = _recovery_cfg(retry_budget=3, retry_jitter=0.0)
+    pol = _recovery_policy(cfg)
+    # a failure from a previous round gets no retry (round-scoped budget)
+    assert pol._recover(_StubEvent(5, 0), _StubView(round_=1)) == []
+
+
+def test_quarantine_preempts_retry():
+    from repro.core.protocol import Quarantine
+    cfg = _recovery_cfg(retry_budget=3, quarantine_threshold=2,
+                        quarantine_rounds=4)
+    pol = _recovery_policy(cfg)
+    acts = pol._recover(_StubEvent(5, 0), _StubView(round_=0, consec=2))
+    assert len(acts) == 1 and isinstance(acts[0], Quarantine)
+    assert acts[0].until_round == 4
+    # breaker already open: no duplicate action
+    assert pol._recover(_StubEvent(5, 0),
+                        _StubView(round_=0, consec=3, quarantined=True)) == []
+
+
+def test_retries_recover_failures_end_to_end(data, model):
+    kw = base_cfg_kw(strategy="fedavg", failure_rate=0.4, retry_budget=8,
+                     retry_jitter=0.0, rounds=2)
+    eng = Scheduler(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m = eng.run()
+    assert isinstance(eng.policy, RecoveryPolicy)
+    assert m["n_retries"] > 0
+    assert m["retry_latency_s"] > 0.0
+    assert m["n_retries"] <= 8 * kw["rounds"]
+    assert_chaos_invariants(eng)
+
+
+def test_invocation_timeout_kills_stragglers(data, model):
+    kw = base_cfg_kw(strategy="fedavg", invocation_timeout=5.0, rounds=2)
+    eng = Scheduler(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m = eng.run()
+    assert m["n_timeouts"] > 0
+    assert m["n_failures"] >= m["n_timeouts"]
+    timed_out = [r for r in eng.platform.invocations if r.timed_out]
+    assert timed_out
+    for r in timed_out:
+        assert r.failed and r.cancelled and r.failed_phase == "timeout"
+        assert r.duration <= 5.0 + 1e-9
+    assert "timeout" in m["failures_by_phase"]
+    assert_chaos_invariants(eng)
+
+
+def test_quarantine_circuit_breaker_and_reentry(data, model):
+    """A client inside a permanent outage trips the breaker, sits out
+    ``quarantine_rounds`` rounds, and re-enters the selection mask."""
+    bad = 3
+    kw = base_cfg_kw(strategy="fedavg", clients_per_round=N_CLIENTS,
+                     rounds=8, fault_profile=f"outage:0-1000000:{bad}",
+                     quarantine_threshold=2, quarantine_rounds=2)
+    eng = Scheduler(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m = eng.run()
+    assert m["n_quarantined"] >= 1
+    rounds_invoked = sorted({r.round for r in eng.platform.invocations
+                             if r.client_id == bad})
+    all_rounds = sorted({r.round for r in eng.platform.invocations})
+    sat_out = set(all_rounds) - set(rounds_invoked)
+    assert sat_out, "breaker never removed the client from selection"
+    # re-entry: invoked again in a round after a quarantine gap
+    gaps = [(a, b) for a, b in zip(rounds_invoked, rounds_invoked[1:])
+            if b - a > 1]
+    assert gaps, "client never re-entered after quarantine"
+    assert_chaos_invariants(eng)
+
+
+def test_apodotiko_selection_survives_zero_score_pool(data, model):
+    """Regression: clients whose every invocation failed have no duration
+    history, so Algorithm 3 scores them 0 — the probabilistic draw must
+    cap at the nonzero-probability count instead of raising
+    ``Fewer non-zero entries in p than size`` (both control planes)."""
+    for plane in ("columnar", "object"):
+        kw = base_cfg_kw(strategy="apodotiko", rounds=4,
+                         control_plane=plane, fault_profile="crash-heavy",
+                         invocation_timeout=300.0, retry_budget=8,
+                         quarantine_threshold=3)
+        eng = Scheduler(FLConfig(**kw), model, data,
+                        list(paper_fleet(N_CLIENTS)))
+        m = eng.run()
+        assert m["n_failures"] > 0
+        assert_chaos_invariants(eng)
+
+
+def test_quorum_closes_partial_cohort_earlier(data, model):
+    kw = base_cfg_kw(strategy="fedavg", clients_per_round=8, rounds=2)
+    full = Scheduler(FLConfig(**kw), model, data,
+                     list(paper_fleet(N_CLIENTS)))
+    m_full = full.run()
+    part = Scheduler(FLConfig(**kw, quorum_fraction=0.5), model, data,
+                     list(paper_fleet(N_CLIENTS)))
+    m_part = part.run()
+    assert m_part["total_time"] < m_full["total_time"]
+    # every quorum round closed with a partial cohort (at least half of
+    # that round's selection, never the full 8 the full gate waits for)
+    assert part.history and all(l.n_aggregated >= 1 for l in part.history)
+    assert all(l.n_aggregated < 8 for l in part.history)
+    assert all(l.n_aggregated == 8 for l in full.history)
+    assert_chaos_invariants(part)
+
+
+# --------------------------------------------------------------- megastep
+def test_recovery_knobs_refuse_megastep(data, model):
+    for kw, reason in (
+            (dict(invocation_timeout=500.0), "retry/timeout recovery enabled"),
+            (dict(retry_budget=2), "retry/timeout recovery enabled"),
+            (dict(quorum_fraction=0.5), "partial-cohort quorum enabled"),
+            (dict(fault_profile="crash:train:0.3"),
+             "stochastic fault schedule active")):
+        cfg = FLConfig(**megastep_cfg(rounds=2, megastep="fused", **kw))
+        eng = Scheduler(cfg, model, data, det_fleet(N_CLIENTS))
+        m = eng.run()
+        assert m["megastep_rounds"] == 0, kw
+        assert m["megastep_fallback_reason"] == reason, kw
+
+
+def test_megastep_refuses_overlapping_outage_window(data, model):
+    """A fleet-wide outage window opening right at the fused horizon:
+    megastep must refuse with an attributable reason, and the fused run
+    must stay bit-identical to the stepwise oracle."""
+    kw = megastep_cfg(rounds=3, clients_per_round=N_CLIENTS)
+    cal = Scheduler(FLConfig(**kw, megastep="stepwise"), model, data,
+                    det_fleet(N_CLIENTS))
+    cal.run()
+    t1 = cal.history[1].t_start          # round-1 launch instant
+    faulted = dict(kw, fault_profile=f"outage:{t1 - 0.5}-1000000:mod1=0")
+    m_step, m_fused = assert_fused_matches_stepwise(
+        faulted, model, data, fleet=det_fleet(N_CLIENTS))
+    assert m_fused["megastep_rounds"] == 0
+    assert m_fused["megastep_fallback_reason"] == \
+        "fault window overlaps horizon"
+
+
+def test_megastep_reengages_after_outage_window(data, model):
+    """A brief outage over round 3's launches: fusion stops short of the
+    window, the faulted rounds run stepwise, and fusion re-engages once
+    every instance is warm again — all bit-identical to stepwise."""
+    kw = megastep_cfg(rounds=8, clients_per_round=N_CLIENTS)
+    cal = Scheduler(FLConfig(**kw, megastep="stepwise"), model, data,
+                    det_fleet(N_CLIENTS))
+    cal.run()
+    t3 = cal.history[3].t_start
+    faulted = dict(kw,
+                   fault_profile=f"outage:{t3 - 0.25}-{t3 + 0.25}:mod2=1")
+    m_step, m_fused = assert_fused_matches_stepwise(
+        faulted, model, data, fleet=det_fleet(N_CLIENTS),
+        min_fused_rounds=1)
+    assert m_fused["megastep_scans"] >= 2       # re-engaged after the window
+    assert 0 < m_fused["megastep_rounds"] < kw["rounds"] - 1
+    assert m_fused["n_failures"] > 0            # the outage really struck
+    assert m_fused["failures_by_phase"] == {"outage": m_fused["n_failures"]}
+
+
+def test_megastep_engages_with_future_window(data, model):
+    """A window entirely beyond the run's horizon must not refuse."""
+    kw = megastep_cfg(rounds=4, clients_per_round=N_CLIENTS,
+                      fault_profile="outage:1e7-2e7:mod1=0")
+    m_step, m_fused = assert_fused_matches_stepwise(
+        kw, model, data, fleet=det_fleet(N_CLIENTS), min_fused_rounds=1)
+    assert m_fused["megastep_scans"] >= 1
+
+
+# ------------------------------------------------------------ strategies
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_invocation_failed_all_strategies_both_engines(strategy, data, model):
+    """Satellite: the InvocationFailed path stays bit-identical across
+    engines for every legacy strategy."""
+    cfg = FLConfig(**base_cfg_kw(strategy=strategy, failure_rate=0.3,
+                                 rounds=2))
+    assert_engines_equivalent(cfg, model, data, paper_fleet(N_CLIENTS))

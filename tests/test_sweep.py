@@ -221,6 +221,32 @@ def test_control_plane_axis_expands():
     assert cfg.control_plane == runs[0].control_plane
 
 
+def test_fault_profile_axis_expands():
+    spec = small_spec(strategies=("apodotiko",), datasets=("mnist",),
+                      seeds=(0,), fault_profiles=("none", "crash-heavy"))
+    runs = expand_grid(spec)
+    assert len(runs) == spec.n_runs == 2
+    assert {r.fault_profile for r in runs} == {"none", "crash-heavy"}
+    assert all("/faults=" in r.key for r in runs)
+    # schedules never share a baseline: a chaos cell's speedup must be
+    # ratioed against the FedAvg that suffered the same faults
+    assert len({r.group for r in runs}) == 2
+    runner = LocalRunner(SweepScale(n_clients=6, clients_per_round=3))
+    cfg = runner.config(runs[1])
+    assert cfg.fault_profile == "crash-heavy"
+    # default stays out of the key so pre-existing cache keys are stable
+    assert "/faults=" not in expand_grid(small_spec())[0].key
+
+
+def test_chaos_preset_registered():
+    spec = get_preset("chaos")
+    assert "none" in spec.fault_profiles
+    assert {"crash-heavy", "outage-window", "lossy-network"} <= set(
+        spec.fault_profiles)
+    assert dict(spec.overrides)["retry_budget"] > 0
+    assert len(expand_grid(spec)) == spec.n_runs
+
+
 def test_controlplane_presets_registered():
     spec = get_preset("controlplane_ablation")
     assert set(spec.control_planes) == {"columnar", "object"}
