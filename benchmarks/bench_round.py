@@ -43,6 +43,15 @@ failure/retry counts, simulated-time impact, recovery wall overhead.
 Lands in ``BENCH_faults.json``; exits nonzero if a seeded fault schedule
 replays differently on the two engines (the cross-engine chaos gate).
 
+``--traffic`` measures the open-loop traffic plane (DESIGN.md §13):
+arrival-schedule compile throughput at M ∈ {1e5, 1e6}, bulk (windowed
+``add_batch``/``remove_batch`` segments) vs per-event Python application
+of a 1e4-client flash crowd over an M=1e5 ``FleetStore``, and the
+per-strategy SLO table — p50/p99 round latency, cold-start rate,
+cost-per-round — under the diurnal profile. Lands in
+``BENCH_traffic.json``; exits nonzero if the bulk path diverges from the
+per-event oracle (the CI gate).
+
 Measures the aggregation+transfer component of one controller round — the
 path between cohort training finishing and the new global model existing —
 at K ∈ {10, 100} clients x N ∈ {1e4, 1e6} parameters:
@@ -747,9 +756,10 @@ def _fault_engine(engine_cls, model, data, rounds: int, **cfg_overrides):
     from repro.faas.hardware import paper_fleet
 
     n = len(data.n)
+    cfg_overrides.setdefault("strategy", "apodotiko")
     cfg = FLConfig(n_clients=n, clients_per_round=4, rounds=rounds,
                    local_epochs=1, batch_size=5, base_step_time=0.8,
-                   concurrency_ratio=0.5, seed=0, strategy="apodotiko",
+                   concurrency_ratio=0.5, seed=0,
                    **cfg_overrides)
     eng = engine_cls(cfg, model, data, list(paper_fleet(n)))
     t0 = time.perf_counter()
@@ -855,6 +865,172 @@ def run_faults(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# ---------------------------------------------------------------- traffic
+
+
+def _traffic_apply_bulk(schedule, db, cards):
+    """Apply a compiled schedule through the traffic plane's vectorized
+    path: one ``unregister_clients_bulk`` + one ``register_clients_bulk``
+    per windowed segment (what ``services._apply_traffic_segment`` runs)."""
+    for seg in schedule.segments:
+        if len(seg.leaves):
+            db.unregister_clients_bulk(seg.leaves)
+        if len(seg.joins):
+            db.register_clients_bulk(seg.joins, cards[seg.joins], 5, 1)
+
+
+def _traffic_apply_per_event(schedule, db, cards):
+    """The per-event Python path the traffic plane replaces: one
+    ``ClientRecord`` built and registered (or unregistered) per
+    ClientJoined/ClientLeft event — the runtime's pre-traffic membership
+    API, as used by the registration loop and churn tests."""
+    from repro.core.database import ClientRecord
+    for t, kind, cid in schedule.events():
+        if kind == "leave":
+            db.unregister_client(cid)
+        else:
+            db.register_client(ClientRecord(
+                client_id=cid, hardware="",
+                data_cardinality=int(cards[cid]),
+                batch_size=5, local_epochs=1))
+
+
+def _traffic_seed_store(schedule, cards):
+    from repro.core.database import Database
+    from repro.core.fleet_store import FleetStore
+    db = Database(control_plane="columnar")
+    db.fleet = FleetStore(capacity=schedule.capacity)
+    init = schedule.initial
+    if len(init):
+        db.register_clients_bulk(init, cards[init], 5, 1)
+    return db
+
+
+def _traffic_cell(M: int, n_flash: int, iters: int) -> dict:
+    """Bulk vs per-event application of a flash-crowd + churn schedule
+    over an M-client FleetStore (the ISSUE's >=10x acceptance gate)."""
+    from repro.traffic import build_traffic_schedule
+
+    spec = (f"init:0.5,window:30,horizon:900,"
+            f"flash:60:{n_flash}:300,poisson:2.0:120")
+    sched = build_traffic_schedule(spec, M, seed=0)
+    rng = np.random.default_rng(0)
+    cards = rng.integers(20, 200, M)
+    n_events = sum(len(s.joins) + len(s.leaves) for s in sched.segments)
+
+    def _time(apply_fn):
+        best = float("inf")
+        for _ in range(iters):
+            db = _traffic_seed_store(sched, cards)
+            t0 = time.perf_counter()
+            apply_fn(sched, db, cards)
+            best = min(best, time.perf_counter() - t0)
+        return best, db.fleet
+
+    bulk_s, fs_bulk = _time(_traffic_apply_bulk)
+    ev_s, fs_ev = _time(_traffic_apply_per_event)
+    identical = (
+        fs_bulk._slot == fs_ev._slot
+        and fs_bulk._free == fs_ev._free
+        and np.array_equal(fs_bulk.active, fs_ev.active)
+        and np.array_equal(fs_bulk.ids, fs_ev.ids)
+        and np.array_equal(fs_bulk.seq, fs_ev.seq)
+        and np.array_equal(fs_bulk.cardinality, fs_ev.cardinality))
+    return {"M": M, "segments": len(sched.segments), "events": n_events,
+            "n_dropped": sched.n_dropped,
+            "bulk_ms": round(bulk_s * 1e3, 3),
+            "per_event_ms": round(ev_s * 1e3, 3),
+            "bulk_speedup": round(ev_s / bulk_s, 1) if bulk_s else None,
+            "bulk_matches_per_event": identical}
+
+
+def _traffic_compile_cell(M: int, rate: float) -> dict:
+    """Schedule-compile (mask-generation) throughput: arrival processes
+    -> windowed bulk segments, the work that replaces per-event Python."""
+    from repro.traffic import build_traffic_schedule
+
+    spec = f"init:0.5,window:60,horizon:20000,diurnal:{rate}:0.9:3600:1800"
+    t0 = time.perf_counter()
+    sched = build_traffic_schedule(spec, M, seed=0)
+    wall = time.perf_counter() - t0
+    n_events = sum(len(s.joins) + len(s.leaves) for s in sched.segments)
+    return {"M": M, "arrival_rate": rate, "segments": len(sched.segments),
+            "events": n_events, "compile_ms": round(wall * 1e3, 1),
+            "events_per_s": (round(n_events / wall) if wall else None)}
+
+
+def run_traffic(smoke: bool = False, json_path: str = "") -> dict:
+    """Open-loop traffic bench (DESIGN.md §13): schedule-compile
+    throughput at fleet scale, bulk vs per-event FleetStore application
+    (the vectorized availability path must beat per-event Python), and
+    per-strategy SLO metrics — p50/p99 round latency, cold-start rate,
+    cost-per-round — under the diurnal profile. Lands in
+    ``BENCH_traffic.json``; exits nonzero if the bulk path diverges from
+    the per-event oracle."""
+    from repro.core.scheduler import Scheduler
+    from repro.data.synthetic import make_federated_dataset
+    from repro.models.proxy_models import build_bench_model
+
+    # 1) mask-gen throughput: M=1e5 (and 1e6 outside smoke)
+    compile_cells = [_traffic_compile_cell(100_000, 0.5)]
+    if not smoke:
+        compile_cells.append(_traffic_compile_cell(1_000_000, 5.0))
+    for c in compile_cells:
+        print(f"traffic/compile/M={c['M']},{c['compile_ms'] * 1e3:.0f},"
+              f"events={c['events']} events_per_s={c['events_per_s']}")
+
+    # 2) bulk vs per-event application at M=1e5 (1e4-client flash crowd)
+    cell = _traffic_cell(100_000, 10_000, iters=1 if smoke else 3)
+    print(f"traffic/apply/M={cell['M']},{cell['bulk_ms'] * 1e3:.0f},"
+          f"per_event_ms={cell['per_event_ms']} "
+          f"speedup={cell['bulk_speedup']}x "
+          f"identical={cell['bulk_matches_per_event']}")
+
+    # 3) SLO table: three strategies under diurnal load. The canned
+    # "diurnal" profile's 30 s window outlives a 3-round smoke run, so
+    # the bench pins an early-window variant of the same shape — churn
+    # must actually fire inside every strategy's run
+    diurnal = "init:0.5,window:5,diurnal:0.3:0.9:120:60"
+    rounds = 3 if smoke else 8
+    data = make_federated_dataset("mnist", n_clients=8, scale=0.06, seed=0)
+    model = build_bench_model("mnist")
+    _fault_engine(Scheduler, model, data, 1)    # compile warmup, discarded
+    slo_runs = []
+    for strat in ("fedavg", "apodotiko", "apodotiko-hedge"):
+        _, m, wall = _fault_engine(Scheduler, model, data, rounds,
+                                   strategy=strat,
+                                   traffic_profile=diurnal)
+        d = {"strategy": strat, "traffic_profile": diurnal,
+             "rounds": m["rounds"], "wall_s": round(wall, 3),
+             "sim_time_s": round(m["total_time"], 1),
+             "p50_round_latency_s": round(m["p50_round_latency_s"], 2),
+             "p99_round_latency_s": round(m["p99_round_latency_s"], 2),
+             "cold_start_rate": round(m["cold_start_rate"], 4),
+             "cost_per_round_usd": round(m["cost_per_round_usd"], 6),
+             "final_acc": round(m.get("final_accuracy", 0.0), 4),
+             "n_traffic_joins": m["n_traffic_joins"],
+             "n_traffic_leaves": m["n_traffic_leaves"]}
+        slo_runs.append(d)
+        print(f"traffic/slo/{strat},{wall * 1e6:.0f},"
+              f"p50={d['p50_round_latency_s']}s "
+              f"p99={d['p99_round_latency_s']}s "
+              f"cold={d['cold_start_rate']} "
+              f"cost_per_round={d['cost_per_round_usd']}")
+
+    out = {"bench": "traffic", "smoke": smoke,
+           "backend": jax.default_backend(),
+           "compile": compile_cells, "apply": cell, "slo": slo_runs}
+    path = json_path or os.path.join(_ROOT, "BENCH_traffic.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    if not cell["bulk_matches_per_event"]:
+        print("FAIL: bulk traffic application diverged from the "
+              "per-event oracle")
+        sys.exit(1)
+    return out
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     jp = ""
@@ -870,5 +1046,7 @@ if __name__ == "__main__":
         run_megastep(smoke=smoke, json_path=jp)
     elif "--faults" in sys.argv:
         run_faults(smoke=smoke, json_path=jp)
+    elif "--traffic" in sys.argv:
+        run_traffic(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

@@ -69,6 +69,12 @@ def run_sweep_mode(argv: list[str]) -> None:
     if len({r["data_plane"] for r in table.rows}) > 1:
         # plane-ablation sweeps: show which transport each row ran on
         cols = SWEEP_COLUMNS[:3] + ("data_plane",) + SWEEP_COLUMNS[3:]
+    if len({r["traffic_profile"] for r in table.rows}) > 1:
+        # open-loop sweeps: label each comparison group's arrival process
+        # and surface the SLO columns (DESIGN.md §13)
+        cols = (cols[:3] + ("traffic_profile",) + cols[3:]
+                + ("p50_round_latency_s", "p99_round_latency_s",
+                   "cost_per_round_usd"))
     print(table.to_markdown(columns=cols))
     for s in sorted({r["strategy"] for r in table.rows}):
         if s != "fedavg":

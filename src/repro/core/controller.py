@@ -55,14 +55,24 @@ class Controller(FLRuntime):
         cfg, strat = self.cfg, self.strategy
         round_ = self.db.round
         acc = 0.0
+        traffic_round = -1
         while round_ < cfg.rounds and self.loop.now < cfg.max_sim_time:
             t0 = self.loop.now
             self._t0 = t0
+            if round_ != traffic_round:
+                # fresh-round open only — mid-round re-polls must not
+                # shift membership, mirroring the scheduler (which applies
+                # traffic in _open_round, never on adapter re-selects)
+                self._apply_due_traffic()
+                traffic_round = round_
             selection = strat.select(self.db, round_)
             if not selection:
-                # every client busy: advance until something completes
+                # every client busy: advance until something completes —
+                # or, when the fleet is empty under open-loop traffic,
+                # jump to the next arrival boundary
                 if not self.loop.run_until(self.db.any_idle):
-                    break
+                    if not self._traffic_fast_forward():
+                        break
                 continue
             self.invoke_round(round_, selection)
 

@@ -158,6 +158,32 @@ class Database:
             return self.fleet.remove(client_id)
         return self._clients.pop(client_id, None) is not None
 
+    # ------------------------------------------------------ bulk membership
+    def register_clients_bulk(self, client_ids, cardinalities, batch_size,
+                              local_epochs, hardware=None) -> None:
+        """Register fresh clients in one columnar append (the traffic
+        plane's entry point, DESIGN.md §13). On the object plane this
+        degrades to per-record dict assignment with identical insertion
+        order (ids are applied in the given order on both planes)."""
+        if self.columnar:
+            self.fleet.add_batch(client_ids, cardinalities, batch_size,
+                                 local_epochs)
+            return
+        hw = hardware if hardware is not None else [""] * len(client_ids)
+        for cid, card, name in zip(client_ids, cardinalities, hw):
+            self._clients[int(cid)] = ClientRecord(
+                client_id=int(cid), hardware=name,
+                data_cardinality=int(card), batch_size=int(batch_size),
+                local_epochs=int(local_epochs))
+
+    def unregister_clients_bulk(self, client_ids) -> list[int]:
+        """Remove clients in one columnar scatter; returns the ids that
+        were actually registered (unknown ids are skipped)."""
+        if self.columnar:
+            return self.fleet.remove_batch(client_ids)
+        return [int(cid) for cid in client_ids
+                if self._clients.pop(int(cid), None) is not None]
+
     def mark_running(self, client_id: int, round_: int) -> None:
         if self.columnar:
             self.fleet.mark_running(client_id, round_)

@@ -48,6 +48,7 @@ the bit-exact oracle twin.
 from __future__ import annotations
 
 import functools
+from itertools import repeat
 from typing import Optional
 
 import numpy as np
@@ -193,11 +194,15 @@ class FleetStore:
         fleet-scale entry point). All ids must be fresh."""
         cids = np.asarray(client_ids, np.int64)
         n = len(cids)
-        if any(int(c) in self._slot for c in cids):
+        if n == 0:
+            return np.empty(0, np.int64)
+        if not self._slot.keys().isdisjoint(cids.tolist()):
             raise ValueError("add_batch requires fresh client ids")
         if len(self._free) < n:
             self._ensure(self.capacity + (n - len(self._free)))
-        slots = np.array([self._free.pop() for _ in range(n)], np.int64)
+        # vectorized LIFO pop: identical slot order to n sequential pops
+        slots = np.asarray(self._free[-n:][::-1], np.int64)
+        del self._free[len(self._free) - n:]
         self._slot.update(zip(cids.tolist(), slots.tolist()))
         self.seq[slots] = self._next_seq + np.arange(n)
         self._next_seq += n
@@ -216,12 +221,36 @@ class FleetStore:
         self.upd32[slots] = (
             (self.cardinality[slots] * self.local_epochs[slots])
             / np.maximum(self.batch_size[slots], 1)).astype(np.float32)
+        self.durations[slots, :] = 0.0
         self.last_round[slots] = -1
         self._order = None
         self._dev_dirty.update(slots.tolist())
         if self._dev is not None:
             self._dev.reset_booster(slots)
         return slots
+
+    def remove_batch(self, client_ids) -> list[int]:
+        """Bulk removal: one column scatter + one free-list extend,
+        free-list-order-identical to sequential ``remove`` calls. Unknown
+        ids are skipped; returns the ids actually removed."""
+        cids = np.asarray(client_ids, np.int64).tolist()
+        # C-speed pop loop: dict.pop is a C method, so map() never enters
+        # a Python frame per id
+        raw = list(map(self._slot.pop, cids, repeat(None)))
+        if None in raw:
+            removed = [c for c, s in zip(cids, raw) if s is not None]
+            slots = [s for s in raw if s is not None]
+        else:
+            removed, slots = cids, raw
+        if not slots:
+            return []
+        sl = np.asarray(slots, np.int64)
+        self.active[sl] = False
+        self.ids[sl] = -1
+        self._free.extend(slots)
+        self._order = None
+        self._dev_dirty.update(slots)
+        return removed
 
     def remove(self, client_id: int) -> bool:
         slot = self._slot.pop(int(client_id), None)

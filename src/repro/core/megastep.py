@@ -237,6 +237,26 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
                 R = 0
         if R < 1:
             return None, "fault window overlaps horizon"
+    traffic = getattr(sched, "traffic", None)
+    if traffic is not None:
+        if traffic.stochastic:
+            # the schedule is pre-compiled, but whether a fused horizon
+            # stays membership-quiescent under a Poisson/diurnal source
+            # is not provable from static facts — stepwise is the oracle
+            return None, "stochastic traffic profile active"
+        nb = sched._traffic_boundary()
+        if nb is not None:
+            # deterministic segment boundaries work like outage windows:
+            # stepwise applies a segment at the first round *open* with
+            # t >= start, and fused round r opens at t0 + r*D — so the
+            # horizon must stop before the next unapplied boundary and
+            # re-engage after _open_round applies it.
+            if nb <= t0:
+                return None, "traffic boundary overlaps horizon"
+            if D > 0:
+                R = min(R, int(np.ceil((nb - t0) / D - 1e-12)))
+            if R < 1 or t0 + (R - 1) * D >= nb:
+                return None, "traffic boundary overlaps horizon"
 
     from repro.core.aggregation import rows_dispatch
     from repro.core.scoring import promotion_rate

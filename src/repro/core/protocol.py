@@ -104,6 +104,23 @@ class ClientLeft(Event):
 
 
 @dataclass(frozen=True)
+class ClientsJoined(Event):
+    """A traffic segment registered ``client_ids`` in bulk — one event
+    per windowed segment, not per client (the open-loop arrival path,
+    DESIGN.md §13). Policies that don't care may ignore it."""
+
+    client_ids: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class ClientsLeft(Event):
+    """Bulk counterpart of ``ClientLeft`` for traffic segments; the
+    runtime has already cancelled the departees' in-flight work."""
+
+    client_ids: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
 class LoopDrained(Event):
     """No future events exist (and, for policies with
     ``fire_timers_on_drain=False``, pending timers will not fire). The

@@ -111,6 +111,18 @@ class Scheduler(FLRuntime):
             if self._pump_one():
                 drained = 0
                 continue
+            if (not self._invoked_this_round and not self.inflight
+                    and not self.db.any_idle()
+                    and self._traffic_fast_forward()):
+                # stalled for lack of clients (not policy inaction): under
+                # open-loop traffic the clock jumps to the next arrival
+                # boundary and the round re-opens against the new fleet —
+                # the legacy loop's drained re-poll, not an EndRun
+                self._t0 = self.loop.now
+                self._dispatch(RoundStarted(t=self.loop.now,
+                                            round=self.db.round))
+                drained = 0
+                continue
             drained += 1
             if drained > 1:
                 break               # policy made no progress on drain
@@ -288,6 +300,10 @@ class Scheduler(FLRuntime):
         # completions it replays extend keep-warm windows, which can make
         # further rounds eligible. Any ineligibility falls through to the
         # event-driven engine — the bit-exact oracle — for this round.
+        # fresh-round open is the only point where traffic shifts
+        # membership (the legacy loop mirrors this at its loop top), so
+        # mid-round adapter re-selects see a stable fleet on both engines
+        self._apply_due_traffic()
         if self.megastep == "fused":
             from repro.core.megastep import try_megastep
             while try_megastep(self):
@@ -295,6 +311,9 @@ class Scheduler(FLRuntime):
                         or self.loop.now >= self.cfg.max_sim_time):
                     self._done = True
                     return
+                # the fused horizon may have crossed segment boundaries
+                # (it stops short of the next *unapplied* one — _plan)
+                self._apply_due_traffic()
         self._t0 = self.loop.now
         self._invoked_this_round = False
         self._dispatch(RoundStarted(t=self.loop.now, round=self.db.round))

@@ -36,9 +36,9 @@ from repro.core.aggregation import weighted_aggregate, weighted_aggregate_rows
 from repro.core.client import CohortTrainer
 from repro.core.data_plane import DatasetStore, dataset_store, resolve_data_plane
 from repro.core.database import ClientRecord, Database, ResultRecord
-from repro.core.protocol import (ClientJoined, ClientLeft, Event,
-                                 InvocationFailed, InvocationTimedOut,
-                                 ResultLanded)
+from repro.core.protocol import (ClientJoined, ClientLeft, ClientsJoined,
+                                 ClientsLeft, Event, InvocationFailed,
+                                 InvocationTimedOut, ResultLanded)
 from repro.core.scoring import decay_rate
 from repro.core.strategies.base import Strategy, StrategyConfig, build_strategy
 from repro.core.update_store import (UpdateStore, gather_stacked,
@@ -46,6 +46,8 @@ from repro.core.update_store import (UpdateStore, gather_stacked,
 from repro.faas.cost import CostModel
 from repro.faas.events import EventLoop
 from repro.faas.faults import build_fault_model, resolve_fault_profile
+from repro.traffic import (build_traffic_schedule, resolve_traffic_profile,
+                           slo_summary)
 from repro.faas.hardware import HardwareProfile
 from repro.faas.platform import FaaSPlatform, InvocationRecord
 from repro.kernels.ops import RavelSpec
@@ -150,6 +152,13 @@ class FLConfig:
     #                                 "auto" defers to REPRO_FAULTS (default
     #                                 off — no extra RNG draws, every
     #                                 pre-existing trace bit-identical)
+    traffic_profile: str = "auto"  # open-loop traffic (DESIGN.md §13): a
+    #                                 TRAFFIC_PROFILES name ("steady-churn",
+    #                                 "diurnal", "flash-crowd", "trace-demo")
+    #                                 or a raw traffic.parse_traffic spec;
+    #                                 "auto" defers to REPRO_TRAFFIC (default
+    #                                 off — fixed fleet, no extra RNG draws,
+    #                                 every pre-existing trace bit-identical)
     # -- recovery layer (DESIGN.md §12; scheduler engine only) -----------------
     invocation_timeout: float = 0.0  # per-invocation kill timer, sim-seconds
     #                                 (distinct from round_timeout; 0 = off)
@@ -291,6 +300,18 @@ class FLRuntime:
             seed=cfg.seed, failure_rate=cfg.failure_rate,
             faults=build_fault_model(self.fault_profile, cfg.seed))
         self.cost_model = CostModel()
+        # open-loop traffic (repro.traffic, DESIGN.md §13): off by
+        # default. The whole arrival process is compiled once, ahead of
+        # the run, from its own numpy RNG stream — platform/trainer draw
+        # order is untouched either way, and the off path compiles
+        # nothing, so every pre-existing trace is bit-identical
+        self.traffic_profile = resolve_traffic_profile(cfg.traffic_profile)
+        self.traffic = build_traffic_schedule(
+            self.traffic_profile, cfg.n_clients, seed=cfg.seed,
+            horizon_cap=cfg.max_sim_time)
+        self._traffic_pos = 0       # next unapplied schedule segment
+        self.n_traffic_joins = 0
+        self.n_traffic_leaves = 0
         self.strategy: Strategy = (
             strategy if strategy is not None
             else build_strategy(cfg.strategy, strategy_config(cfg)))
@@ -310,11 +331,20 @@ class FLRuntime:
             # the strategy config at each selection
             self.db.fleet.decay = decay_rate(cfg.adjustment_rate)
         if db is None:
-            for cid in range(cfg.n_clients):
-                self.db.register_client(ClientRecord(
-                    client_id=cid, hardware=fleet[cid].name,
-                    data_cardinality=int(data.n[cid]),
-                    batch_size=cfg.batch_size, local_epochs=cfg.local_epochs))
+            if self.traffic is not None:
+                # open-loop: only the schedule's initial membership exists
+                # at t=0; later arrivals land via bulk traffic segments
+                init = self.traffic.initial
+                self.db.register_clients_bulk(
+                    init, data.n[init], cfg.batch_size, cfg.local_epochs,
+                    hardware=[fleet[int(c)].name for c in init])
+            else:
+                for cid in range(cfg.n_clients):
+                    self.db.register_client(ClientRecord(
+                        client_id=cid, hardware=fleet[cid].name,
+                        data_cardinality=int(data.n[cid]),
+                        batch_size=cfg.batch_size,
+                        local_epochs=cfg.local_epochs))
         self.hw = {cid: fleet[cid] for cid in range(len(fleet))}
         # never pruned: cost/metrics must resolve hardware for historical
         # invocations of since-removed clients
@@ -472,6 +502,83 @@ class FLRuntime:
                     if p > pos:
                         self._fleet_pos[c] = p - 1
             self._emit(ClientLeft(t=self.loop.now, client_id=cid))
+
+    # ------------------------------------------------------------- traffic
+    def _traffic_boundary(self) -> Optional[float]:
+        """Start time of the next unapplied traffic segment (None when
+        traffic is off or the schedule is exhausted)."""
+        if (self.traffic is None
+                or self._traffic_pos >= len(self.traffic.segments)):
+            return None
+        return self.traffic.segments[self._traffic_pos].start
+
+    def _apply_due_traffic(self) -> bool:
+        """Apply every compiled traffic segment with start <= now (both
+        engines call this at fresh-round open). Returns True if fleet
+        membership changed."""
+        applied = False
+        while True:
+            nb = self._traffic_boundary()
+            if nb is None or nb > self.loop.now:
+                return applied
+            seg = self.traffic.segments[self._traffic_pos]
+            self._traffic_pos += 1
+            self._apply_traffic_segment(seg)
+            applied = True
+
+    def _apply_traffic_segment(self, seg) -> None:
+        """One bulk membership delta: leaves first (cancelling their
+        in-flight work and reclaiming their platform instances), then
+        joins — one columnar scatter + one append instead of per-event
+        Python. The hardware universe (``fleet``/``hw``/``_fleet_pos``)
+        is untouched: traffic ids live in the fixed [0, n_clients)
+        universe, so a departed id keeps its profile for its eventual
+        re-join (unlike ``remove_clients``, which retires an id for
+        good)."""
+        now = self.loop.now
+        leaves = [int(c) for c in seg.leaves if self.db.has_client(int(c))]
+        if leaves:
+            for cid in leaves:
+                for inv in list(self.inflight.get(cid, ())):
+                    self._cancel_inflight(inv)
+                self.inflight.pop(cid, None)
+            self.db.unregister_clients_bulk(leaves)
+            # departed containers scale to zero: a re-join under the same
+            # id pays a fresh cold start (cold-start-rate SLO accounting)
+            self.platform.scale_down(leaves)
+            if self.c_buf is not None:
+                idx = jnp.asarray([c for c in leaves if c < self._c_cap],
+                                  jnp.int32)
+                if idx.size:
+                    self.c_buf = jax.tree.map(
+                        lambda b: b.at[idx].set(0.0), self.c_buf)
+            self.n_traffic_leaves += len(leaves)
+            self._emit(ClientsLeft(t=now, client_ids=tuple(leaves)))
+        joins = [int(c) for c in seg.joins
+                 if not self.db.has_client(int(c))]
+        if joins:
+            self.db.register_clients_bulk(
+                joins, self.data.n[joins], self.cfg.batch_size,
+                self.cfg.local_epochs,
+                hardware=[self.fleet[c].name for c in joins])
+            if self.c_buf is not None:
+                self._ensure_c_capacity(max(joins) + 1)
+            self.n_traffic_joins += len(joins)
+            self._emit(ClientsJoined(t=now, client_ids=tuple(joins)))
+
+    def _traffic_fast_forward(self) -> bool:
+        """The run is stalled — no pending events and no idle client.
+        Under closed-loop scenarios that ends the run; under open-loop
+        traffic the clock jumps to the next arrival boundary instead and
+        applies it. Returns True when the jump changed membership (so the
+        caller re-opens selection)."""
+        nb = self._traffic_boundary()
+        if nb is None or nb >= self.cfg.max_sim_time:
+            return False
+        if self.loop.peek() is not None:
+            return False
+        self.loop.now = max(self.loop.now, nb)
+        return self._apply_due_traffic()
 
     # -------------------------------------------------- protocol emit hook
     def _emit(self, event: Event) -> None:
@@ -825,6 +932,18 @@ class FLRuntime:
             "n_cancelled": self.n_cancelled,
             # failure / recovery observability (DESIGN.md §12)
             "fault_profile": self.fault_profile,
+            # open-loop traffic + SLO layer (DESIGN.md §13)
+            "traffic_profile": self.traffic_profile,
+            "n_traffic_joins": self.n_traffic_joins,
+            "n_traffic_leaves": self.n_traffic_leaves,
+            "n_traffic_dropped": (self.traffic.n_dropped
+                                  if self.traffic is not None else 0),
+            "traffic_segments_applied": self._traffic_pos,
+            **slo_summary(
+                self.history, self.platform.cold_start_ratio(), cost,
+                time_to_accuracy=(
+                    self.time_to_accuracy(self.cfg.target_accuracy)
+                    if self.cfg.target_accuracy else None)),
             "n_failures": sum(1 for r in inv if r.failed),
             "n_timeouts": self.n_timeouts,
             "n_retries": self.n_retries,

@@ -136,6 +136,15 @@ class FaaSPlatform:
             inst.busy_until = min(inst.busy_until, horizon)
             inst.warm_until = min(inst.warm_until, horizon + self.keep_warm)
 
+    def scale_down(self, client_ids) -> None:
+        """Reclaim the function instances of departed clients. Without
+        this, a client that leaves and later re-joins under the same id
+        would inherit the dead instance's keep-warm horizon and dodge its
+        cold start — undercounting the cold-start-rate SLO (traffic
+        plane, DESIGN.md §13)."""
+        for cid in client_ids:
+            self._instances.pop(int(cid), None)
+
     # -------------------------------------------------------------- metrics
     def cold_start_ratio(self) -> float:
         if not self.invocations:

@@ -35,6 +35,8 @@ class RunSpec:
     #                                      (columnar | object | auto)
     fault_profile: str = "auto"          # fault schedule (repro.faas.faults)
     #                                      (auto = REPRO_FAULTS env, "" off)
+    traffic_profile: str = "auto"        # open-loop traffic (repro.traffic)
+    #                                      (auto = REPRO_TRAFFIC env, "" off)
     overrides: Tuple[Tuple[str, Any], ...] = ()  # extra FLConfig fields
 
     @property
@@ -45,9 +47,12 @@ class RunSpec:
               else f"/ctl={self.control_plane}")
         fp = ("" if self.fault_profile == "auto"
               else f"/faults={self.fault_profile or 'none'}")
+        tp = ("" if self.traffic_profile == "auto"
+              else f"/traffic={self.traffic_profile or 'none'}")
         return (f"{self.dataset}/{self.scenario}/{self.strategy}"
                 f"/cr={self.concurrency_ratio:g}/{self.staleness_fn}"
-                f"/seed={self.seed}" + dp + cp + fp + (f"/{ov}" if ov else ""))
+                f"/seed={self.seed}" + dp + cp + fp + tp
+                + (f"/{ov}" if ov else ""))
 
     @property
     def group(self) -> tuple:
@@ -57,9 +62,11 @@ class RunSpec:
         ratioed against the matching-plane FedAvg, never silently against
         another plane's. Likewise the fault profile: a chaos cell's
         speedup is measured against the FedAvg that suffered the same
-        schedule."""
+        schedule. And the traffic profile: under open-loop load, ratios
+        compare runs that faced the same arrival process."""
         return (self.dataset, self.scenario, self.seed, self.data_plane,
-                self.control_plane, self.fault_profile, self.overrides)
+                self.control_plane, self.fault_profile,
+                self.traffic_profile, self.overrides)
 
 
 @dataclass(frozen=True)
@@ -99,6 +106,7 @@ class SweepSpec:
     data_planes: Sequence[str] = ("auto",)   # device/host transport ablation
     control_planes: Sequence[str] = ("auto",)  # columnar/object fleet state
     fault_profiles: Sequence[str] = ("auto",)  # chaos axis ("" = faults off)
+    traffic_profiles: Sequence[str] = ("auto",)  # open-loop load axis
     scale: SweepScale = field(default=BENCH_SCALE)
     overrides: Tuple[Tuple[str, Any], ...] = ()
 
@@ -107,7 +115,8 @@ class SweepSpec:
         return (len(self.datasets) * len(self.strategies) * len(self.seeds)
                 * len(self.scenarios) * len(self.concurrency_ratios)
                 * len(self.staleness_fns) * len(self.data_planes)
-                * len(self.control_planes) * len(self.fault_profiles))
+                * len(self.control_planes) * len(self.fault_profiles)
+                * len(self.traffic_profiles))
 
 
 def expand_grid(spec: SweepSpec) -> list[RunSpec]:
@@ -115,12 +124,13 @@ def expand_grid(spec: SweepSpec) -> list[RunSpec]:
     runs = [
         RunSpec(dataset=ds, strategy=strat, scenario=sc, seed=seed,
                 concurrency_ratio=cr, staleness_fn=fn, data_plane=dp,
-                control_plane=cp, fault_profile=fp,
+                control_plane=cp, fault_profile=fp, traffic_profile=tp,
                 overrides=tuple(spec.overrides))
-        for ds, sc, seed, cr, fn, dp, cp, fp, strat in product(
+        for ds, sc, seed, cr, fn, dp, cp, fp, tp, strat in product(
             spec.datasets, spec.scenarios, spec.seeds,
             spec.concurrency_ratios, spec.staleness_fns, spec.data_planes,
-            spec.control_planes, spec.fault_profiles, spec.strategies)
+            spec.control_planes, spec.fault_profiles,
+            spec.traffic_profiles, spec.strategies)
     ]
     keys = [r.key for r in runs]
     if len(set(keys)) != len(keys):

@@ -26,6 +26,12 @@ SMOKE_HEDGE_SCALE = SweepScale(n_clients=8, clients_per_round=4, rounds=3,
                                data_scale=0.06, local_epochs=1,
                                sim_budget=1500.0)
 
+# Open-loop load: enough rounds/sim-budget that every canned traffic
+# profile actually bites (the flash-crowd surge lands at t=150, past a
+# 6-round smoke run's end)
+PROD_SCALE = SweepScale(n_clients=8, clients_per_round=4, rounds=12,
+                        data_scale=0.06, local_epochs=1, sim_budget=900.0)
+
 # Fleet-scale selection demo: the widest fleet a bench-scale FL run
 # affords (selection/scoring at M=1e6 is benchmarked without training in
 # benchmarks/bench_round.py --controlplane)
@@ -111,6 +117,19 @@ PRESETS: dict[str, SweepSpec] = {
         scale=SMOKE_SCALE,
         overrides=(("retry_budget", 8), ("invocation_timeout", 300.0),
                    ("quarantine_threshold", 3))),
+    # open-loop production load (DESIGN.md §13): the same three
+    # strategies under a fixed fleet vs each canned traffic profile —
+    # `traffic_profile` is a group axis, so every ratio compares runs
+    # that faced the same seeded arrival process, and the SLO columns
+    # (p50/p99 round latency, cold-start rate, cost-per-round) say which
+    # policy earns its keep under churn, diurnal load, and flash crowds
+    "production_load": SweepSpec(
+        name="production_load", datasets=("mnist",),
+        strategies=("fedavg", "apodotiko", "apodotiko-hedge"),
+        traffic_profiles=("none", "steady-churn", "diurnal", "flash-crowd"),
+        concurrency_ratios=(0.5,),
+        scale=PROD_SCALE,
+        overrides=(("cold_start_s", 60.0), ("keep_warm", 120.0))),
     # CI-sized end-to-end check (two strategies, seconds)
     "smoke": SweepSpec(name="smoke", datasets=("mnist",),
                        strategies=("fedavg", "apodotiko"),

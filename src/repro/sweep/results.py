@@ -27,10 +27,12 @@ from repro.sweep.grid import RunSpec
 
 SCHEMA = (
     "sweep", "dataset", "scenario", "strategy", "seed", "concurrency_ratio",
-    "staleness_fn", "data_plane", "fault_profile", "rounds", "target_acc",
+    "staleness_fn", "data_plane", "fault_profile", "traffic_profile",
+    "rounds", "target_acc",
     "time_to_target_s", "speedup_vs_fedavg", "final_acc", "best_acc",
     "sim_time_s", "cold_starts", "cold_start_ratio",
     "cold_start_reduction_vs_fedavg", "cost_usd", "cost_vs_fedavg",
+    "p50_round_latency_s", "p99_round_latency_s", "cost_per_round_usd",
     "n_invocations", "n_failures", "n_retries", "n_quarantined", "error",
 )
 
@@ -96,7 +98,8 @@ class ResultTable:
                        seed=run.seed, concurrency_ratio=run.concurrency_ratio,
                        staleness_fn=run.staleness_fn,
                        data_plane=run.data_plane,
-                       fault_profile=run.fault_profile)
+                       fault_profile=run.fault_profile,
+                       traffic_profile=run.traffic_profile)
             m = metrics_list[i]
             if m is None or "error" in m:
                 row["error"] = (m or {}).get("error", "missing")
@@ -132,7 +135,17 @@ class ResultTable:
                 n_invocations=n_inv,
                 n_failures=m.get("n_failures"),
                 n_retries=m.get("n_retries"),
-                n_quarantined=m.get("n_quarantined"))
+                n_quarantined=m.get("n_quarantined"),
+                # SLO layer (DESIGN.md §13): tail latency + unit economics
+                p50_round_latency_s=(
+                    None if m.get("p50_round_latency_s") is None
+                    else round(m["p50_round_latency_s"], 1)),
+                p99_round_latency_s=(
+                    None if m.get("p99_round_latency_s") is None
+                    else round(m["p99_round_latency_s"], 1)),
+                cost_per_round_usd=(
+                    None if m.get("cost_per_round_usd") is None
+                    else round(m["cost_per_round_usd"], 5)))
             rows.append(row)
         return cls(rows)
 

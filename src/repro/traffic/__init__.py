@@ -1,0 +1,20 @@
+"""Open-loop traffic plane: arrival processes compiled into vectorized
+availability schedules, plus the SLO metrics layer (DESIGN.md §13).
+
+The fifth plane alongside control/data/update/schedule: fleet membership
+is driven by seeded arrival processes (Poisson, diurnal, flash-crowd,
+trace replay) instead of fixed scenario lists, applied to the
+``FleetStore`` in bulk windowed segments rather than per-event Python.
+``REPRO_TRAFFIC`` / ``FLConfig.traffic_profile`` select a canned profile
+or a raw spec string; off (the default) is bit-identical to every
+pre-existing trace.
+"""
+from repro.traffic.model import (DiurnalTraffic, FlashCrowd,  # noqa: F401
+                                 PoissonTraffic, TraceTraffic,
+                                 TRAFFIC_PROFILES, TrafficSpec,
+                                 parse_traffic, resolve_traffic_profile)
+from repro.traffic.schedule import (TrafficSchedule,  # noqa: F401
+                                    TrafficSegment,
+                                    build_traffic_schedule,
+                                    compile_traffic_schedule)
+from repro.traffic.slo import round_latencies, slo_summary  # noqa: F401

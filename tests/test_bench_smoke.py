@@ -75,6 +75,24 @@ def test_megastep_smoke_gate(bench_round, tmp_path):
     assert "python_overhead_share" in json.loads(path.read_text())
 
 
+def test_traffic_smoke_gate(bench_round, tmp_path):
+    """The --traffic CI gate: schedule compile throughput reported, the
+    bulk availability path stays bit-identical to the per-event oracle,
+    and the SLO table covers three strategies under diurnal load."""
+    path = tmp_path / "traffic.json"
+    out = bench_round.run_traffic(smoke=True, json_path=str(path))
+    assert out["apply"]["bulk_matches_per_event"] is True
+    assert out["apply"]["bulk_speedup"] > 1.0
+    assert out["compile"][0]["events_per_s"] > 0
+    assert [r["strategy"] for r in out["slo"]] == \
+        ["fedavg", "apodotiko", "apodotiko-hedge"]
+    for r in out["slo"]:
+        assert r["p99_round_latency_s"] >= r["p50_round_latency_s"] > 0
+        assert r["cost_per_round_usd"] > 0
+        assert r["n_traffic_joins"] + r["n_traffic_leaves"] > 0
+    assert json.loads(path.read_text())["bench"] == "traffic"
+
+
 def test_controlplane_modes_independently_seeded(bench_round):
     """Two builds of a mode's state are bitwise identical — no mode
     consumes another's RNG stream or mutated fleet state."""

@@ -70,6 +70,32 @@ def test_add_batch_matches_sequential_adds():
         fs1.add_batch([3], [1], 1, 1)        # ids must be fresh
 
 
+def test_remove_batch_matches_sequential_removes():
+    """Bulk removal must be indistinguishable from sequential ``remove``
+    calls: same free-list order (so later adds recycle the same slots),
+    same columns, same survivors."""
+    def _build():
+        fs = FleetStore()
+        fs.add_batch(np.arange(10), np.arange(10) + 100, 10, 5)
+        return fs
+    bulk, seq = _build(), _build()
+    victims = [7, 2, 5, 2, 99]               # dupes + unknown ids skipped
+    assert bulk.remove_batch(victims) == [7, 2, 5]
+    for cid in victims:
+        seq.remove(cid)
+    assert bulk._slot == seq._slot
+    assert bulk._free == seq._free
+    assert np.array_equal(bulk.active, seq.active)
+    assert np.array_equal(bulk.ids, seq.ids)
+    assert bulk.client_ids() == seq.client_ids()
+    # freed slots are recycled in the same LIFO order on both stores
+    bulk.add_batch([20, 21], [1, 2], 1, 1)
+    for cid in (20, 21):
+        seq.add(cid, cid - 19, 1, 1)
+    assert bulk._slot == seq._slot and bulk._free == seq._free
+    assert bulk.remove_batch([]) == []       # empty batch is a no-op
+
+
 # ---------------------------------------------------------- duration window
 def test_duration_window_newest_first_and_truncated():
     fs = _store(2)
@@ -211,6 +237,48 @@ def test_churn_storm_10k_consistency():
     seqs = fs.seq[np.array(slots)]
     assert (np.diff(fs.seq[fs.ordered_slots()]) > 0).all()
     assert len(seqs) == len(slots)
+
+
+def test_churn_storm_bulk_path_matches_per_event():
+    """The same storm driven through remove_batch/add_batch (the traffic
+    plane's flash-crowd path) ends bit-identical to per-event churn and
+    keeps every membership invariant."""
+    M = 10_000
+    rng_a, rng_b = (np.random.default_rng(1) for _ in range(2))
+    # same starting capacity: growth schedules (bulk _ensure vs per-add
+    # doubling) would otherwise legitimately differ
+    bulk, ev = FleetStore(capacity=M), FleetStore(capacity=M)
+    cards = np.random.default_rng(9).integers(10, 500, M * 3)
+    bulk.add_batch(np.arange(M), cards[:M], 10, 5)
+    for cid in range(M):
+        ev.add(cid, int(cards[cid]), 10, 5)
+    live = list(range(M))
+    next_id = M
+    for wave in range(4):
+        leave = rng_a.choice(live, size=3000, replace=False)
+        assert rng_b.choice(live, size=3000, replace=False).tolist() == \
+            leave.tolist()
+        assert bulk.remove_batch(leave) == leave.tolist()
+        for cid in leave:
+            assert ev.remove(int(cid))
+        gone = set(leave.tolist())
+        live = [c for c in live if c not in gone]
+        joins = np.arange(next_id, next_id + 2500)
+        bulk.add_batch(joins, cards[joins], 10, 5)
+        for cid in joins:
+            ev.add(int(cid), int(cards[cid]), 10, 5)
+        live.extend(joins.tolist())
+        next_id += 2500
+    assert bulk._slot == ev._slot
+    assert bulk._free == ev._free
+    for col in ("active", "ids", "seq", "cardinality", "status"):
+        assert np.array_equal(getattr(bulk, col), getattr(ev, col)), col
+    # invariants survive the bulk storm
+    slots = [bulk.slot_of(c) for c in bulk.client_ids()]
+    assert len(set(slots)) == len(slots) == len(live)
+    assert bulk.active[slots].all()
+    assert not set(slots) & set(bulk._free)
+    assert (np.diff(bulk.seq[bulk.ordered_slots()]) > 0).all()
 
 
 def test_churn_matches_object_plane_ordering():

@@ -1,0 +1,392 @@
+"""Open-loop traffic plane tests (DESIGN.md §13).
+
+Covers the full subsystem contract: spec grammar + env resolution,
+seeded schedule compilation (bit-identical replay, event-by-event
+presence oracle, capacity overflow accounting), bulk vs per-event
+FleetStore application, cold starts on rejoin (``scale_down``),
+cross-engine golden traces per profile, the megastep boundary
+interaction, and the SLO metrics layer.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import FLConfig
+from repro.core.database import ClientRecord, Database
+from repro.core.fleet_store import FleetStore
+from repro.core.scheduler import Scheduler
+from repro.faas.hardware import HARDWARE_PROFILES
+from repro.faas.platform import FaaSPlatform
+from repro.traffic import (TRAFFIC_PROFILES, DiurnalTraffic, FlashCrowd,
+                           PoissonTraffic, TraceTraffic,
+                           build_traffic_schedule, compile_traffic_schedule,
+                           parse_traffic, resolve_traffic_profile,
+                           round_latencies, slo_summary)
+
+from trace_harness import (assert_engines_equivalent,  # noqa: F401
+                           assert_fused_matches_stepwise, base_cfg_kw, data,
+                           det_fleet, megastep_cfg, model, run_flag_pair)
+
+try:  # property tests widen coverage when the dev-only dep is present
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------ spec grammar
+def test_parse_full_grammar():
+    spec = parse_traffic("init:0.25,window:10,horizon:500,"
+                         "poisson:0.5:60,diurnal:1:0.5:600:30,"
+                         "flash:100:50,trace:90=+2;210=-2")
+    assert spec.init_frac == 0.25
+    assert spec.window == 10.0 and spec.horizon == 500.0
+    assert spec.sources == (PoissonTraffic(rate=0.5, dwell=60.0),
+                            DiurnalTraffic(rate=1.0, depth=0.5,
+                                           period=600.0, dwell=30.0),
+                            FlashCrowd(t=100.0, n=50, dwell=0.0),
+                            TraceTraffic(events=((90.0, 2), (210.0, -2))))
+    assert spec.active and spec.stochastic
+
+
+def test_parse_off_and_inactive():
+    for s in ("", "none", "off", "  "):
+        spec = parse_traffic(s)
+        assert not spec.active and not spec.stochastic
+    # init:1.0 alone is the closed-loop default, not traffic
+    assert not parse_traffic("init:1.0").active
+    assert parse_traffic("init:0.5").active
+    assert not parse_traffic("trace:10=+1").stochastic
+
+
+@pytest.mark.parametrize("bad", [
+    "bogus:1", "init:1.5", "init:-0.1", "window:0", "horizon:-5",
+    "poisson", "poisson:abc", "poisson:-1", "diurnal:1:2:600",
+    "diurnal:1:0.5:0", "flash:10", "flash:-1:5", "trace:",
+    "trace:10", "trace:x=+1", "trace:-5=+1",
+])
+def test_parse_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        parse_traffic(bad)
+
+
+def test_resolve_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_TRAFFIC", raising=False)
+    assert resolve_traffic_profile("auto") == ""
+    assert resolve_traffic_profile(None) == ""
+    monkeypatch.setenv("REPRO_TRAFFIC", "diurnal")
+    assert resolve_traffic_profile("auto") == "diurnal"
+    assert resolve_traffic_profile("") == "diurnal"
+    # explicit config beats env; none/off disable
+    assert resolve_traffic_profile("steady-churn") == "steady-churn"
+    assert resolve_traffic_profile("none") == ""
+    assert resolve_traffic_profile("off") == ""
+    # raw spec strings resolve too, but invalid ones fail fast
+    assert resolve_traffic_profile("init:0.5") == "init:0.5"
+    with pytest.raises(ValueError):
+        resolve_traffic_profile("bogus:1")
+    with pytest.raises(ValueError):
+        resolve_traffic_profile(7)
+
+
+def test_canned_profiles_all_parse_and_compile():
+    for name, raw in TRAFFIC_PROFILES.items():
+        spec = parse_traffic(raw)
+        assert spec.active, name
+        sched = build_traffic_schedule(name, 64, seed=0)
+        assert sched is not None and sched.capacity == 64
+
+
+def test_build_returns_none_when_off():
+    assert build_traffic_schedule("", 100, seed=0) is None
+    assert build_traffic_schedule("init:1.0", 100, seed=0) is None
+
+
+# ------------------------------------------------- schedule compilation
+def _assert_schedules_identical(a, b):
+    assert np.array_equal(a.initial, b.initial)
+    assert a.n_dropped == b.n_dropped
+    assert len(a.segments) == len(b.segments)
+    for sa, sb in zip(a.segments, b.segments):
+        assert sa.start == sb.start and sa.end == sb.end
+        assert np.array_equal(sa.joins, sb.joins)
+        assert np.array_equal(sa.leaves, sb.leaves)
+
+
+PROPERTY_SPECS = [
+    "init:0.5,window:10,horizon:400,poisson:0.2:60",
+    "init:0.25,window:15,horizon:600,diurnal:0.3:0.9:200:50",
+    "init:0.5,window:10,horizon:300,flash:45:30:80,poisson:0.1",
+    "init:0.0,window:5,horizon:200,poisson:0.5:40",
+    "init:0.75,window:10,horizon:300,trace:20=+5;60=-3;90=+2",
+    "init:0.5,window:10,horizon:300,flash:50:200:60",   # overflows M=64
+]
+
+
+def _check_replay(spec, seed, capacity):
+    """Same (spec, seed, capacity) -> the same schedule, forever."""
+    a = build_traffic_schedule(spec, capacity, seed=seed)
+    b = build_traffic_schedule(spec, capacity, seed=seed)
+    _assert_schedules_identical(a, b)
+
+
+def _check_presence_oracle(spec, seed, M=64):
+    """The vectorized presence mask equals a per-event replay, and the
+    segment stream respects the membership invariants."""
+    sched = build_traffic_schedule(spec, M, seed=seed)
+    present = set(sched.initial.tolist())
+    assert all(0 <= c < M for c in present)
+    last_start = 0.0
+    window = sched.spec.window
+    for seg in sched.segments:
+        assert seg.start > last_start          # strictly increasing
+        assert seg.start == pytest.approx(
+            window * round(seg.start / window))  # window-aligned
+        last_start = seg.start
+        for t, kind, cid in ((seg.start, "leave", int(c))
+                             for c in seg.leaves):
+            assert cid in present, "leave of absent id"
+            present.discard(cid)
+        for cid in seg.joins.tolist():
+            assert cid not in present, "join of present id"
+            assert 0 <= cid < M
+            present.add(cid)
+        mask = sched.presence_at(seg.start)
+        assert set(np.flatnonzero(mask).tolist()) == present
+    # the events() oracle visits exactly the segment deltas, in order
+    ev = list(sched.events())
+    n_ev = sum(len(s.joins) + len(s.leaves) for s in sched.segments)
+    assert len(ev) == n_ev
+
+
+@pytest.mark.parametrize("seed", [0, 7, 123])
+@pytest.mark.parametrize("spec", PROPERTY_SPECS)
+def test_schedule_replays_bit_identically(spec, seed):
+    for capacity in (16, 64, 257):
+        _check_replay(spec, seed, capacity)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 123])
+@pytest.mark.parametrize("spec", PROPERTY_SPECS)
+def test_presence_matches_event_oracle(spec, seed):
+    _check_presence_oracle(spec, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(spec=st.sampled_from(PROPERTY_SPECS),
+           seed=st.integers(0, 2**31 - 1),
+           capacity=st.sampled_from([16, 64, 257]))
+    @settings(max_examples=30, deadline=None)
+    def test_schedule_replay_property(spec, seed, capacity):
+        _check_replay(spec, seed, capacity)
+
+    @given(spec=st.sampled_from(PROPERTY_SPECS), seed=st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_presence_oracle_property(spec, seed):
+        _check_presence_oracle(spec, seed)
+
+
+def test_flash_overflow_drops_and_counts():
+    sched = build_traffic_schedule(
+        "init:0.5,window:10,horizon:100,flash:20:100:0", 64, seed=0)
+    # 32 present, 32 free: a 100-client flash drops 68
+    assert sched.n_dropped == 68
+    assert len(sched.initial) == 32
+    mask = sched.presence_at(100.0)
+    assert mask.all()                           # fleet saturated
+
+
+def test_trace_removes_earliest_joined():
+    sched = build_traffic_schedule(
+        "init:0.5,window:10,horizon:100,trace:20=-2", 8, seed=0)
+    (seg,) = sched.segments
+    # initial ids 0..3 joined earliest, in id order
+    assert seg.leaves.tolist() == [0, 1]
+    assert len(seg.joins) == 0
+
+
+def test_horizon_cap_truncates():
+    full = build_traffic_schedule("init:0.5,window:10,poisson:0.2:60",
+                                  64, seed=3)
+    capped = build_traffic_schedule("init:0.5,window:10,poisson:0.2:60",
+                                    64, seed=3, horizon_cap=100.0)
+    assert capped.horizon == 100.0
+    assert all(s.start <= 100.0 for s in capped.segments)
+    assert len(capped.segments) < len(full.segments)
+
+
+# ------------------------------------------- bulk vs per-event application
+def _check_bulk_matches_per_event(spec, seed, M=64):
+    """Segment-bulk application through the Database API leaves the
+    FleetStore bit-identical to the per-event ClientRecord path."""
+    sched = build_traffic_schedule(spec, M, seed=seed)
+    cards = np.random.default_rng(0).integers(10, 100, M)
+
+    def seeded():
+        db = Database(control_plane="columnar")
+        db.fleet = FleetStore(capacity=M)
+        if len(sched.initial):
+            db.register_clients_bulk(sched.initial, cards[sched.initial],
+                                     5, 1)
+        return db
+
+    bulk, ev = seeded(), seeded()
+    for seg in sched.segments:
+        if len(seg.leaves):
+            bulk.unregister_clients_bulk(seg.leaves)
+        if len(seg.joins):
+            bulk.register_clients_bulk(seg.joins, cards[seg.joins], 5, 1)
+    for t, kind, cid in sched.events():
+        if kind == "leave":
+            ev.unregister_client(cid)
+        else:
+            ev.register_client(ClientRecord(
+                client_id=cid, hardware="",
+                data_cardinality=int(cards[cid]), batch_size=5,
+                local_epochs=1))
+    fa, fb = bulk.fleet, ev.fleet
+    assert fa._slot == fb._slot
+    assert fa._free == fb._free
+    for col in ("active", "ids", "seq", "cardinality", "status"):
+        assert np.array_equal(getattr(fa, col), getattr(fb, col)), col
+    assert bulk.client_ids() == ev.client_ids()
+
+
+@pytest.mark.parametrize("seed", [0, 42])
+@pytest.mark.parametrize("spec", PROPERTY_SPECS)
+def test_bulk_apply_matches_per_event_oracle(spec, seed):
+    _check_bulk_matches_per_event(spec, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(spec=st.sampled_from(PROPERTY_SPECS), seed=st.integers(0, 200))
+    @settings(max_examples=15, deadline=None)
+    def test_bulk_apply_property(spec, seed):
+        _check_bulk_matches_per_event(spec, seed)
+
+
+# -------------------------------------------------- cold starts on rejoin
+def test_scale_down_forces_cold_start_on_rejoin():
+    """A traffic leave tears down the client's warm container: the same
+    id rejoining must pay a fresh cold start, not inherit the horizon."""
+    hw = HARDWARE_PROFILES["cpu2"]
+    pf = FaaSPlatform(keep_warm=600.0, cold_start_s=8.0)
+    r1 = pf.invoke(7, 0, now=0.0, train_steps=10, hw=hw, base_step_time=0.1)
+    assert r1.cold
+    r2 = pf.invoke(7, 1, now=r1.duration + 1.0, train_steps=10, hw=hw,
+                   base_step_time=0.1)
+    assert not r2.cold                          # still inside keep-warm
+    pf.scale_down([7])
+    r3 = pf.invoke(7, 2, now=r2.t_invoked + r2.duration + 1.0,
+                   train_steps=10, hw=hw, base_step_time=0.1)
+    assert r3.cold                              # horizon was torn down
+    # unknown ids are a no-op
+    pf.scale_down([99, 123])
+
+
+# --------------------------------------------- cross-engine golden traces
+# early-boundary variants of the canned profiles, sized so joins/leaves
+# actually fire inside a 3-round smoke run
+ENGINE_SPECS = [
+    "init:0.5,window:10,poisson:0.15:80",                 # steady-churn
+    "init:0.5,window:10,diurnal:0.2:0.9:120:60",          # diurnal
+    "init:0.25,window:10,flash:20:4:40",                  # flash-crowd
+    "init:0.5,window:5,trace:8=+2;25=-1;40=+1",           # trace replay
+    "init:0.0,window:10,poisson:0.2:80",                  # empty-fleet start
+]
+
+
+@pytest.mark.parametrize("spec", ENGINE_SPECS)
+def test_cross_engine_trace_identical_per_profile(spec, model, data):
+    """Controller (legacy poll loop) and Scheduler produce bit-identical
+    traces under every traffic profile shape."""
+    cfg = FLConfig(**base_cfg_kw(rounds=3, strategy="apodotiko",
+                                 traffic_profile=spec))
+    assert_engines_equivalent(cfg, model, data, det_fleet(10))
+
+
+def test_cross_control_plane_trace_identical(model, data):
+    runs = run_flag_pair(
+        base_cfg_kw(rounds=3, strategy="apodotiko",
+                    traffic_profile=ENGINE_SPECS[0]),
+        "control_plane", ("columnar", "object"), model, data,
+        fleet=det_fleet(10))
+    for eng, m in runs.values():
+        assert m["n_traffic_joins"] + m["n_traffic_leaves"] > 0
+
+
+def test_traffic_off_is_bit_identical_to_default(model, data, monkeypatch):
+    """"", "off", and auto-with-no-env all draw nothing and match."""
+    monkeypatch.delenv("REPRO_TRAFFIC", raising=False)
+    runs = run_flag_pair(base_cfg_kw(strategy="apodotiko"),
+                         "traffic_profile", ("auto", "", "off"),
+                         model, data)
+    for eng, m in runs.values():
+        assert m["traffic_profile"] == ""
+        assert m["n_traffic_joins"] == 0 and m["n_traffic_leaves"] == 0
+        assert eng.traffic is None
+
+
+def test_traffic_env_flag_applies(model, data, monkeypatch):
+    monkeypatch.setenv("REPRO_TRAFFIC", ENGINE_SPECS[3])
+    eng = Scheduler(FLConfig(**base_cfg_kw(rounds=3)), model, data,
+                    det_fleet(10))
+    m = eng.run()
+    assert m["traffic_profile"] == ENGINE_SPECS[3]
+    assert m["n_traffic_joins"] > 0
+
+
+# --------------------------------------------------- megastep interaction
+def test_megastep_refuses_stochastic_traffic(model, data):
+    eng = Scheduler(FLConfig(**megastep_cfg(
+        rounds=8, megastep="fused",
+        traffic_profile="init:1,window:30,poisson:0:600")),
+        model, data, det_fleet(10))
+    m = eng.run()
+    assert m["megastep_rounds"] == 0
+    assert m["megastep_fallback_reason"] == "stochastic traffic profile active"
+
+
+def test_megastep_fuses_to_traffic_boundary(model, data):
+    """Deterministic trace traffic: the fused path engages, shrinks its
+    horizon to each boundary, and stays bit-identical to stepwise."""
+    m_step, m_fused = assert_fused_matches_stepwise(
+        megastep_cfg(rounds=10,
+                     traffic_profile="init:1,window:5,trace:40=-2"),
+        model, data, min_fused_rounds=1)
+    assert m_fused["n_traffic_leaves"] == 2
+
+
+# ---------------------------------------------------------- SLO metrics
+def test_slo_summary_pure_function():
+    class Log:
+        def __init__(self, s, e):
+            self.t_start, self.t_end = s, e
+    hist = [Log(0, 10), Log(10, 14), Log(14, 30)]
+    assert round_latencies(hist).tolist() == [10.0, 4.0, 16.0]
+    out = slo_summary(hist, cold_start_ratio=0.25, total_cost_usd=0.3,
+                      time_to_accuracy=12.5)
+    assert out["p50_round_latency_s"] == 10.0
+    assert out["p99_round_latency_s"] == pytest.approx(
+        np.percentile([10.0, 4.0, 16.0], 99))
+    assert out["cold_start_rate"] == 0.25
+    assert out["cost_per_round_usd"] == pytest.approx(0.1)
+    assert out["time_to_accuracy_s"] == 12.5
+    empty = slo_summary([], 0.0, 0.0)
+    assert empty["p50_round_latency_s"] == 0.0
+    assert empty["cost_per_round_usd"] == 0.0
+
+
+def test_metrics_report_slo_and_traffic_counters(model, data):
+    eng = Scheduler(FLConfig(**base_cfg_kw(
+        rounds=3, strategy="apodotiko",
+        traffic_profile=ENGINE_SPECS[0])), model, data, det_fleet(10))
+    m = eng.run()
+    for key in ("p50_round_latency_s", "p99_round_latency_s",
+                "cold_start_rate", "cost_per_round_usd",
+                "n_traffic_dropped", "traffic_segments_applied"):
+        assert key in m, key
+    assert m["p99_round_latency_s"] >= m["p50_round_latency_s"] > 0
+    assert m["cost_per_round_usd"] > 0
+    lat = round_latencies(eng.history)
+    assert m["p50_round_latency_s"] == pytest.approx(
+        np.percentile(lat, 50))
