@@ -43,6 +43,15 @@ failure/retry counts, simulated-time impact, recovery wall overhead.
 Lands in ``BENCH_faults.json``; exits nonzero if a seeded fault schedule
 replays differently on the two engines (the cross-engine chaos gate).
 
+``--durability`` measures the durability subsystem (DESIGN.md §14):
+journal overhead per round at each sync policy (off / round / event
+fsync), coordinated-snapshot write and resume latency as the fleet
+grows, and the resume-identity gate — a run crashed mid-journal must
+resume bit-identically (history, simulated clock, journal bytes).
+Lands in ``BENCH_durability.json``; exits nonzero if round-sync
+journaling costs more than 5% wall overhead or the resumed trace
+diverges.
+
 ``--traffic`` measures the open-loop traffic plane (DESIGN.md §13):
 arrival-schedule compile throughput at M ∈ {1e5, 1e6}, bulk (windowed
 ``add_batch``/``remove_batch`` segments) vs per-event Python application
@@ -1031,6 +1040,162 @@ def run_traffic(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# ------------------------------------------------------------- durability
+
+
+def _durable_run(model, data, rounds: int, root: str = "", **overrides):
+    """One seeded scheduler run, optionally journal-armed at ``root``."""
+    from repro.core.scheduler import Scheduler
+    if root:
+        overrides = dict(overrides, durability="journal",
+                         checkpoint_dir=root)
+    return _fault_engine(Scheduler, model, data, rounds, **overrides)
+
+
+def run_durability(smoke: bool = False, json_path: str = "") -> dict:
+    """Durability bench (DESIGN.md §14): journal overhead per round at
+    each sync policy, snapshot/resume latency vs fleet size, and the
+    resume-identity CI gate. Exits nonzero if round-sync journaling
+    exceeds 5% wall overhead or a crashed-and-resumed run diverges."""
+    import shutil
+    import tempfile
+
+    from repro.core.journal import Journal
+    from repro.core.scheduler import Scheduler
+    from repro.data.synthetic import make_federated_dataset
+    from repro.durability import SimulatedCrash, resume_durable
+    from repro.durability.snapshot import write_snapshot
+    from repro.faas.hardware import paper_fleet
+    from repro.models.proxy_models import build_bench_model
+
+    rounds = 3 if smoke else 8
+    iters = 2 if smoke else 4
+    data = make_federated_dataset("mnist", n_clients=8, scale=0.06, seed=0)
+    model = build_bench_model("mnist")
+    _durable_run(model, data, 1)               # compile warmup, discarded
+    work = tempfile.mkdtemp(prefix="bench_durability_")
+
+    # 1) journal overhead per round: off vs round-fsync vs event-fsync.
+    # Snapshot cadence is pushed past the horizon so the cells isolate
+    # the *journal* cost (snapshot write cost is measured in part 2).
+    # best-of-N wall clock per mode; identical seeded schedule throughout
+    sync_runs = []
+    for label, sync in (("off", ""), ("journal+round", "round"),
+                        ("journal+event", "event")):
+        best, metrics = float("inf"), None
+        for i in range(iters):
+            d = os.path.join(work, f"{label}_{i}")
+            os.makedirs(d, exist_ok=True)
+            root = d if sync else ""
+            kw = ({"durability_sync": sync,
+                   "durability_snap_every": 10 ** 9} if sync else {})
+            _, m, wall = _durable_run(model, data, rounds, root=root, **kw)
+            if wall < best:
+                best, metrics = wall, m
+        sync_runs.append({
+            "label": label, "wall_s": round(best, 3),
+            "wall_per_round_ms": round(best / rounds * 1e3, 2),
+            "journal_records": metrics.get("journal_records", 0),
+            "journal_bytes": metrics.get("journal_bytes", 0),
+            "journal_fsyncs": metrics.get("journal_fsyncs", 0),
+            "n_snapshots": metrics.get("n_snapshots", 0)})
+    off_wall = sync_runs[0]["wall_s"]
+    for r in sync_runs[1:]:
+        r["overhead_pct"] = (round((r["wall_s"] - off_wall)
+                                   / off_wall * 100, 2)
+                             if off_wall else None)
+        print(f"durability/sync/{r['label']},{r['wall_s'] * 1e6:.0f},"
+              f"overhead={r['overhead_pct']}% "
+              f"fsyncs={r['journal_fsyncs']} bytes={r['journal_bytes']}")
+    round_sync = sync_runs[1]
+    # <5% per-round gate, with a small absolute floor so sub-second runs
+    # aren't failed by scheduler jitter
+    overhead_ok = (round_sync["wall_s"] - off_wall
+                   < max(0.05 * off_wall, 0.05))
+
+    # 2) snapshot write + resume latency as the fleet grows
+    fleet_cells = []
+    for n in ((8,) if smoke else (8, 32, 96)):
+        d = os.path.join(work, f"fleet_{n}")
+        os.makedirs(d, exist_ok=True)
+        dd = make_federated_dataset("mnist", n_clients=n, scale=0.02, seed=0)
+        eng, m, _ = _durable_run(model, dd, rounds=2, root=d)
+        t0 = time.perf_counter()
+        write_snapshot(eng, d, seq=10_000)     # past every journaled seq
+        snap_s = time.perf_counter() - t0
+        records, _ = Journal.read(os.path.join(d, "journal.wal"))
+        t0 = time.perf_counter()
+        resume_durable(eng.cfg, model, dd,
+                       list(paper_fleet(n)))   # load + install, no run
+        resume_s = time.perf_counter() - t0
+        snap_bytes = sum(
+            os.path.getsize(os.path.join(r, f))
+            for r, _, fs in os.walk(os.path.join(d, "snap_0000010000"))
+            for f in fs)
+        fleet_cells.append({
+            "n_clients": n, "journal_records": len(records),
+            "snapshot_ms": round(snap_s * 1e3, 2),
+            "snapshot_bytes": snap_bytes,
+            "resume_ms": round(resume_s * 1e3, 2)})
+        print(f"durability/fleet/M={n},{snap_s * 1e6:.0f},"
+              f"resume_ms={fleet_cells[-1]['resume_ms']} "
+              f"snap_bytes={snap_bytes}")
+
+    # 3) resume-identity gate: crash mid-journal, resume, compare
+    gold_d = os.path.join(work, "gate_gold")
+    os.makedirs(gold_d, exist_ok=True)
+    gold_eng, gold_m, _ = _durable_run(model, data, rounds, root=gold_d)
+    with open(os.path.join(gold_d, "journal.wal"), "rb") as f:
+        gold_bytes = f.read()
+    crash_d = os.path.join(work, "gate_crash")
+    os.makedirs(crash_d, exist_ok=True)
+    k = gold_m["journal_records"] // 2
+    from repro.core.services import FLConfig
+    cfg = FLConfig(n_clients=8, clients_per_round=4, rounds=rounds,
+                   local_epochs=1, batch_size=5, base_step_time=0.8,
+                   concurrency_ratio=0.5, seed=0,
+                   durability="journal", checkpoint_dir=crash_d)
+    eng2 = Scheduler(cfg, model, data, list(paper_fleet(8)))
+    eng2.durability.crash_after = k
+    try:
+        eng2.run()
+        raise RuntimeError("crash injector never fired")
+    except SimulatedCrash:
+        pass
+    t0 = time.perf_counter()
+    resumed = resume_durable(cfg, model, data, list(paper_fleet(8)))
+    m2 = resumed.run()
+    gate_wall = time.perf_counter() - t0
+    with open(os.path.join(crash_d, "journal.wal"), "rb") as f:
+        crash_bytes = f.read()
+    identical = (m2["history"] == gold_m["history"]
+                 and m2["total_time"] == gold_m["total_time"]
+                 and crash_bytes == gold_bytes)
+    print(f"durability/gate/resume_identity,{gate_wall * 1e6:.0f},"
+          f"crash_at={k} replayed={m2['journal_replayed']} "
+          f"identical={identical}")
+
+    out = {"bench": "durability", "smoke": smoke,
+           "backend": jax.default_backend(), "rounds": rounds,
+           "sync": sync_runs, "fleet": fleet_cells,
+           "gate": {"crash_at": k, "replayed": m2["journal_replayed"],
+                    "resume_identical": identical,
+                    "round_sync_overhead_ok": overhead_ok}}
+    path = json_path or os.path.join(_ROOT, "BENCH_durability.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    shutil.rmtree(work, ignore_errors=True)
+    if not identical:
+        print("FAIL: crashed-and-resumed run diverged from the golden run")
+        sys.exit(1)
+    if not overhead_ok:
+        print(f"FAIL: round-sync journaling overhead "
+              f"{round_sync['overhead_pct']}% exceeds the 5% gate")
+        sys.exit(1)
+    return out
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     jp = ""
@@ -1048,5 +1213,7 @@ if __name__ == "__main__":
         run_faults(smoke=smoke, json_path=jp)
     elif "--traffic" in sys.argv:
         run_traffic(smoke=smoke, json_path=jp)
+    elif "--durability" in sys.argv:
+        run_durability(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

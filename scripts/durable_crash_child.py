@@ -1,0 +1,48 @@
+"""Subprocess body for SIGKILL crash fuzzing (tests/test_durability.py).
+
+Builds the standard trace-harness fixture (same dataset/model/fleet the
+in-process tests use), arms the durability layer's crash injector via
+``REPRO_CRASH_AFTER_EVENTS`` / ``REPRO_CRASH_MODE=sigkill``, and runs —
+the process dies with a real SIGKILL at the armed journal boundary. The
+parent then resumes in-process and asserts bit-identity against an
+uncrashed golden run.
+
+Usage: python scripts/durable_crash_child.py <checkpoint_dir>
+       (run with the env knobs above; unarmed it runs to completion and
+       prints the final journal record count)
+"""
+import os
+import sys
+
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.scheduler import build_engine          # noqa: E402
+from repro.core.services import FLConfig               # noqa: E402
+from repro.data.synthetic import make_federated_dataset  # noqa: E402
+from repro.faas.hardware import paper_fleet            # noqa: E402
+from repro.models.proxy_models import build_bench_model  # noqa: E402
+
+
+def child_config(checkpoint_dir: str) -> FLConfig:
+    """Must match tests/test_durability.py::_sigkill_cfg_kw exactly —
+    the resume validates the child's journal against this config."""
+    return FLConfig(
+        n_clients=10, clients_per_round=4, rounds=2, local_epochs=1,
+        batch_size=5, base_step_time=0.5, round_timeout=200.0, seed=0,
+        strategy="apodotiko", durability="journal",
+        checkpoint_dir=checkpoint_dir)
+
+
+def main() -> int:
+    root = sys.argv[1]
+    data = make_federated_dataset("mnist", n_clients=10, scale=0.05, seed=0)
+    model = build_bench_model("mnist")
+    eng = build_engine(child_config(root), model, data, list(paper_fleet(10)))
+    m = eng.run()
+    print(m["journal_records"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,7 @@ import json
 import os
 import re
 import shutil
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -89,12 +90,26 @@ def save_pytree(tree: Pytree, directory: str) -> None:
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    # rename-aside swap: the old checkpoint moves aside *before* the new
+    # one replaces it, so one valid checkpoint exists at every instant —
+    # a kill between rmtree and replace can no longer lose both
+    old = directory + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
     if os.path.exists(directory):
-        shutil.rmtree(directory)
+        os.replace(directory, old)
     os.replace(tmp, directory)
+    if os.path.exists(old):
+        shutil.rmtree(old)
 
 
 def restore_pytree(directory: str) -> Pytree:
+    if not os.path.exists(os.path.join(directory, "meta.json")):
+        # a crash between the two renames above leaves only the aside
+        # copy; fall back to it rather than failing the restore
+        old = directory + ".old"
+        if os.path.exists(os.path.join(old, "meta.json")):
+            directory = old
     with open(os.path.join(directory, "meta.json")) as f:
         meta = json.load(f)
     data = np.load(os.path.join(directory, "leaves.npz"))
@@ -165,9 +180,27 @@ class CheckpointManager:
         return s[-1] if s else None
 
     def restore(self, step: Optional[int] = None) -> tuple[Pytree, dict, int]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        """Restore ``step`` (explicit steps still raise on corruption) or,
+        with ``step=None``, the newest *loadable* retained step: corrupt
+        or partial checkpoints — missing meta.json, truncated leaves.npz —
+        are skipped in favor of the next older one."""
+        if step is not None:
+            return self._restore_step(step)
+        candidates = self.steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return self._restore_step(s)
+            except (OSError, ValueError, KeyError, json.JSONDecodeError,
+                    zipfile.BadZipFile) as e:
+                last_err = e
+        raise FileNotFoundError(
+            f"no loadable checkpoint under {self.root} "
+            f"({len(candidates)} corrupt): {last_err}")
+
+    def _restore_step(self, step: int) -> tuple[Pytree, dict, int]:
         d = self._step_dir(step)
         tree = restore_pytree(d)
         extra = {}

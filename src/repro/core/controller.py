@@ -54,7 +54,6 @@ class Controller(FLRuntime):
     def run(self, progress: Optional[Callable[[RoundLog], None]] = None):
         cfg, strat = self.cfg, self.strategy
         round_ = self.db.round
-        acc = 0.0
         traffic_round = -1
         while round_ < cfg.rounds and self.loop.now < cfg.max_sim_time:
             t0 = self.loop.now
@@ -65,6 +64,10 @@ class Controller(FLRuntime):
                 # traffic in _open_round, never on adapter re-selects)
                 self._apply_due_traffic()
                 traffic_round = round_
+                if self.durability is not None:
+                    # the poll loop has no RoundStarted event; the marker
+                    # gives its journal the same open boundary
+                    self.durability.record_marker("round_open", round_)
             selection = strat.select(self.db, round_)
             if not selection:
                 # every client busy: advance until something completes —
@@ -98,19 +101,23 @@ class Controller(FLRuntime):
             if n_agg == 0:
                 round_ += 1
                 self.db.round = round_
+                self._durability_round_closed()
                 continue
             if cfg.eval_every and round_ % cfg.eval_every == 0:
-                acc = self.evaluate()
+                self._acc = self.evaluate()
             log = RoundLog(round=round_, t_start=t0, t_end=self.loop.now,
-                           accuracy=acc, n_aggregated=n_agg, n_stale=n_stale,
-                           mean_loss=0.0)
+                           accuracy=self._acc, n_aggregated=n_agg,
+                           n_stale=n_stale, mean_loss=0.0)
             self.history.append(log)
             if progress:
                 progress(log)
             round_ += 1
             self.db.round = round_
+            self._durability_round_closed()
             if cfg.checkpoint_every and round_ % cfg.checkpoint_every == 0:
                 self.checkpoint()
-            if cfg.target_accuracy and acc >= cfg.target_accuracy:
+            if cfg.target_accuracy and self._acc >= cfg.target_accuracy:
                 break
+        if self.durability is not None:
+            self.durability.finish()
         return self.metrics()

@@ -362,7 +362,12 @@ class Database:
             for i, leaf in enumerate(leaves):
                 flat[f"{key}|{i}"] = np.asarray(leaf)
             flat[f"{key}|treedef"] = np.array(json.dumps(_treedef(tree)))
-        np.savez(os.path.join(path, "blobs.npz"), **flat)
+        # atomic like db.json/fleet.npz: a crash mid-write must never
+        # leave a truncated blobs.npz shadowing the previous good one
+        tmp = os.path.join(path, ".blobs.npz.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, os.path.join(path, "blobs.npz"))
 
     @classmethod
     def load(cls, path: str) -> "Database":

@@ -110,6 +110,11 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
     db = sched.db
     # config-level refusals first: they name the *user-set* knob even when
     # a knob also changes the policy object (RecoveryPolicy wrapping)
+    if getattr(sched, "durability", None) is not None:
+        # fused rounds dispatch no per-event Python, so the write-ahead
+        # journal would record nothing at their boundaries — crash points
+        # inside a fused horizon would be unresumable
+        return None, "durability journal active"
     if cfg.invocation_timeout or cfg.retry_budget or cfg.quarantine_threshold:
         return None, "retry/timeout recovery enabled"
     if cfg.quorum_fraction < 1.0:

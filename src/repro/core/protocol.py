@@ -356,3 +356,12 @@ class ReactivePolicy:
     def metrics(self) -> dict:
         """Policy-specific numbers merged into ``Scheduler.metrics()``."""
         return {}
+
+    # -- durability (coordinated snapshots, DESIGN.md §14) -------------
+    def state_dict(self) -> dict:
+        """Mutable policy state for a durable resume. The base captures
+        the wrapped strategy; stateful policies extend this."""
+        return {"strategy": self.strategy.state_dict()}
+
+    def load_state(self, state: dict) -> None:
+        self.strategy.load_state(state["strategy"])

@@ -62,6 +62,19 @@ class RecoveryPolicy(ReactivePolicy):
     def fire_timers_on_drain(self) -> bool:
         return self.inner.fire_timers_on_drain
 
+    # -- durability (coordinated snapshots, DESIGN.md §14) -------------
+    def state_dict(self) -> dict:
+        return {"rng": self._rng.bit_generator.state,
+                "attempts": [[cid, n] for cid, n in self._attempts.items()],
+                "budget": self._budget,
+                "inner": self.inner.state_dict()}
+
+    def load_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = state["rng"]
+        self._attempts = {int(c): int(n) for c, n in state["attempts"]}
+        self._budget = int(state["budget"])
+        self.inner.load_state(state["inner"])
+
     def on_event(self, ev: Event, view: DatabaseView) -> Sequence[Action]:
         if isinstance(ev, RoundStarted):
             self._attempts.clear()

@@ -84,7 +84,6 @@ class Scheduler(FLRuntime):
         self._timers: list[tuple] = []   # (time, seq, round, tag)
         self._timer_seq = itertools.count()
         self._t0 = self.loop.now
-        self._acc = 0.0
         self._done = False
         self._invoked_this_round = False
         self._progress: Optional[Callable[[RoundLog], None]] = None
@@ -102,8 +101,11 @@ class Scheduler(FLRuntime):
         cfg = self.cfg
         self._progress = progress
         self._done = False
-        self._acc = 0.0
+        # NOTE: self._acc is NOT reset here — it carries the last
+        # evaluated accuracy across a durable resume (eval_every > 1)
         if self.db.round >= cfg.rounds or self.loop.now >= cfg.max_sim_time:
+            if self.durability is not None:
+                self.durability.finish()
             return self.metrics()
         self._open_round()
         drained = 0
@@ -127,6 +129,8 @@ class Scheduler(FLRuntime):
             if drained > 1:
                 break               # policy made no progress on drain
             self._dispatch(LoopDrained(t=self.loop.now))
+        if self.durability is not None:
+            self.durability.finish()
         return self.metrics()
 
     # ------------------------------------------------------------------- pump
@@ -209,6 +213,10 @@ class Scheduler(FLRuntime):
         self._dispatch(event)
 
     def _dispatch(self, event: Event) -> None:
+        # write-ahead: the journal records the occurrence before any of
+        # its actions execute (repro.durability, DESIGN.md §14)
+        if self.durability is not None:
+            self.durability.record_event(event)
         self.n_events += 1
         actions = self.policy.on_event(event, self.view)
         for action in self._coalesce(actions or ()):
@@ -336,6 +344,7 @@ class Scheduler(FLRuntime):
             if self._progress:
                 self._progress(log)
         self.db.round = round_ + 1
+        self._durability_round_closed()
         if n_agg:
             if cfg.checkpoint_every and self.db.round % cfg.checkpoint_every == 0:
                 self.checkpoint()

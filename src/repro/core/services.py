@@ -107,6 +107,32 @@ def resolve_megastep(mode: str) -> str:
     return mode
 
 
+def resolve_durability(mode: str) -> str:
+    """'off' (default: no journal, no snapshots, zero extra work — every
+    pre-existing trace bit-identical) | 'journal' (write-ahead event
+    journal + coordinated round-boundary snapshots, DESIGN.md §14).
+    Resolution: explicit config value > ``REPRO_DURABILITY`` > 'off'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_DURABILITY", "off")
+    if mode not in ("off", "journal"):
+        raise ValueError(f"unknown durability mode {mode!r} "
+                         "(expected 'off', 'journal', or 'auto')")
+    return mode
+
+
+def resolve_durability_sync(mode: str) -> str:
+    """'round' (default: fsync the journal at round boundaries only) |
+    'event' (fsync every record — strongest, slowest).
+    Resolution: explicit config value > ``REPRO_DURABILITY_SYNC`` >
+    'round'."""
+    if mode in (None, "", "auto"):
+        mode = os.environ.get("REPRO_DURABILITY_SYNC", "round")
+    if mode not in ("event", "round"):
+        raise ValueError(f"unknown durability sync policy {mode!r} "
+                         "(expected 'event', 'round', or 'auto')")
+    return mode
+
+
 @dataclass
 class FLConfig:
     """Experiment configuration. Each field maps to a paper quantity
@@ -212,6 +238,21 @@ class FLConfig:
     #                                 fallback to the event-driven engine;
     #                                 "stepwise" disables the fast path;
     #                                 "auto" defers to REPRO_MEGASTEP
+    durability: str = "auto"       # durable runs (DESIGN.md §14): "journal"
+    #                                 write-ahead-journals every protocol
+    #                                 event and snapshots all planes at
+    #                                 round boundaries so a killed run
+    #                                 resumes bit-identically
+    #                                 (durability.resume_durable); "off"
+    #                                 does nothing; "auto" defers to
+    #                                 REPRO_DURABILITY (default off)
+    durability_sync: str = "auto"  # journal fsync policy: "event" (every
+    #                                 record) | "round" (round boundaries
+    #                                 only, the default); "auto" defers to
+    #                                 REPRO_DURABILITY_SYNC
+    durability_snap_every: int = 1  # coordinated snapshot every k closed
+    #                                 rounds (journal validation covers the
+    #                                 re-executed gap on resume)
     # -- harness ---------------------------------------------------------------
     eval_every: int = 1            # evaluate global model every k rounds
     seed: int = 0                  # RNG seed: selection, init, platform noise
@@ -373,6 +414,9 @@ class FLRuntime:
                                          self.params)
             self._ensure_c_capacity(max(cfg.n_clients, 1))
         self.history: list[RoundLog] = []
+        self._acc = 0.0             # last evaluated accuracy (carried across
+        #                             rounds when eval_every > 1; lives on the
+        #                             runtime so a durable resume restores it)
         self._eval_fn = jax.jit(model.accuracy)
         self._eval_scan = None      # (jitted fn, padded arrays) built lazily
         self._completed_this_round: set[int] = set()
@@ -406,6 +450,13 @@ class FLRuntime:
         if self.data_plane == "device":
             # one resident upload per dataset object (cached across runs)
             self.dataset = dataset_store(data)
+
+        # -- durability plane (DESIGN.md §14): off by default — no journal,
+        # no snapshots, no RNG draws, every pre-existing trace bit-identical
+        self.durability = None
+        if resolve_durability(cfg.durability) == "journal":
+            from repro.durability.manager import DurabilityManager
+            self.durability = DurabilityManager(self)
 
     # -- driver view contract (protocol.DatabaseView reads these) ------------
     @property
@@ -582,8 +633,18 @@ class FLRuntime:
 
     # -------------------------------------------------- protocol emit hook
     def _emit(self, event: Event) -> None:
-        """Protocol dispatch hook: no-op for the legacy loop; the
-        ``Scheduler`` overrides this to hand the event to its policy."""
+        """Protocol dispatch hook: journal-only for the legacy loop; the
+        ``Scheduler`` overrides this to hand the event to its policy
+        (which journals at the top of ``_dispatch`` instead)."""
+        if self.durability is not None:
+            self.durability.record_event(event)
+
+    def _durability_round_closed(self) -> None:
+        """Both engines call this immediately after ``db.round``
+        advances: the round-close journal marker plus, on cadence, the
+        coordinated snapshot (repro.durability)."""
+        if self.durability is not None:
+            self.durability.on_round_closed()
 
     # -------------------------------------------------- invocation service
     def invoke_round(self, round_: int, selection: list[int],
@@ -950,6 +1011,9 @@ class FLRuntime:
             "n_quarantined": self.n_quarantined,
             "retry_latency_s": self.retry_latency_s,
             "failures_by_phase": self._failures_by_phase(inv),
+            # durability plane (DESIGN.md §14)
+            **(self.durability.metrics() if self.durability is not None
+               else {"durability": "off"}),
             "selection_bias": (max(count_arr) - min(count_arr)) if count_arr else 0,
             "invocation_counts": count_arr,
             "history": [(l.t_end, l.round, l.accuracy) for l in self.history],

@@ -57,6 +57,18 @@ class Strategy:
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
 
+    # -- durability (coordinated snapshots, DESIGN.md §14) ---------------------
+    def state_dict(self) -> dict:
+        """The mutable strategy state a durable resume must restore: the
+        selection RNG position plus ``cfg.concurrency_ratio`` (the one
+        config field a policy mutates in place — apodotiko-adaptive)."""
+        return {"rng": self.rng.bit_generator.state,
+                "concurrency_ratio": self.cfg.concurrency_ratio}
+
+    def load_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self.cfg.concurrency_ratio = state["concurrency_ratio"]
+
     # -- selection ------------------------------------------------------------
     def select(self, db: Database, round_: int) -> list[int]:
         """Default: uniform random among idle clients (FedAvg/FedProx/etc.).

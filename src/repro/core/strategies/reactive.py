@@ -56,6 +56,18 @@ class LegacyStrategyAdapter(ReactivePolicy):
         self._phase = "idle"
         self._selection: set[int] = set()
 
+    # -- durability (coordinated snapshots, DESIGN.md §14) ----------------
+    def state_dict(self) -> dict:
+        s = super().state_dict()
+        s["phase"] = self._phase
+        s["selection"] = sorted(self._selection)
+        return s
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self._phase = state["phase"]
+        self._selection = set(int(c) for c in state["selection"])
+
     # ------------------------------------------------------------- helpers
     def _gate_satisfied(self, view: DatabaseView) -> bool:
         s = self.strategy
@@ -207,6 +219,15 @@ class ApodotikoAdaptive(LegacyStrategyAdapter):
         super().__init__(build_strategy("apodotiko", cfg),
                          name="apodotiko-adaptive")
         self.cr_history: list[float] = [cfg.concurrency_ratio]
+
+    def state_dict(self) -> dict:
+        s = super().state_dict()
+        s["cr_history"] = list(self.cr_history)
+        return s
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        self.cr_history = list(state["cr_history"])
 
     def on_event(self, ev: Event, view: DatabaseView) -> Sequence[Action]:
         acts = super().on_event(ev, view)

@@ -145,6 +145,31 @@ class FaaSPlatform:
         for cid in client_ids:
             self._instances.pop(int(cid), None)
 
+    # ---------------------------------------------------------- durability
+    def state_dict(self) -> dict:
+        """JSON-serializable platform state for coordinated snapshots
+        (repro.durability): instance clocks in insertion order, the
+        legacy-noise PCG64 position, the fault model's RNG, and the full
+        invocation log (records round-trip through ``asdict``)."""
+        from dataclasses import asdict
+        s = {
+            "instances": [[cid, inst.warm_until, inst.busy_until]
+                          for cid, inst in self._instances.items()],
+            "rng": self._rng.bit_generator.state,
+            "invocations": [asdict(r) for r in self.invocations],
+        }
+        if self.faults is not None:
+            s["faults_rng"] = self.faults._rng.bit_generator.state
+        return s
+
+    def load_state(self, s: dict) -> None:
+        self._instances = {int(c): _Instance(w, b)
+                           for c, w, b in s["instances"]}
+        self._rng.bit_generator.state = s["rng"]
+        self.invocations = [InvocationRecord(**r) for r in s["invocations"]]
+        if self.faults is not None and "faults_rng" in s:
+            self.faults._rng.bit_generator.state = s["faults_rng"]
+
     # -------------------------------------------------------------- metrics
     def cold_start_ratio(self) -> float:
         if not self.invocations:

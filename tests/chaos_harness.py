@@ -96,6 +96,94 @@ def assert_chaos_invariants(engine):
     assert_fleet_consistent(engine)
 
 
+# ---------------------------------------------- crash-point fuzzing (§14)
+def durable_cfg(root, **cfg_kw) -> FLConfig:
+    """A journal-armed config writing to ``root``."""
+    kw = dict(cfg_kw)
+    kw.setdefault("durability", "journal")
+    kw["checkpoint_dir"] = str(root)
+    return FLConfig(**kw)
+
+
+def golden_durable_run(cfg_kw, model, data, root, fleet=None):
+    """The uncrashed reference: one durability-on run to completion.
+    Returns (engine, metrics, journal bytes)."""
+    import os
+    n = cfg_kw.get("n_clients", N_CLIENTS)
+    fl = list(fleet) if fleet is not None else list(paper_fleet(n))
+    from repro.core.scheduler import build_engine
+    eng = build_engine(durable_cfg(root, **cfg_kw), model, data, fl)
+    m = eng.run()
+    with open(os.path.join(str(root), "journal.wal"), "rb") as f:
+        jbytes = f.read()
+    return eng, m, jbytes
+
+
+def crash_resume_trace(cfg_kw, model, data, root, crash_after, fleet=None):
+    """Kill a durable run right after journal record ``crash_after`` is
+    processed, then resume it from snapshot + journal and run to
+    completion. Returns (resumed engine, metrics, journal bytes)."""
+    import os
+    from repro.durability import SimulatedCrash, resume_durable
+    n = cfg_kw.get("n_clients", N_CLIENTS)
+    fl = list(fleet) if fleet is not None else list(paper_fleet(n))
+    from repro.core.scheduler import build_engine
+    eng = build_engine(durable_cfg(root, **cfg_kw), model, data, list(fl))
+    eng.durability.crash_after = crash_after
+    try:
+        eng.run()
+        raise AssertionError(
+            f"run finished before the armed crash point {crash_after}")
+    except SimulatedCrash:
+        pass
+    resumed = resume_durable(durable_cfg(root, **cfg_kw), model, data,
+                             list(fl))
+    m = resumed.run()
+    with open(os.path.join(str(root), "journal.wal"), "rb") as f:
+        jbytes = f.read()
+    return resumed, m, jbytes
+
+
+def assert_resume_identical(gold_eng, gold_m, gold_bytes, eng, m, jbytes):
+    """The tentpole contract: a crashed-and-resumed run is bit-identical
+    to the uncrashed one — observable trace, params, simulated clock,
+    and the journal itself — and leaks nothing."""
+    assert chaos_trace(eng) == chaos_trace(gold_eng)
+    assert m["history"] == gold_m["history"]
+    assert m["total_time"] == gold_m["total_time"]
+    assert jbytes == gold_bytes, "resumed journal differs from golden"
+    assert_params_equal(eng.params, gold_eng.params)
+    assert_chaos_invariants(eng)
+
+
+def run_crash_sweep(cfg_kw, model, data, tmp_path, ks=None, fleet=None):
+    """Crash-at-every-boundary fuzz: golden run once, then for each
+    boundary ``k`` (default: all of them) kill-and-resume and assert
+    bit-identity. Returns the number of boundaries exercised."""
+    gold_eng, gold_m, gold_bytes = golden_durable_run(
+        cfg_kw, model, data, tmp_path / "golden", fleet=fleet)
+    n_records = gold_m["journal_records"]
+    assert n_records > 0
+    if ks is None:
+        ks = range(1, n_records + 1)
+    ks = [k for k in ks if 1 <= k <= n_records]
+    for k in ks:
+        eng, m, jbytes = crash_resume_trace(
+            cfg_kw, model, data, tmp_path / f"crash_{k}", k, fleet=fleet)
+        assert_resume_identical(gold_eng, gold_m, gold_bytes,
+                                eng, m, jbytes)
+    return len(ks)
+
+
+def spot_ks(n_records, n_points=5):
+    """A small spread of crash boundaries: the first records, the middle,
+    and the tail (where round-close markers and run_end live)."""
+    ks = {1, 2, n_records // 2, n_records - 1, n_records}
+    step = max(1, n_records // n_points)
+    ks.update(range(1, n_records + 1, step))
+    return sorted(k for k in ks if 1 <= k <= n_records)
+
+
 def run_chaos_pair(cfg_kw, model, data, fleet=None):
     """Run the same seeded fault schedule through both engines and assert
     bit-identical chaos traces + the post-run invariants. Recovery knobs
@@ -140,3 +228,10 @@ def test_run_chaos_pair_rejects_recovery_configs(data, model):
     with pytest.raises(AssertionError, match="scheduler-only"):
         run_chaos_pair(base_cfg_kw(strategy="fedavg", retry_budget=2),
                        model, data)
+
+
+def test_crash_resume_smoke(tmp_path, data, model):
+    """Harness self-test: one crash point on a one-round run resumes
+    bit-identically (the full sweeps live in tests/test_durability.py)."""
+    kw = base_cfg_kw(strategy="fedavg", rounds=1)
+    assert run_crash_sweep(kw, model, data, tmp_path, ks=[2]) == 1

@@ -107,3 +107,24 @@ def test_controlplane_modes_independently_seeded(bench_round):
     assert obj is not None and len(obj.clients) == 500
     # and the skip threshold still guards the object wall
     assert bench_round._control_states(300_000, planes=("object",))[0] is None
+
+
+def test_durability_smoke_gate(bench_round, tmp_path):
+    """The --durability CI gate: journal overhead within the round-sync
+    budget and a crash-mid-journal resume bit-identical to the golden
+    run (snapshot cadence pushed out in the sync cells, so fsync counts
+    reflect journal policy alone)."""
+    path = tmp_path / "durability.json"
+    out = bench_round.run_durability(smoke=True, json_path=str(path))
+    assert out["gate"]["resume_identical"] is True
+    assert out["gate"]["round_sync_overhead_ok"] is True
+    assert out["gate"]["replayed"] >= 0
+    by_label = {r["label"]: r for r in out["sync"]}
+    assert by_label["journal+event"]["journal_fsyncs"] >= \
+        by_label["journal+event"]["journal_records"]
+    assert by_label["journal+round"]["journal_fsyncs"] < \
+        by_label["journal+round"]["journal_records"]
+    assert by_label["journal+round"]["n_snapshots"] == 0
+    assert out["fleet"][0]["snapshot_ms"] > 0
+    assert out["fleet"][0]["resume_ms"] > 0
+    assert json.loads(path.read_text())["bench"] == "durability"

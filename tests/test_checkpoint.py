@@ -59,3 +59,55 @@ def test_missing_checkpoint_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     with pytest.raises(FileNotFoundError):
         mgr.restore()
+
+
+# ------------------------------------------ crash-safe swap (DESIGN.md §14)
+def test_rename_aside_survives_crash_between_renames(tmp_path):
+    """A kill between the two renames of the swap leaves only the
+    ``.old`` aside copy; restore falls back to it."""
+    d = str(tmp_path / "ckpt")
+    save_pytree({"w": jnp.zeros(3)}, d)
+    # simulate the torn state: old checkpoint moved aside, new one gone
+    os.replace(d, d + ".old")
+    r = restore_pytree(d)
+    np.testing.assert_array_equal(r["w"], np.zeros(3, np.float32))
+
+
+def test_overwrite_never_leaves_zero_checkpoints(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree({"w": jnp.zeros(3)}, d)
+    save_pytree({"w": jnp.ones(3)}, d)
+    assert not os.path.exists(d + ".old")  # aside copy cleaned up
+    np.testing.assert_array_equal(restore_pytree(d)["w"],
+                                  np.ones(3, np.float32))
+
+
+def test_restore_skips_corrupt_newest_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for step in (1, 2, 3):
+        mgr.save(step, {"w": jnp.full(2, float(step))}, extra={"round": step})
+    # step 3: missing meta.json; step 2: truncated leaves.npz
+    os.remove(os.path.join(mgr._step_dir(3), "meta.json"))
+    leaves = os.path.join(mgr._step_dir(2), "leaves.npz")
+    with open(leaves, "r+b") as f:
+        f.truncate(os.path.getsize(leaves) // 2)
+    tree, extra, step = mgr.restore()
+    assert step == 1 and extra["round"] == 1
+    np.testing.assert_array_equal(tree["w"], np.full(2, 1.0, np.float32))
+
+
+def test_restore_explicit_corrupt_step_still_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, {"w": jnp.zeros(2)})
+    mgr.save(2, {"w": jnp.ones(2)})
+    os.remove(os.path.join(mgr._step_dir(2), "meta.json"))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(2)
+
+
+def test_restore_all_corrupt_reports_count(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, {"w": jnp.zeros(2)})
+    os.remove(os.path.join(mgr._step_dir(1), "meta.json"))
+    with pytest.raises(FileNotFoundError, match="1 corrupt"):
+        mgr.restore()

@@ -72,3 +72,36 @@ def test_global_model_retention():
         db.put_global_model(r, {"w": np.full(2, float(r), np.float32)})
     assert len(db.global_models) == 3  # keeps only recent history
     assert db.latest_global()["w"][0] == 5.0
+
+
+def test_blobs_save_is_atomic(tmp_path, monkeypatch):
+    """A crash mid-``np.savez`` must not clobber the previous good
+    blobs.npz: the write goes to a temp file and only a completed write
+    is renamed into place."""
+    import repro.core.database as dbmod
+
+    db = _mkdb()
+    rec = ResultRecord(client_id=1, round=0, n_samples=10, train_duration=1.0,
+                       t_available=1.0)
+    db.put_update(rec, {"w": np.arange(4, dtype=np.float32)})
+    path = str(tmp_path / "db")
+    db.save(path)
+
+    real_savez = dbmod.np.savez
+
+    def torn_savez(f, **arrays):
+        f.write(b"PK\x03\x04 torn half-written archive")
+        raise RuntimeError("simulated crash mid-savez")
+
+    db.put_update(ResultRecord(client_id=2, round=0, n_samples=10,
+                               train_duration=1.0, t_available=1.0),
+                  {"w": np.full(4, 9.0, np.float32)})
+    monkeypatch.setattr(dbmod.np, "savez", torn_savez)
+    with pytest.raises(RuntimeError, match="mid-savez"):
+        db.save(path)
+    monkeypatch.setattr(dbmod.np, "savez", real_savez)
+
+    # the old archive is intact and still loads the first update
+    db2 = Database.load(path)
+    np.testing.assert_array_equal(db2.blobs[rec.update_key]["w"],
+                                  np.arange(4, dtype=np.float32))

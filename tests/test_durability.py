@@ -1,0 +1,395 @@
+"""Durability subsystem tests (DESIGN.md §14): crash-at-any-boundary
+resume bit-identity across engines × control planes × update planes,
+SIGKILL subprocess fuzzing, torn-file recovery, and the off-path
+golden-trace guarantee.
+
+The heavy lifting lives in tests/chaos_harness.py (``run_crash_sweep``
+and friends); this file picks the configurations and the crash points —
+including the mid-traffic-window and mid-quarantine boundaries the
+tentpole calls out.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from chaos_harness import (N_CLIENTS, assert_chaos_invariants,  # noqa: F401
+                           assert_resume_identical, base_cfg_kw, chaos_trace,
+                           crash_resume_trace, data, durable_cfg,
+                           golden_durable_run, model, run_crash_sweep,
+                           spot_ks)
+from trace_harness import assert_params_equal
+
+from repro.core.journal import Journal, encode_line
+from repro.core.scheduler import build_engine
+from repro.core.services import (FLConfig, resolve_durability,
+                                 resolve_durability_sync)
+from repro.durability import (JournalDivergence, SimulatedCrash,
+                              find_latest_snapshot, list_snapshots,
+                              resume_durable)
+from repro.faas.hardware import paper_fleet
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------ off path
+def test_off_path_draws_nothing_and_matches(tmp_path, data, model):
+    """durability=off is the default, constructs nothing, and the
+    journal-armed run produces the exact same observable trace."""
+    kw = base_cfg_kw(strategy="apodotiko")
+    off = build_engine(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m_off = off.run()
+    assert off.durability is None
+    assert m_off["durability"] == "off"
+
+    on, m_on, _ = golden_durable_run(kw, model, data, tmp_path / "on")
+    assert chaos_trace(on) == chaos_trace(off)
+    assert m_on["history"] == m_off["history"]
+    assert m_on["total_time"] == m_off["total_time"]
+    assert_params_equal(on.params, off.params)
+
+
+def test_resolvers():
+    assert resolve_durability("off") == "off"
+    assert resolve_durability("journal") == "journal"
+    with pytest.raises(ValueError):
+        resolve_durability("bogus")
+    assert resolve_durability_sync("auto") in ("event", "round")
+    with pytest.raises(ValueError):
+        resolve_durability_sync("bogus")
+
+
+def test_journal_requires_checkpoint_dir(data, model):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        build_engine(FLConfig(durability="journal",
+                              **base_cfg_kw(strategy="fedavg")),
+                     model, data, list(paper_fleet(N_CLIENTS)))
+
+
+# ----------------------------------------- crash-at-every-boundary sweeps
+def test_every_boundary_scheduler_columnar(tmp_path, data, model):
+    n = run_crash_sweep(base_cfg_kw(strategy="apodotiko"), model, data,
+                        tmp_path)
+    assert n >= 10
+
+
+def test_every_boundary_legacy_object(tmp_path, data, model):
+    n = run_crash_sweep(
+        base_cfg_kw(strategy="apodotiko", engine="legacy",
+                    control_plane="object"),
+        model, data, tmp_path)
+    assert n >= 10
+
+
+def _spot_sweep(kw, tmp_path, data, model):
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    n = gold[1]["journal_records"]
+    for k in spot_ks(n):
+        res = crash_resume_trace(kw, model, data, tmp_path / f"c{k}", k)
+        assert_resume_identical(*gold, *res)
+
+
+def test_spot_legacy_columnar_eval_gap(tmp_path, data, model):
+    # eval_every=2 exercises the accuracy-carryover (_acc) restore
+    _spot_sweep(base_cfg_kw(strategy="fedavg", engine="legacy", eval_every=2),
+                tmp_path, data, model)
+
+
+def test_spot_blob_update_plane(tmp_path, data, model):
+    _spot_sweep(base_cfg_kw(strategy="fedavg", update_plane="blob"),
+                tmp_path, data, model)
+
+
+def test_spot_hedge_policy(tmp_path, data, model):
+    _spot_sweep(base_cfg_kw(strategy="apodotiko-hedge"), tmp_path, data, model)
+
+
+def test_spot_adaptive_policy(tmp_path, data, model):
+    _spot_sweep(base_cfg_kw(strategy="apodotiko-adaptive"),
+                tmp_path, data, model)
+
+
+def test_spot_scaffold(tmp_path, data, model):
+    _spot_sweep(base_cfg_kw(strategy="scaffold"), tmp_path, data, model)
+
+
+def _targeted_ks(root, kinds, pad=1):
+    """Crash boundaries at (and right after) records of the given kinds —
+    the mid-window boundaries the tentpole calls out explicitly."""
+    records, _ = Journal.read(os.path.join(str(root), "journal.wal"))
+    ks = set()
+    for r in records:
+        if r["k"] in kinds:
+            for d in range(pad + 1):
+                ks.add(r["q"] + 1 + d)      # crash_after is 1-based
+    return sorted(k for k in ks if 1 <= k <= len(records))
+
+
+def test_mid_quarantine_crash_points(tmp_path, data, model):
+    """Crash while retry timers are armed and quarantines are open: the
+    recovery layer's RNG, attempt counts, budget, and timer heap must
+    all survive the resume."""
+    kw = base_cfg_kw(strategy="apodotiko", fault_profile="crash-heavy",
+                     invocation_timeout=40.0, retry_budget=2,
+                     quarantine_threshold=2, quarantine_rounds=2)
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    assert gold[1]["n_timeouts"] + gold[1]["n_failures"] > 0, \
+        "fault schedule produced no failures — test is vacuous"
+    ks = _targeted_ks(tmp_path / "golden",
+                      ("InvocationFailed", "InvocationTimedOut"))
+    assert ks, "no failure events to crash at"
+    for k in ks:
+        res = crash_resume_trace(kw, model, data, tmp_path / f"c{k}", k)
+        assert_resume_identical(*gold, *res)
+
+
+def test_mid_traffic_window_crash_points(tmp_path, data, model):
+    """Crash right at membership-shift boundaries: the traffic cursor
+    and the bulk join/leave effects must replay identically."""
+    kw = base_cfg_kw(strategy="apodotiko", traffic_profile="steady-churn",
+                     rounds=3)
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    ks = _targeted_ks(tmp_path / "golden", ("ClientsJoined", "ClientsLeft"))
+    if not ks:          # schedule produced no mid-run churn at this scale
+        ks = spot_ks(gold[1]["journal_records"])
+    for k in ks:
+        res = crash_resume_trace(kw, model, data, tmp_path / f"c{k}", k)
+        assert_resume_identical(*gold, *res)
+
+
+# ------------------------------------------------------ SIGKILL fuzzing
+def test_sigkill_subprocess_resume(tmp_path, data, model):
+    """A real SIGKILL mid-run (no atexit, no flush beyond os.write), then
+    an in-process resume: trace and journal must match the uncrashed
+    golden run byte for byte."""
+    child = os.path.join(REPO, "scripts", "durable_crash_child.py")
+    sys.path.insert(0, os.path.dirname(child))
+    try:
+        from durable_crash_child import child_config
+    finally:
+        sys.path.pop(0)
+
+    gold_dir = tmp_path / "golden"
+    gold_eng = build_engine(child_config(str(gold_dir)), model, data,
+                            list(paper_fleet(10)))
+    gold_m = gold_eng.run()
+    with open(gold_dir / "journal.wal", "rb") as f:
+        gold_bytes = f.read()
+
+    for k in (3, 6):
+        d = tmp_path / f"kill_{k}"
+        env = dict(os.environ,
+                   REPRO_CRASH_AFTER_EVENTS=str(k),
+                   REPRO_CRASH_MODE="sigkill")
+        env.pop("REPRO_DURABILITY", None)
+        proc = subprocess.run([sys.executable, child, str(d)], env=env,
+                              capture_output=True, timeout=600)
+        assert proc.returncode == -9, (proc.returncode, proc.stderr[-800:])
+        records, _ = Journal.read(str(d / "journal.wal"))
+        assert len(records) == k, "os.write must persist every record"
+
+        resumed = resume_durable(child_config(str(d)), model, data,
+                                 list(paper_fleet(10)))
+        m = resumed.run()
+        with open(d / "journal.wal", "rb") as f:
+            jbytes = f.read()
+        assert m["history"] == gold_m["history"]
+        assert m["total_time"] == gold_m["total_time"]
+        assert jbytes == gold_bytes
+        assert_params_equal(resumed.params, gold_eng.params)
+        assert_chaos_invariants(resumed)
+
+
+# --------------------------------------------------- torn-file recovery
+def _crashed_run(tmp_path, kw, k, data, model):
+    d = tmp_path / "crashed"
+    eng = build_engine(durable_cfg(d, **kw), model, data,
+                       list(paper_fleet(N_CLIENTS)))
+    eng.durability.crash_after = k
+    with pytest.raises(SimulatedCrash):
+        eng.run()
+    return d
+
+
+def test_torn_journal_tail_truncated_to_prefix(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="apodotiko")
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    d = _crashed_run(tmp_path, kw, 8, data, model)
+    jpath = d / "journal.wal"
+    size = os.path.getsize(jpath)
+    with open(jpath, "r+b") as f:        # tear the last record mid-line
+        f.truncate(size - 3)
+    records, good = Journal.read(str(jpath))
+    assert len(records) == 7 and good < size - 3
+
+    resumed = resume_durable(durable_cfg(d, **kw), model, data,
+                             list(paper_fleet(N_CLIENTS)))
+    m = resumed.run()
+    with open(jpath, "rb") as f:
+        jbytes = f.read()
+    assert_resume_identical(*gold, resumed, m, jbytes)
+
+
+def test_garbage_journal_tail_truncated(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="apodotiko")
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    d = _crashed_run(tmp_path, kw, 6, data, model)
+    with open(d / "journal.wal", "ab") as f:
+        f.write(b'{"q": 6, "half a record and no frame')
+    resumed = resume_durable(durable_cfg(d, **kw), model, data,
+                             list(paper_fleet(N_CLIENTS)))
+    m = resumed.run()
+    with open(d / "journal.wal", "rb") as f:
+        jbytes = f.read()
+    assert_resume_identical(*gold, resumed, m, jbytes)
+
+
+def test_corrupt_snapshot_falls_back(tmp_path, data, model):
+    """A snapshot with a torn npz fails its manifest CRC and is skipped
+    in favor of an older one (or genesis) — resume stays bit-identical,
+    just replaying more of the journal."""
+    # rounds=3 so two snapshots survive GC when the crash lands on the
+    # final round-close record (its own snapshot is never written: the
+    # journal record precedes the snapshot, and the crash fires between)
+    kw = base_cfg_kw(strategy="apodotiko", rounds=3)
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    k = gold[1]["journal_records"] - 1
+    d = _crashed_run(tmp_path, kw, k, data, model)
+    seqs = list_snapshots(str(d))
+    assert len(seqs) >= 2
+    newest = os.path.join(str(d), f"snap_{seqs[-1]:010d}")
+    target = os.path.join(newest, "db", "blobs.npz")
+    with open(target, "r+b") as f:       # partial npz: truncate mid-file
+        f.truncate(max(os.path.getsize(target) // 2, 1))
+    assert find_latest_snapshot(str(d)).seq == seqs[-2]
+
+    resumed = resume_durable(durable_cfg(d, **kw), model, data,
+                             list(paper_fleet(N_CLIENTS)))
+    m = resumed.run()
+    with open(d / "journal.wal", "rb") as f:
+        jbytes = f.read()
+    assert_resume_identical(*gold, resumed, m, jbytes)
+    assert m["journal_replayed"] > 0
+
+
+def test_manifestless_snapshot_ignored(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="apodotiko")
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    k = gold[1]["journal_records"] - 1
+    d = _crashed_run(tmp_path, kw, k, data, model)
+    seqs = list_snapshots(str(d))
+    newest = os.path.join(str(d), f"snap_{seqs[-1]:010d}")
+    os.remove(os.path.join(newest, "MANIFEST.json"))
+    resumed = resume_durable(durable_cfg(d, **kw), model, data,
+                             list(paper_fleet(N_CLIENTS)))
+    m = resumed.run()
+    with open(d / "journal.wal", "rb") as f:
+        jbytes = f.read()
+    assert_resume_identical(*gold, resumed, m, jbytes)
+
+
+def test_resume_with_no_snapshot_replays_from_genesis(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="apodotiko")
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    d = _crashed_run(tmp_path, kw, 3, data, model)   # before first round close
+    assert list_snapshots(str(d)) == []
+    resumed = resume_durable(durable_cfg(d, **kw), model, data,
+                             list(paper_fleet(N_CLIENTS)))
+    m = resumed.run()
+    with open(d / "journal.wal", "rb") as f:
+        jbytes = f.read()
+    assert_resume_identical(*gold, resumed, m, jbytes)
+    assert m["journal_replayed"] == 3
+
+
+# ------------------------------------------------------ guard behaviour
+def test_config_mismatch_refused(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="apodotiko")
+    d = _crashed_run(tmp_path, kw, 5, data, model)
+    other = dict(kw, seed=1)
+    with pytest.raises(ValueError, match="different experiment config"):
+        resume_durable(durable_cfg(d, **other), model, data,
+                       list(paper_fleet(N_CLIENTS)))
+
+
+def test_divergence_detected(tmp_path, data, model):
+    """A journal record the replay cannot reproduce (tampered payload,
+    valid CRC) aborts the resume instead of silently forking."""
+    kw = base_cfg_kw(strategy="apodotiko")
+    d = _crashed_run(tmp_path, kw, 7, data, model)   # past first snapshot
+    jpath = str(d / "journal.wal")
+    records, _ = Journal.read(jpath)
+    assert list_snapshots(str(d)), "need a snapshot so the tail validates"
+    records[-1]["t"] += 1.0                           # plausible but wrong
+    with open(jpath, "wb") as f:
+        for r in records:
+            f.write(encode_line(r))
+    with pytest.raises(JournalDivergence):
+        resume_durable(durable_cfg(d, **kw), model, data,
+                       list(paper_fleet(N_CLIENTS))).run()
+
+
+# ------------------------------------------------- sync/snapshot knobs
+def test_sync_policies_same_bytes_different_fsyncs(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="fedavg")
+    _, m_round, b_round = golden_durable_run(
+        dict(kw, durability_sync="round"), model, data, tmp_path / "r")
+    _, m_event, b_event = golden_durable_run(
+        dict(kw, durability_sync="event"), model, data, tmp_path / "e")
+    assert b_round == b_event, "sync policy must not change journal content"
+    assert m_event["journal_fsyncs"] >= m_event["journal_records"]
+    assert m_round["journal_fsyncs"] < m_round["journal_records"]
+
+
+def test_snap_every_sparse_snapshots(tmp_path, data, model):
+    kw = base_cfg_kw(strategy="apodotiko", rounds=4, durability_snap_every=2)
+    gold = golden_durable_run(kw, model, data, tmp_path / "golden")
+    assert gold[1]["n_snapshots"] == 2
+    n = gold[1]["journal_records"]
+    for k in (n // 2, n - 1):
+        res = crash_resume_trace(kw, model, data, tmp_path / f"c{k}", k)
+        assert_resume_identical(*gold, *res)
+
+
+def test_megastep_gated_off_under_durability(tmp_path, data, model):
+    """Fused rounds emit no events, so the journal gates fusion off; the
+    run still matches the fused durability-off trace (megastep contract:
+    fused == stepwise bit-identical)."""
+    from trace_harness import megastep_cfg
+    kw = megastep_cfg()
+    off = build_engine(FLConfig(**kw), model, data, list(paper_fleet(N_CLIENTS)))
+    m_off = off.run()
+    on, m_on, _ = golden_durable_run(kw, model, data, tmp_path / "on")
+    assert m_on["megastep_rounds"] == 0
+    assert m_on["megastep_fallback_reason"] == "durability journal active"
+    assert m_on["history"] == m_off["history"]
+    assert m_on["total_time"] == m_off["total_time"]
+    assert_params_equal(on.params, off.params)
+
+
+def test_metrics_expose_journal_counters(tmp_path, data, model):
+    _, m, _ = golden_durable_run(base_cfg_kw(strategy="fedavg"), model, data,
+                                 tmp_path)
+    assert m["durability"] == "journal"
+    assert m["journal_records"] > 0
+    assert m["journal_bytes"] > 0
+    assert m["n_snapshots"] >= 1
+    assert m["journal_replayed"] == 0
+
+
+# ------------------------------------------------------- journal format
+def test_journal_record_framing(tmp_path, data, model):
+    _, m, jbytes = golden_durable_run(base_cfg_kw(strategy="fedavg"),
+                                      model, data, tmp_path)
+    lines = jbytes.decode().strip().split("\n")
+    assert len(lines) == m["journal_records"]
+    for i, line in enumerate(lines):
+        body, _, crc = line.rpartition("|")
+        rec = json.loads(body)
+        assert rec["q"] == i
+        assert set(rec) == {"q", "k", "t", "r", "p", "g"}
+    assert json.loads(lines[0].rpartition("|")[0])["k"] == "genesis"
+    assert json.loads(lines[-1].rpartition("|")[0])["k"] == "run_end"
