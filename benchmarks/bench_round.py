@@ -61,6 +61,16 @@ cost-per-round — under the diurnal profile. Lands in
 ``BENCH_traffic.json``; exits nonzero if the bulk path diverges from the
 per-event oracle (the CI gate).
 
+``--sharding`` measures the mesh plane (DESIGN.md §15): a weak-scaling
+curve over the ("data", "model") device mesh — each cell is a subprocess
+with its own forced host-device count (XLA fixes the count at startup),
+cohort size growing with the data axis, wall rounds/s plus the
+structural metrics (bottleneck-device update-store bytes, equal-tile
+split). Lands in ``BENCH_sharding.json``; exits nonzero if mesh='1x1'
+diverges bitwise from the default path, the buffer does not split into
+equal per-device tiles, or (on hosts with >= 8 cores) weak-scaled
+throughput at 8 devices is below 1.5x the 1x1 oracle.
+
 Measures the aggregation+transfer component of one controller round — the
 path between cohort training finishing and the new global model existing —
 at K ∈ {10, 100} clients x N ∈ {1e4, 1e6} parameters:
@@ -755,6 +765,183 @@ def run_megastep(smoke: bool = False, json_path: str = "") -> dict:
     return out
 
 
+# --------------------------------------------------------------- sharding
+
+
+# One worker process per mesh cell: XLA's host-device count is fixed at
+# process startup, so every device count needs its own interpreter with
+# XLA_FLAGS set before jax imports (the same constraint the multi-device
+# tests live under — tests/test_mesh_plane.py, tests/test_sharding.py).
+_SHARDING_WORKER = r"""
+import os, sys, json, time, hashlib
+n_dev = int(os.environ["REPRO_SH_DEVICES"])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+os.environ.pop("REPRO_MESH", None)
+spec = os.environ.get("REPRO_SH_MESH", "")      # "" = config default (auto)
+import numpy as np
+import jax
+
+from repro.core.scheduler import Scheduler
+from repro.core.services import FLConfig
+from repro.data.synthetic import make_federated_dataset
+from repro.faas.hardware import HardwareProfile
+from repro.models.proxy_models import build_bench_model
+from repro.sharding import flmesh
+
+K = int(os.environ["REPRO_SH_K"])
+R = int(os.environ["REPRO_SH_ROUNDS"])
+n_clients = max(10, 3 * K)
+data = make_federated_dataset("mnist", n_clients=n_clients, scale=0.05,
+                              seed=0)
+model = build_bench_model("mnist")
+fleet = [HardwareProfile(f"det{i % 3}", speed=(1.0, 1.45, 1.9)[i % 3],
+                         vcpus=1.0, mem_gib=2.0, variability=0.0)
+         for i in range(n_clients)]
+kw = dict(n_clients=n_clients, clients_per_round=K, rounds=R,
+          local_epochs=1, batch_size=5, base_step_time=0.5,
+          strategy="apodotiko-topk", concurrency_ratio=1.0, eval_every=0,
+          keep_warm=1e9, seed=0)
+if spec:
+    kw["mesh"] = spec
+eng = Scheduler(FLConfig(**kw), model, data, fleet)
+eng.run()                                       # bootstrap + compile
+eng.cfg.rounds += R                             # settle runtime warmup
+eng.run()
+r0 = eng.db.round
+eng.cfg.rounds += R                             # timed warm segment
+t0 = time.perf_counter()
+eng.run()
+wall = time.perf_counter() - t0
+n_rounds = eng.db.round - r0
+
+flat = np.concatenate([np.asarray(x).ravel()
+                       for x in jax.tree.leaves(eng.params)])
+buf = eng.store.buffer
+shard_bytes = [s.data.nbytes for s in buf.addressable_shards]
+mesh = flmesh.build_fl_mesh(flmesh.resolve_mesh(kw.get("mesh", "auto")))
+d_ax, m_ax = flmesh.mesh_axes(mesh)
+print(json.dumps({
+    "mesh": spec or "auto", "devices": n_dev, "K": K,
+    "data_axis": d_ax, "model_axis": m_ax,
+    "rounds_timed": int(n_rounds), "wall_s": round(wall, 4),
+    "rounds_per_s": round(n_rounds / wall, 3),
+    "clients_per_s": round(n_rounds * K / wall, 3),
+    "store_total_bytes": int(buf.nbytes),
+    "store_device_bytes": int(max(shard_bytes)),
+    "n_shards": len(shard_bytes),
+    "params_sha": hashlib.sha256(flat.tobytes()).hexdigest(),
+}))
+"""
+
+
+def _sharding_cell(spec: str, n_dev: int, K: int, rounds: int,
+                   workdir: str) -> dict:
+    import subprocess
+
+    path = os.path.join(workdir, f"sharding_{spec or 'default'}.py")
+    with open(path, "w") as f:
+        f.write(_SHARDING_WORKER)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_MESH", None)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env["REPRO_SH_MESH"] = spec
+    env["REPRO_SH_DEVICES"] = str(n_dev)
+    env["REPRO_SH_K"] = str(K)
+    env["REPRO_SH_ROUNDS"] = str(rounds)
+    out = subprocess.run([sys.executable, path], capture_output=True,
+                         text=True, env=env, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharding worker {spec or 'default'!r} failed:\n"
+                           + out.stderr[-3000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run_sharding(smoke: bool = False, json_path: str = "") -> dict:
+    """Sharded-plane bench (DESIGN.md §15): a weak-scaling curve over the
+    ("data", "model") mesh — cohort size K grows with the data axis, so
+    ideal scaling holds wall time per round flat while client-updates/s
+    grows with the device count. On a host with fewer cores than forced
+    devices the wall numbers measure oversubscription, not scaling, so
+    the wall-clock gate only arms when ``os.cpu_count() >= 8``; the
+    structural metrics (bottleneck-device update-store bytes, per-device
+    cohort lanes) hold on any host and are always gated. The 1x1
+    bitwise-identity gate — mesh resolution alone must not perturb a run
+    — always arms. Lands in ``BENCH_sharding.json``."""
+    import tempfile
+
+    rounds = 3 if smoke else 5
+    cells_spec = ([("", 1, 4), ("1x1", 1, 4), ("2x1", 2, 8)] if smoke
+                  else [("", 1, 4), ("1x1", 1, 4), ("2x1", 2, 8),
+                        ("2x2", 4, 8), ("2x4", 8, 16)])
+    cells = []
+    with tempfile.TemporaryDirectory(prefix="bench_sharding_") as work:
+        for spec, n_dev, K in cells_spec:
+            cell = _sharding_cell(spec, n_dev, K, rounds, work)
+            cells.append(cell)
+            print(f"sharding/{cell['mesh']}/d{cell['data_axis']}"
+                  f"m{cell['model_axis']},"
+                  f"{1e6 / cell['rounds_per_s']:.0f},"
+                  f"K={cell['K']} clients_per_s={cell['clients_per_s']} "
+                  f"device_bytes={cell['store_device_bytes']}"
+                  f"/{cell['store_total_bytes']}")
+
+    base = next(c for c in cells if c["mesh"] == "1x1")
+    default = next(c for c in cells if c["mesh"] == "auto")
+    identity_ok = (default["params_sha"] == base["params_sha"])
+
+    # structural gates (host-independent): the buffer actually splits
+    # into d*m equal tiles, and the bottleneck device holds 1/(d*m)
+    # of the update-store bytes
+    structural_ok = True
+    for c in cells:
+        n_tiles = c["data_axis"] * c["model_axis"]
+        structural_ok &= (c["n_shards"] == n_tiles)
+        structural_ok &= (c["store_device_bytes"] * n_tiles
+                          == c["store_total_bytes"])
+
+    # weak-scaled throughput relative to the 1x1 oracle
+    for c in cells:
+        c["throughput_vs_1x1"] = round(c["clients_per_s"]
+                                       / base["clients_per_s"], 3)
+    biggest = max(cells, key=lambda c: c["devices"])
+    cpu_count = os.cpu_count() or 1
+    wall_gate_armed = cpu_count >= 8 and biggest["devices"] >= 8
+    wall_ok = (biggest["throughput_vs_1x1"] > 1.5 if wall_gate_armed
+               else None)
+    print(f"sharding/identity,0,bitwise={identity_ok} "
+          f"structural={structural_ok}")
+    print(f"sharding/scaling,{biggest['throughput_vs_1x1']},"
+          f"devices={biggest['devices']} cpu_count={cpu_count} "
+          f"wall_gate={'armed' if wall_gate_armed else 'skipped'}")
+
+    out = {"bench": "sharding", "smoke": smoke,
+           "backend": "cpu-subprocess", "cpu_count": cpu_count,
+           "rounds_per_segment": rounds, "cells": cells,
+           "identity_1x1_bitwise": identity_ok,
+           "structural_ok": structural_ok,
+           "wall_gate": ("armed" if wall_gate_armed else
+                         f"skipped (cpu_count={cpu_count})"),
+           "wall_scaling_ok": wall_ok}
+    path = json_path or os.path.join(_ROOT, "BENCH_sharding.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    if not identity_ok:
+        print("FAIL: mesh='1x1' diverged bitwise from the default path")
+        sys.exit(1)
+    if not structural_ok:
+        print("FAIL: update-store buffer did not split into equal "
+              "per-device tiles")
+        sys.exit(1)
+    if wall_gate_armed and not wall_ok:
+        print(f"FAIL: weak-scaled throughput at {biggest['devices']} "
+              f"devices is {biggest['throughput_vs_1x1']}x the 1x1 "
+              "oracle (< 1.5x gate)")
+        sys.exit(1)
+    return out
+
+
 # ----------------------------------------------------------------- faults
 
 
@@ -1215,5 +1402,7 @@ if __name__ == "__main__":
         run_traffic(smoke=smoke, json_path=jp)
     elif "--durability" in sys.argv:
         run_durability(smoke=smoke, json_path=jp)
+    elif "--sharding" in sys.argv:
+        run_sharding(smoke=smoke, json_path=jp)
     else:
         run(smoke=smoke, json_path=jp)

@@ -62,7 +62,8 @@ _INTERP_MAX_N = int(os.environ.get("REPRO_AGG_PALLAS_MAX_INTERP_N",
 
 
 def last_path() -> str:
-    """Which execution path ('pallas' | 'xla') produced the last aggregate."""
+    """Which execution path ('pallas' | 'xla' | 'psum') produced the last
+    aggregate."""
     return _LAST_PATH
 
 
@@ -166,7 +167,7 @@ def weighted_aggregate(updates: Sequence[Pytree], weights: np.ndarray,
 
 def weighted_aggregate_rows(buffer, row_idx, weights,
                             spec: "kernel_ops.RavelSpec", out_dtype=None,
-                            path: Optional[str] = None) -> Pytree:
+                            path: Optional[str] = None, mesh=None) -> Pytree:
     """Row-index fast path over the device-resident update plane.
 
     ``buffer`` is an ``UpdateStore``'s persistent [capacity, N] fp32 device
@@ -176,12 +177,28 @@ def weighted_aggregate_rows(buffer, row_idx, weights,
     ravel, no stack, no per-leaf work — and the flat result unravels exactly
     once to produce the new global pytree. Dispatch policy (``path`` arg,
     ``REPRO_AGG_PATH``, self-check, interpret-mode size cap) is identical to
-    ``weighted_aggregate``."""
+    ``weighted_aggregate``.
+
+    With ``mesh`` set (the buffer sharded P("data", "model")), the
+    reduction routes to ``kernels/ops.aggregate_rows_psum``: a weighted
+    ``lax.psum`` of per-shard partial matvecs over the ``data`` axis, so
+    aggregation bytes move over ICI instead of through one device. Same
+    weight-0 stale-row contract, same finiteness-guard recompute."""
     global _LAST_PATH
     assert len(row_idx) == len(weights) and len(row_idx) > 0
     path = path or os.environ.get("REPRO_AGG_PATH", "auto")
     if path not in ("auto", "pallas", "xla"):
         raise ValueError(f"unknown aggregation path {path!r}")
+
+    if mesh is not None:
+        flat = kernel_ops.aggregate_rows_psum(buffer, row_idx, weights, mesh)
+        _LAST_PATH = "psum"
+        if not bool(jnp.all(jnp.isfinite(flat))):
+            flat = kernel_ops.aggregate_rows_gather(buffer, row_idx, weights)
+        out = spec.unravel(flat[:spec.n_params], restore_dtype=False)
+        if out_dtype is not None:
+            out = jax.tree.map(lambda x: x.astype(out_dtype), out)
+        return out
 
     global _PALLAS_OK
     auto_pallas = (_pallas_validated()

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import functools
 import itertools
+import math
 import os
 import weakref
 from typing import Any, Optional
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.core.update_store import scatter_rows
 from repro.optim import apply_updates, build_optimizer
+from repro.sharding import flmesh
 
 Pytree = Any
 
@@ -97,15 +99,23 @@ class CohortTrainer:
 
     def __init__(self, model, *, optimizer: str, lr: float, batch_size: int,
                  prox_mu: float = 0.0, scaffold: bool = False, seed: int = 0,
-                 cohort_floor: Optional[int] = None):
+                 cohort_floor: Optional[int] = None, mesh=None):
         self.model = model
         self.opt = build_optimizer(optimizer, lr)
         self.lr = lr
         self.batch_size = batch_size
         self.prox_mu = prox_mu
         self.scaffold = scaffold
-        self.cohort_floor = (cohort_bucket_floor() if cohort_floor is None
-                             else int(cohort_floor))
+        self.mesh = mesh
+        floor = (cohort_bucket_floor() if cohort_floor is None
+                 else int(cohort_floor))
+        if mesh is not None:
+            # every cohort bucket must split evenly over the "data" axis
+            # (shard_map needs Kp % data == 0); power-of-two bucketing
+            # preserves multiples of the floor, so lifting the floor to
+            # lcm(floor, data) makes every Kp divisible
+            floor = math.lcm(floor, flmesh.mesh_axes(mesh)[0])
+        self.cohort_floor = floor
         self._key = jax.random.PRNGKey(seed)
         self.data_h2d_bytes = 0   # training-input bytes uploaded (host plane)
 
@@ -175,6 +185,41 @@ class CohortTrainer:
 
             v = jax.vmap(client_fn,
                          in_axes=(None, 0, 0, 0, 0, None, 0, None, None))
+            if self.mesh is not None:
+                # Shard the cohort batch over the "data" axis: each device
+                # vmaps its Kp/data lanes against the replicated dataset
+                # buffers, so per-lane train work and minibatch gathers are
+                # shard-local. Per-lane training is independent, so each
+                # lane's outputs are the same values the unsharded vmap
+                # produces — only aggregation reassociates floats.
+                #
+                # The [Kp, 2] lane-key table enters REPLICATED (P()) and
+                # each shard slices its own lane block below. Consuming it
+                # P("data") would let GSPMD shard the *producing*
+                # ``jax.random.split`` when the keys are computed inside
+                # the same program (the fused megastep scan) — and with
+                # the non-partitionable threefry default that silently
+                # changes the key values, breaking the fused/stepwise
+                # bit-identity contract. Eager callers are unaffected
+                # either way (their keys are concrete before the jit).
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                vv = v
+
+                def _shard_body(params0, cidx, n_i, steps, keys, cg, ci,
+                                DX, Dy):
+                    kp_l = cidx.shape[0]      # this shard's lane count
+                    start = jax.lax.axis_index("data") * kp_l
+                    keys_l = jax.lax.dynamic_slice_in_dim(keys, start, kp_l)
+                    return vv(params0, cidx, n_i, steps, keys_l, cg, ci,
+                              DX, Dy)
+
+                v = shard_map(
+                    _shard_body, mesh=self.mesh,
+                    in_specs=(P(), P("data"), P("data"), P("data"),
+                              P(), P(), P("data"), P(), P()),
+                    out_specs=(P("data"), P("data"), P("data")),
+                    check_rep=False)
             n_lead = 9
         else:
             def client_fn(params0, X, y, n_i, steps, key, cg, ci):
@@ -231,7 +276,8 @@ class CohortTrainer:
 
     def _config_key(self) -> tuple:
         return (_model_token(self.model), self.opt.name, self.lr,
-                self.batch_size, self.prox_mu, self.scaffold)
+                self.batch_size, self.prox_mu, self.scaffold,
+                *flmesh.mesh_token(self.mesh))
 
     # --------------------------------------------------------------- train
     def train_cohort(self, global_params: Pytree, X: np.ndarray, y: np.ndarray,

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.update_store import gather_stacked
+from repro.sharding import flmesh
 
 
 def resolve_data_plane(mode: str) -> str:
@@ -65,9 +66,17 @@ class DatasetStore:
     where the host fancy-index would raise.
     """
 
-    def __init__(self, data: Any):
+    def __init__(self, data: Any, mesh=None):
         self.X = jnp.asarray(data.X)
         self.y = jnp.asarray(data.y)
+        if mesh is not None:
+            # replicate across the mesh so each cohort shard's minibatch
+            # gathers are device-local (no cross-device index traffic);
+            # un-meshed this branch never runs and placement is untouched
+            from jax.sharding import PartitionSpec as P
+            self.X = flmesh.shard_put(self.X, mesh, P())
+            self.y = flmesh.shard_put(self.y, mesh, P())
+        self.mesh = mesh
         # sample counts stay host-side: the runtime needs them on host
         # anyway (step budgets, result cardinalities), and the jitted
         # cohort fn receives the [Kp] slice as a per-dispatch arg
@@ -91,20 +100,22 @@ class DatasetStore:
         return gx, gy
 
 
-# One resident copy per dataset object: sweep cells and test pairs reuse it.
-# FederatedDataset is an unhashable dataclass, so the cache keys by id();
-# a weakref.finalize evicts the entry when the dataset is collected, BEFORE
-# its id can be recycled — a new dataset at a reused address can never be
-# served the old store.
-_STORE_CACHE: dict[int, DatasetStore] = {}
+# One resident copy per (dataset object, mesh): sweep cells and test pairs
+# reuse it. FederatedDataset is an unhashable dataclass, so the cache keys
+# by id(); a weakref.finalize evicts the entries when the dataset is
+# collected, BEFORE its id can be recycled — a new dataset at a reused
+# address can never be served the old store. The mesh component of the key
+# uses id(mesh) too, safe because flmesh.build_fl_mesh caches one Mesh per
+# spec for the process lifetime.
+_STORE_CACHE: dict[tuple, DatasetStore] = {}
 
 
-def dataset_store(data: Any) -> DatasetStore:
+def dataset_store(data: Any, mesh=None) -> DatasetStore:
     """The cached ``DatasetStore`` for ``data`` (built on first use)."""
-    key = id(data)
+    key = (id(data),) + flmesh.mesh_token(mesh)
     store = _STORE_CACHE.get(key)
     if store is None:
-        store = DatasetStore(data)
+        store = DatasetStore(data, mesh=mesh)
         _STORE_CACHE[key] = store
         weakref.finalize(data, _STORE_CACHE.pop, key, None)
     return store

@@ -97,6 +97,8 @@ class MegastepPlan:
     d64_col: np.ndarray     # deterministic invocation duration, f64
     d32_col: np.ndarray     # f32 cast (the mark_complete EMA operand)
     rank_col: np.ndarray    # dense duration rank (landing-order key), int32
+    mesh: Any = None        # device mesh (None = single-device): routes the
+    #                         in-scan aggregation through the weighted psum
 
 
 def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
@@ -278,6 +280,20 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
             sched.store.capacity, K, sched.spec.n_params)
     except ValueError:
         return None, "unknown aggregation path"
+    # mesh-compatibility obligation (DESIGN.md §15): the in-scan cohort fn
+    # shard_maps its batch over "data" and the buffer is row-sharded, so
+    # both geometries must split evenly — guaranteed by the trainer's
+    # lcm'd cohort floor and the store's mesh-aware capacity alignment,
+    # but proved here so a future geometry change degrades to stepwise
+    # instead of tracing a shard_map error inside the scan
+    mesh = getattr(sched, "mesh", None)
+    if mesh is not None:
+        from repro.sharding import flmesh
+        d_ax = flmesh.mesh_axes(mesh)[0]
+        if Kp % d_ax != 0:
+            return None, "cohort bucket not divisible by mesh data axis"
+        if sched.store.capacity % d_ax != 0:
+            return None, "store capacity not divisible by mesh data axis"
 
     _, rank_col = np.unique(d64_col, return_inverse=True)
     return MegastepPlan(
@@ -291,7 +307,7 @@ def _plan(sched) -> tuple[Optional[MegastepPlan], str]:
         card32_col=fleet.cardinality[:cap].astype(np.float32),
         upd32_col=fleet.upd32[:cap].copy(),
         d64_col=d64_col, d32_col=d64_col.astype(np.float32),
-        rank_col=rank_col.astype(np.int32)), "eligible"
+        rank_col=rank_col.astype(np.int32), mesh=mesh), "eligible"
 
 
 def _build_scan(plan: MegastepPlan, spec):
@@ -302,9 +318,11 @@ def _build_scan(plan: MegastepPlan, spec):
 
     from repro.kernels.ops import aggregate_rows_traced, scored_topk
 
+    from repro.sharding import flmesh
+
     key_ = (id(plan.fn), id(spec), plan.R, plan.K, plan.Kp, plan.top,
             plan.sparse, plan.use_pallas, plan.interpret,
-            str(plan.out_dtype))
+            str(plan.out_dtype), *flmesh.mesh_token(plan.mesh))
     cached = _SCAN_CACHE.get(key_)
     if cached is not None:
         return cached
@@ -314,6 +332,7 @@ def _build_scan(plan: MegastepPlan, spec):
         plan.sparse, plan.use_pallas, plan.interpret
     out_dtype = plan.out_dtype
     fn = plan.fn
+    mesh = plan.mesh
 
     @jax.jit
     def fused(params, buffer, stack, num, den, booster, key,
@@ -321,6 +340,19 @@ def _build_scan(plan: MegastepPlan, spec):
               ids_col, n_col, n32_col, steps_col,
               card32_col, upd32_col, d32_col, rank_col,
               beta32, dec32):
+
+        # Cohort-bucket pad maps, resolved at trace time: lane k >= K
+        # repeats lane K-1's client and runs 0 steps — the values
+        # _cohort_pad/train_cohort_indexed produce. Under a mesh these are
+        # applied as constant-map GATHERS rather than the stepwise path's
+        # concatenate-of-repeated-slice: that concatenate pattern is
+        # miscompiled by the 0.4.x SPMD partitioner when a shard_map
+        # coexists in the program (a spurious model-axis all-reduce scales
+        # the values; see kernels.ops.aggregate_rows_traced). The gather
+        # form produces bitwise the same integers on any mesh.
+        pad_map = np.concatenate([np.arange(K), np.full(Kp - K, K - 1)]
+                                 ).astype(np.int32)
+        step_mask = np.concatenate([np.ones(K, bool), np.zeros(Kp - K, bool)])
 
         def body(carry, _):
             params, buffer, stack, num, den, booster, key = carry
@@ -330,14 +362,20 @@ def _build_scan(plan: MegastepPlan, spec):
             # -- update rows: the UpdateStore LIFO pop sequence ------------
             ids = stack[top - Kp:top][::-1]
             # -- cohort train: same compiled fn, same padding, same keys ---
-            sel_p = (jnp.concatenate([sel, jnp.repeat(sel[-1:], Kp - K)])
-                     if Kp > K else sel)
+            if Kp > K and mesh is not None:
+                sel_p = sel[jnp.asarray(pad_map)]
+                steps_p = jnp.where(jnp.asarray(step_mask),
+                                    steps_col[sel_p], 0)
+            elif Kp > K:
+                sel_p = jnp.concatenate([sel, jnp.repeat(sel[-1:], Kp - K)])
+                steps_sel = steps_col[sel]
+                steps_p = jnp.concatenate(
+                    [steps_sel, jnp.zeros((Kp - K,), steps_sel.dtype)])
+            else:
+                sel_p = sel
+                steps_p = steps_col[sel]
             cidx = ids_col[sel_p]
             n_p = n_col[sel_p]
-            steps_sel = steps_col[sel]
-            steps_p = (jnp.concatenate(
-                [steps_sel, jnp.zeros((Kp - K,), steps_sel.dtype)])
-                if Kp > K else steps_sel)
             ks = jax.random.split(key)          # the _cohort_keys schedule
             key = ks[0]
             keys = jax.random.split(ks[1], Kp)
@@ -359,12 +397,18 @@ def _build_scan(plan: MegastepPlan, spec):
             w = w / jnp.sum(w)
             flat = aggregate_rows_traced(
                 buffer, rows_land, w, sparse=sparse,
-                use_pallas=use_pallas, interpret=interpret)
+                use_pallas=use_pallas, interpret=interpret, mesh=mesh)
             out = spec.unravel(flat[:spec.n_params], restore_dtype=False)
             params = jax.tree.map(lambda x: x.astype(out_dtype), out)
             # -- free-stack push algebra (pad frees, then landing frees) ---
-            stack = stack.at[top - Kp:top].set(
-                jnp.concatenate([ids[K:], rows_land]))
+            if mesh is not None:
+                # two static-slice writes instead of a concatenate (same
+                # SPMD-partitioner hazard as the pad maps above)
+                stack = stack.at[top - Kp:top - K].set(ids[K:])
+                stack = stack.at[top - K:top].set(rows_land)
+            else:
+                stack = stack.at[top - Kp:top].set(
+                    jnp.concatenate([ids[K:], rows_land]))
             return ((params, buffer, stack, num, den, booster, key),
                     (sel, ids, losses[:K]))
 

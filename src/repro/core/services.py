@@ -51,6 +51,7 @@ from repro.traffic import (build_traffic_schedule, resolve_traffic_profile,
 from repro.faas.hardware import HardwareProfile
 from repro.faas.platform import FaaSPlatform, InvocationRecord
 from repro.kernels.ops import RavelSpec
+from repro.sharding import flmesh
 
 Pytree = Any
 
@@ -253,6 +254,15 @@ class FLConfig:
     durability_snap_every: int = 1  # coordinated snapshot every k closed
     #                                 rounds (journal validation covers the
     #                                 re-executed gap on resume)
+    mesh: str = "auto"             # device mesh (DESIGN.md §15): "1x1"
+    #                                 (default — the single-device path,
+    #                                 bit-exact oracle) or "<data>x<model>"
+    #                                 to shard the update-store rows, the
+    #                                 cohort batch, and the weighted-psum
+    #                                 aggregation over a (data, model)
+    #                                 mesh; "auto" defers to REPRO_MESH
+    #                                 (default 1x1). Meshes > 1x1 require
+    #                                 the device update AND data planes.
     # -- harness ---------------------------------------------------------------
     eval_every: int = 1            # evaluate global model every k rounds
     seed: int = 0                  # RNG seed: selection, init, platform noise
@@ -356,10 +366,15 @@ class FLRuntime:
         self.strategy: Strategy = (
             strategy if strategy is not None
             else build_strategy(cfg.strategy, strategy_config(cfg)))
+        # mesh plane (DESIGN.md §15): "1x1" resolves to mesh=None — the
+        # unchanged single-device path, nothing constructed or re-placed
+        self.mesh_spec = flmesh.resolve_mesh(cfg.mesh)
+        self.mesh = flmesh.build_fl_mesh(self.mesh_spec)
         self.trainer = CohortTrainer(
             model, optimizer=cfg.optimizer, lr=cfg.lr,
             batch_size=cfg.batch_size, prox_mu=self.strategy.prox_mu,
-            scaffold=self.strategy.needs_scaffold, seed=cfg.seed)
+            scaffold=self.strategy.needs_scaffold, seed=cfg.seed,
+            mesh=self.mesh)
 
         # control plane: a restored checkpoint's plane is authoritative
         # (its client state is stored in that representation)
@@ -440,7 +455,8 @@ class FLRuntime:
         if self.update_plane == "device":
             self.store = UpdateStore(
                 self.spec.n_params,
-                capacity=max(cfg.clients_per_round, 1))
+                capacity=max(cfg.clients_per_round, 1),
+                mesh=self.mesh)
             if db is not None and cfg.checkpoint_dir:
                 self._rehydrate_store()
 
@@ -449,7 +465,14 @@ class FLRuntime:
         self.dataset: Optional[DatasetStore] = None
         if self.data_plane == "device":
             # one resident upload per dataset object (cached across runs)
-            self.dataset = dataset_store(data)
+            self.dataset = dataset_store(data, mesh=self.mesh)
+        if self.mesh is not None and (self.update_plane != "device"
+                                      or self.data_plane != "device"):
+            raise ValueError(
+                f"mesh {self.mesh_spec!r} requires the device update and "
+                f"data planes (got update_plane={self.update_plane!r}, "
+                f"data_plane={self.data_plane!r}): the blob/host paths "
+                "move every row through the host and cannot shard")
 
         # -- durability plane (DESIGN.md §14): off by default — no journal,
         # no snapshots, no RNG draws, every pre-existing trace bit-identical
@@ -893,7 +916,7 @@ class FLRuntime:
                 "pending result without a row handle on the device plane"
             self.params = weighted_aggregate_rows(
                 self.store.buffer, rows, weights, self.spec,
-                out_dtype=out_dtype)
+                out_dtype=out_dtype, mesh=self.mesh)
             self.store.free(rows)
         else:
             updates = [jax.tree.map(jnp.asarray, self.db.blobs[r.update_key])
@@ -974,6 +997,7 @@ class FLRuntime:
             "strategy": self.strategy.name,
             "engine": self.engine_name,
             "control_plane": self.control_plane,
+            "mesh": self.mesh_spec,
             "update_plane": self.update_plane,
             "update_host_bytes": int(self.update_host_bytes),
             "data_plane": self.data_plane,

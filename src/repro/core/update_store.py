@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.kernels.ops import SUBLANE
 from repro.kernels.staleness_agg import BLOCK_N
+from repro.sharding import flmesh
 
 
 def _round_up(x: int, m: int) -> int:
@@ -106,9 +107,15 @@ class UpdateStore:
     """Free-listed [capacity, W] fp32 device buffer of flat client updates."""
 
     def __init__(self, n_params: int, capacity: int = 16,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None):
         self.n_params = int(n_params)
-        self.row_width = _round_up(self.n_params, BLOCK_N)
+        self.mesh = mesh
+        # alignments gain mesh divisibility so every device owns an equal
+        # [capacity/data, W/model] tile; un-meshed these are the seed's
+        # BLOCK_N / SUBLANE values exactly (lcm with 1)
+        self._row_align = flmesh.row_align(mesh, BLOCK_N)
+        self._cap_align = flmesh.capacity_align(mesh, SUBLANE)
+        self.row_width = _round_up(self.n_params, self._row_align)
         self.dtype = dtype
         self.capacity = 0
         self.buffer: Optional[jnp.ndarray] = None
@@ -122,10 +129,14 @@ class UpdateStore:
             return
         # double (at least) so amortized growth cost is O(1) per row; keep
         # capacity a sublane multiple so the kernel path never pads rows
-        cap = _round_up(max(capacity, 2 * self.capacity), SUBLANE)
+        cap = _round_up(max(capacity, 2 * self.capacity), self._cap_align)
         grown = jnp.zeros((cap - self.capacity, self.row_width), self.dtype)
         self.buffer = (grown if self.buffer is None
                        else jnp.concatenate([self.buffer, grown], axis=0))
+        # re-place after growth: concat output inherits no layout, so pin
+        # the [rows over "data", W over "model"] sharding explicitly (the
+        # donated scatters below preserve it via GSPMD propagation)
+        self.buffer = flmesh.shard_put(self.buffer, self.mesh, flmesh.ROW_SPEC)
         self._free.extend(range(self.capacity, cap))
         self.capacity = cap
 
@@ -157,7 +168,10 @@ class UpdateStore:
 
     def write_at(self, ids: Sequence[int], rows) -> None:
         """Write rows at specific ids (checkpoint rehydration), reserving
-        them. Accepts [L, n_params] or full [L, W] rows."""
+        them. Accepts [L, n_params] or full [L, W] rows; rows saved by a
+        store with a WIDER mesh-aligned W are trimmed to this store's W
+        (the excess is always tail pad zeros — n_params <= both widths) so
+        snapshots restore across mesh specs."""
         ids = np.asarray(ids, np.int32)
         if ids.size == 0:
             return
@@ -167,8 +181,10 @@ class UpdateStore:
             if i in self._free:
                 self._free.remove(i)
             self._live.add(i)
-        self.buffer = _scatter_stacked(
-            self.buffer, jnp.asarray(ids), [jnp.asarray(rows, self.dtype)])
+        rows = jnp.asarray(rows, self.dtype)
+        if rows.shape[1] > self.row_width:
+            rows = rows[:, : self.row_width]
+        self.buffer = _scatter_stacked(self.buffer, jnp.asarray(ids), [rows])
 
     def gather(self, ids: Sequence[int]) -> jnp.ndarray:
         """[len(ids), W] device gather (no host copy)."""

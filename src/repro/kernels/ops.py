@@ -169,9 +169,57 @@ def aggregate_rows_gather(buffer: jax.Array, row_idx, weights) -> jax.Array:
     return _gather_weighted_sum(buffer, jnp.asarray(idx), jnp.asarray(w))
 
 
+# ------------------------------------------------- sharded-mesh aggregation
+# keyed by id(mesh); safe because repro.sharding.flmesh caches one Mesh
+# object per spec for the process lifetime
+_PSUM_AGG_CACHE: dict[int, Any] = {}
+
+
+def _psum_agg(mesh):
+    """Per-mesh jitted weighted psum over a [capacity, W] row buffer
+    sharded P("data", "model"): each shard reduces its local
+    [C/d, W/m] tile against its slice of the scattered per-row weight
+    vector, then the d partial sums meet in one ``lax.psum`` over the
+    ``data`` axis — aggregation bytes move over ICI instead of
+    converging through a single device. Output: [W] sharded over
+    ``model``."""
+    fn = _PSUM_AGG_CACHE.get(id(mesh))
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _local(buf, full_w):
+        part = full_w.astype(jnp.float32) @ buf.astype(jnp.float32)
+        return jax.lax.psum(part, "data")
+
+    sharded = shard_map(
+        _local, mesh=mesh,
+        in_specs=(P("data", "model"), P("data")),
+        out_specs=P("model"), check_rep=False)
+
+    @jax.jit
+    def fn(buffer, idx, w):
+        full_w = jnp.zeros((buffer.shape[0],), jnp.float32).at[idx].add(w)
+        return sharded(buffer, full_w)
+
+    _PSUM_AGG_CACHE[id(mesh)] = fn
+    return fn
+
+
+def aggregate_rows_psum(buffer: jax.Array, row_idx, weights,
+                        mesh) -> jax.Array:
+    """``aggregate_rows`` semantics over a mesh-sharded buffer via a
+    weighted ``lax.psum`` (see ``_psum_agg``). Same weight-0 stale-row
+    contract; callers guard NaN/Inf via ``aggregate_rows_gather``."""
+    idx, w = _pad_rows(row_idx, weights)
+    return _psum_agg(mesh)(buffer, jnp.asarray(idx), jnp.asarray(w))
+
+
 def aggregate_rows_traced(buffer: jax.Array, row_idx: jax.Array,
                           weights: jax.Array, *, sparse: bool,
-                          use_pallas: bool, interpret: bool) -> jax.Array:
+                          use_pallas: bool, interpret: bool,
+                          mesh=None) -> jax.Array:
     """Fully traceable twin of the ``aggregate_rows*`` dispatch for use
     INSIDE a jit (the fused-round megastep's scan body): ``row_idx`` /
     ``weights`` may be tracers, the dispatch predicates are static
@@ -180,17 +228,36 @@ def aggregate_rows_traced(buffer: jax.Array, row_idx: jax.Array,
     whose true branch is the identity — bitwise equal to the stepwise
     path whenever the data is finite, and the same exact-rows recompute
     when it is not. Runs the same inner jitted kernels (jit-in-jit
-    inlines), on identically padded operands."""
+    inlines); single-device branches see identically padded operands."""
     idx = jnp.asarray(row_idx, jnp.int32)
     w = jnp.asarray(weights, jnp.float32)
+    # the mesh route mirrors weighted_aggregate_rows: with a mesh the psum
+    # path is unconditional (the sparse heuristic and pallas/xla dispatch
+    # only arbitrate single-device execution). It takes the UNPADDED
+    # (idx, w): the scatter-add needs no sublane shape, the megastep
+    # regime is statically shaped anyway — and, decisively, the
+    # concatenate-of-repeated-slice pad pattern below is miscompiled by
+    # the 0.4.x SPMD partitioner whenever a shard_map coexists in the
+    # program: the partitioner books the padded vector as a partial sum
+    # over the "model" axis and inserts a spurious all-reduce that
+    # scales idx and w by the model-axis size (tests/test_mesh_plane.py
+    # guards the end-to-end fused/stepwise contract this broke).
+    if mesh is not None:
+        flat = _psum_agg(mesh)(buffer, idx, w)
+        return jax.lax.cond(
+            jnp.all(jnp.isfinite(flat)),
+            lambda f, b, i, ww: f,
+            lambda f, b, i, ww: _gather_weighted_sum(b, i, ww),
+            flat, buffer, idx, w)
     pad_k = (-idx.shape[0]) % SUBLANE
     if pad_k:       # zero-weight repeats of row 0, as _pad_rows does
         idx = jnp.concatenate([idx, jnp.repeat(idx[:1], pad_k)])
         w = jnp.concatenate([w, jnp.zeros((pad_k,), jnp.float32)])
     if sparse:
         return _gather_weighted_sum(buffer, idx, w)
-    flat = (_scatter_w_agg(buffer, idx, w, interpret) if use_pallas
-            else _scatter_w_matvec(buffer, idx, w))
+    else:
+        flat = (_scatter_w_agg(buffer, idx, w, interpret) if use_pallas
+                else _scatter_w_matvec(buffer, idx, w))
     return jax.lax.cond(
         jnp.all(jnp.isfinite(flat)),
         lambda f, b, i, ww: f,

@@ -34,12 +34,26 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
     x_ref[...] = (q * s_ref[...]).astype(x_ref.dtype)
 
 
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_q8(x: jax.Array, *, interpret: bool = True):
-    """x [N] with N % (ROWS*QBLOCK) == 0 -> (int8 [N], scales [N/QBLOCK])."""
+    """x [N] -> (int8 [N], scales [ceil(N/QBLOCK)]).
+
+    N need not be block-aligned: the input is zero-padded up to the
+    ROWS*QBLOCK kernel tile internally and the outputs trimmed back.
+    Zero padding cannot perturb a block's max-abs scale, so values in a
+    partial tail block quantize exactly as they would in an aligned
+    buffer (round-trip test: tests/test_kernels.py).
+    """
     N = x.shape[0]
-    assert N % (ROWS * QBLOCK) == 0, N
-    nb = N // QBLOCK
+    tile = ROWS * QBLOCK
+    Np = _ceil_div(N, tile) * tile
+    if Np != N:
+        x = jnp.pad(x, (0, Np - N))
+    nb = Np // QBLOCK
     x2 = x.reshape(nb, QBLOCK)
     q, s = pl.pallas_call(
         _quant_kernel,
@@ -55,14 +69,23 @@ def quantize_q8(x: jax.Array, *, interpret: bool = True):
         ],
         interpret=interpret,
     )(x2)
-    return q.reshape(N), s.reshape(nb)
+    return q.reshape(Np)[:N], s.reshape(nb)[:_ceil_div(N, QBLOCK)]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "dtype"))
 def dequantize_q8(q: jax.Array, scales: jax.Array, *,
                   dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """Inverse of :func:`quantize_q8`; accepts the same arbitrary N
+    (zero/one padding of q/scales is trimmed after the kernel)."""
     N = q.shape[0]
-    nb = N // QBLOCK
+    tile = ROWS * QBLOCK
+    Np = _ceil_div(N, tile) * tile
+    nb = Np // QBLOCK
+    if Np != N:
+        q = jnp.pad(q, (0, Np - N))
+    if scales.shape[0] != nb:
+        scales = jnp.pad(scales, (0, nb - scales.shape[0]),
+                         constant_values=1.0)
     out = pl.pallas_call(
         _dequant_kernel,
         grid=(nb // ROWS,),
@@ -74,4 +97,4 @@ def dequantize_q8(q: jax.Array, scales: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((nb, QBLOCK), dtype),
         interpret=interpret,
     )(q.reshape(nb, QBLOCK), scales.reshape(nb, 1))
-    return out.reshape(N)
+    return out.reshape(Np)[:N]

@@ -18,9 +18,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def _debug_mesh_shape(n_devices: int) -> tuple[int, int]:
+    """Largest valid (data, model) factorization of ``n_devices``.
+
+    Prefers the widest model axis that divides n (4, then 3, then 2) and
+    falls back to ``(n, 1)`` for primes and n < 2, so every positive
+    device count yields a mesh covering exactly n devices. The old
+    ``(n // 4, 4)`` arithmetic built a wrong-size mesh for n not
+    divisible by 4 and an invalid zero-extent one for n < 4.
+    """
+    n = max(int(n_devices), 1)
+    for model in (4, 3, 2):
+        if n >= model and n % model == 0:
+            return (n // model, model)
+    return (n, 1)
+
+
 def make_debug_mesh(n_devices: int = 8):
     """Small mesh for unit tests (requires xla_force_host_platform_device_count)."""
-    return jax.make_mesh((n_devices // 4, 4), ("data", "model"))
+    return jax.make_mesh(_debug_mesh_shape(n_devices), ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline denominators)

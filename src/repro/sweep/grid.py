@@ -37,6 +37,8 @@ class RunSpec:
     #                                      (auto = REPRO_FAULTS env, "" off)
     traffic_profile: str = "auto"        # open-loop traffic (repro.traffic)
     #                                      (auto = REPRO_TRAFFIC env, "" off)
+    mesh: str = "auto"                   # device mesh (repro.sharding.flmesh)
+    #                                      (auto = REPRO_MESH env, 1x1 off)
     overrides: Tuple[Tuple[str, Any], ...] = ()  # extra FLConfig fields
 
     @property
@@ -49,9 +51,10 @@ class RunSpec:
               else f"/faults={self.fault_profile or 'none'}")
         tp = ("" if self.traffic_profile == "auto"
               else f"/traffic={self.traffic_profile or 'none'}")
+        ms = "" if self.mesh == "auto" else f"/mesh={self.mesh}"
         return (f"{self.dataset}/{self.scenario}/{self.strategy}"
                 f"/cr={self.concurrency_ratio:g}/{self.staleness_fn}"
-                f"/seed={self.seed}" + dp + cp + fp + tp
+                f"/seed={self.seed}" + dp + cp + fp + tp + ms
                 + (f"/{ov}" if ov else ""))
 
     @property
@@ -63,10 +66,12 @@ class RunSpec:
         another plane's. Likewise the fault profile: a chaos cell's
         speedup is measured against the FedAvg that suffered the same
         schedule. And the traffic profile: under open-loop load, ratios
-        compare runs that faced the same arrival process."""
+        compare runs that faced the same arrival process. The mesh is a
+        group axis too: sharded cells ratio against the same-mesh
+        baseline."""
         return (self.dataset, self.scenario, self.seed, self.data_plane,
                 self.control_plane, self.fault_profile,
-                self.traffic_profile, self.overrides)
+                self.traffic_profile, self.mesh, self.overrides)
 
 
 @dataclass(frozen=True)
@@ -107,6 +112,7 @@ class SweepSpec:
     control_planes: Sequence[str] = ("auto",)  # columnar/object fleet state
     fault_profiles: Sequence[str] = ("auto",)  # chaos axis ("" = faults off)
     traffic_profiles: Sequence[str] = ("auto",)  # open-loop load axis
+    meshes: Sequence[str] = ("auto",)  # device-mesh axis ("1x1" = off)
     scale: SweepScale = field(default=BENCH_SCALE)
     overrides: Tuple[Tuple[str, Any], ...] = ()
 
@@ -116,7 +122,7 @@ class SweepSpec:
                 * len(self.scenarios) * len(self.concurrency_ratios)
                 * len(self.staleness_fns) * len(self.data_planes)
                 * len(self.control_planes) * len(self.fault_profiles)
-                * len(self.traffic_profiles))
+                * len(self.traffic_profiles) * len(self.meshes))
 
 
 def expand_grid(spec: SweepSpec) -> list[RunSpec]:
@@ -125,12 +131,12 @@ def expand_grid(spec: SweepSpec) -> list[RunSpec]:
         RunSpec(dataset=ds, strategy=strat, scenario=sc, seed=seed,
                 concurrency_ratio=cr, staleness_fn=fn, data_plane=dp,
                 control_plane=cp, fault_profile=fp, traffic_profile=tp,
-                overrides=tuple(spec.overrides))
-        for ds, sc, seed, cr, fn, dp, cp, fp, tp, strat in product(
+                mesh=ms, overrides=tuple(spec.overrides))
+        for ds, sc, seed, cr, fn, dp, cp, fp, tp, ms, strat in product(
             spec.datasets, spec.scenarios, spec.seeds,
             spec.concurrency_ratios, spec.staleness_fns, spec.data_planes,
             spec.control_planes, spec.fault_profiles,
-            spec.traffic_profiles, spec.strategies)
+            spec.traffic_profiles, spec.meshes, spec.strategies)
     ]
     keys = [r.key for r in runs]
     if len(set(keys)) != len(keys):

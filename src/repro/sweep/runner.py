@@ -115,6 +115,7 @@ class LocalRunner:
             control_plane=run.control_plane,
             fault_profile=run.fault_profile,
             traffic_profile=run.traffic_profile,
+            mesh=run.mesh,
             max_sim_time=s.sim_budget or SIM_BUDGET.get(run.dataset, 2_000.0))
         if self.update_plane:
             cfg = replace(cfg, update_plane=self.update_plane)

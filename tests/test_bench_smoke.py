@@ -109,6 +109,27 @@ def test_controlplane_modes_independently_seeded(bench_round):
     assert bench_round._control_states(300_000, planes=("object",))[0] is None
 
 
+def test_sharding_smoke_gate(bench_round, tmp_path):
+    """The --sharding CI gate: mesh='1x1' bitwise-identical to the
+    default path, and the sharded cell's update-store buffer actually
+    splits into equal per-device tiles (the wall-clock scaling gate
+    only arms on hosts with >= 8 real cores)."""
+    path = tmp_path / "sharding.json"
+    out = bench_round.run_sharding(smoke=True, json_path=str(path))
+    assert out["identity_1x1_bitwise"] is True
+    assert out["structural_ok"] is True
+    cells = {c["mesh"]: c for c in out["cells"]}
+    assert set(cells) == {"auto", "1x1", "2x1"}
+    assert cells["auto"]["params_sha"] == cells["1x1"]["params_sha"]
+    sharded = cells["2x1"]
+    assert sharded["devices"] == 2 and sharded["n_shards"] == 2
+    assert sharded["store_device_bytes"] * 2 == sharded["store_total_bytes"]
+    assert sharded["K"] == 2 * cells["1x1"]["K"]      # weak scaling
+    for c in out["cells"]:
+        assert c["rounds_per_s"] > 0 and c["rounds_timed"] > 0
+    assert json.loads(path.read_text())["bench"] == "sharding"
+
+
 def test_durability_smoke_gate(bench_round, tmp_path):
     """The --durability CI gate: journal overhead within the round-sync
     budget and a crash-mid-journal resume bit-identical to the golden

@@ -72,6 +72,30 @@ def test_quant8_error_bound():
     assert (err <= bound).all()
 
 
+@pytest.mark.parametrize("n", [1, 255, 256, 257, 2048, 2049, 5000])
+def test_quant8_arbitrary_n_round_trip(n):
+    """N need not be tile-aligned: the pad-to-block is internal, outputs
+    are trimmed, and zero padding never perturbs a block's max-abs scale
+    — so tail-block values quantize exactly as in an aligned buffer."""
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32) * 2.0
+    q, s = ops.quantize_q8(x, interpret=True)
+    nb = -(-n // 256)
+    assert q.shape == (n,) and s.shape == (nb,)
+    d = ops.dequantize_q8(q, s, interpret=True)
+    assert d.shape == (n,)
+    err = np.zeros(nb * 256, np.float32)
+    err[:n] = np.abs(np.asarray(d) - np.asarray(x))
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-7
+    assert (err.reshape(nb, 256) <= bound).all()
+    # full prefix blocks must quantize identically to an aligned run
+    n0 = (n // 256) * 256
+    if n0:
+        q0, s0 = ops.quantize_q8(x[:n0], interpret=True)
+        np.testing.assert_array_equal(np.asarray(q[:n0]), np.asarray(q0))
+        np.testing.assert_array_equal(np.asarray(s[:n0 // 256]),
+                                      np.asarray(s0))
+
+
 def test_compress_update_error_feedback():
     u = {"w": jax.random.normal(K0, (300, 7)), "b": jnp.ones((13,))}
     (q, s, meta), err = ops.compress_update(u, interpret=True)

@@ -11,7 +11,9 @@ import jax
 
 from repro.sharding.rules import (
     DEFAULT_RULES,
+    axis_rules,
     logical_spec,
+    shard_act,
     zero1_extend,
 )
 
@@ -71,6 +73,45 @@ def test_zero1_skips_when_nothing_divides():
     mesh = _FakeMesh({"data": 16})
     spec = zero1_extend(P(), (7, 9), mesh)
     assert spec == P()
+
+
+def test_shard_act_is_noop_outside_axis_rules():
+    """Un-meshed model code must run untouched: no constraint, same
+    object identity semantics (value + sharding unchanged)."""
+    import jax.numpy as jnp
+    x = jnp.arange(12.0).reshape(3, 4)
+    y = shard_act(x, ("batch", "ffn"))
+    assert y is x
+
+
+def test_shard_act_constrains_inside_axis_rules(mesh2d):
+    """Under axis_rules the constraint is value-preserving, and the spec
+    it resolves is the rule-table one (checked via logical_spec — eager
+    with_sharding_constraint on one device normalizes the sharding)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    x = jnp.arange(8.0).reshape(2, 4)
+    with axis_rules(mesh2d):
+        y = shard_act(x, ("batch", "ffn"))
+        spec = logical_spec(("batch", "ffn"), x.shape, mesh2d,
+                            DEFAULT_RULES)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert spec == P("data", "model")
+    assert y.sharding.is_equivalent_to(NamedSharding(mesh2d, spec), x.ndim)
+
+
+def test_tuple_rule_resolves_multiple_axes():
+    """A tuple rule uses every listed axis present on the mesh (in order)
+    when the product divides; missing axes are skipped, not fatal."""
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    # 'batch' rule is ('pod', 'data'); no 'pod' axis here -> just data
+    assert logical_spec(("batch",), (8,), mesh, DEFAULT_RULES) == P("data")
+    rules = dict(DEFAULT_RULES, batch=("data", "model"))
+    assert logical_spec(("batch",), (8,), mesh, rules) == P(("data", "model"))
+    # 8 % (4*2) == 0 but 4 % 8 != 0 -> greedy drop of the leading axis
+    assert logical_spec(("batch",), (4,), mesh, rules) == P("model")
 
 
 MINI_DRYRUN = r"""

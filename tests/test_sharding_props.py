@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the sharding rule engine.
+
+The rule engine's contract is *silent degradation*: a logical-axis rule
+only ever shards a dim by a mesh-axis product that divides it exactly,
+falling back to replication otherwise — never uneven shards, never
+padding. These properties pin that contract over random meshes/dims
+(the deterministic examples live in tests/test_sharding.py).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.sharding.rules import (  # noqa: E402
+    DEFAULT_RULES,
+    logical_spec,
+    zero1_extend,
+)
+
+PROP = dict(max_examples=80, deadline=None)
+AXES = st.fixed_dictionaries({"data": st.sampled_from([1, 2, 4, 8, 16]),
+                              "model": st.sampled_from([1, 2, 4, 8, 16])})
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in (rule resolution reads only .shape)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _axes_of(part):
+    if part is None:
+        return ()
+    return (part,) if isinstance(part, str) else tuple(part)
+
+
+@given(AXES, st.integers(1, 4096))
+@settings(**PROP)
+def test_prop_divisibility_never_violated(shape, dim):
+    """Non-divisible dims degrade to replication — the sharded product
+    always divides the dim exactly."""
+    mesh = _FakeMesh(shape)
+    spec = logical_spec(("batch", "ffn"), (dim, dim), mesh, DEFAULT_RULES)
+    parts = list(spec) + [None] * (2 - len(spec))
+    for part in parts:
+        n = 1
+        for a in _axes_of(part):
+            n *= shape[a]
+        assert dim % n == 0
+
+
+@given(AXES,
+       st.lists(st.sampled_from([None, "batch", "ffn", "heads", "vocab",
+                                 "seq"]),
+                min_size=1, max_size=4),
+       st.data())
+@settings(**PROP)
+def test_prop_each_mesh_axis_used_at_most_once(shape, names, data):
+    mesh = _FakeMesh(shape)
+    dims = tuple(data.draw(st.integers(1, 2048)) for _ in names)
+    spec = logical_spec(names, dims, mesh, DEFAULT_RULES)
+    used = [a for part in spec for a in _axes_of(part)]
+    assert len(used) == len(set(used))
+
+
+@given(AXES,
+       st.lists(st.sampled_from([None, "batch", "ffn", "heads", "vocab"]),
+                min_size=1, max_size=3),
+       st.data())
+@settings(**PROP)
+def test_prop_tuple_rules_resolve_to_listed_axes(shape, names, data):
+    """Whatever a rule resolves to is a subset of the axes it listed —
+    the engine never invents an axis."""
+    mesh = _FakeMesh(shape)
+    dims = tuple(data.draw(st.integers(1, 2048)) for _ in names)
+    spec = logical_spec(names, dims, mesh, DEFAULT_RULES)
+    for name, part in zip(names, list(spec) + [None] * len(names)):
+        rule = DEFAULT_RULES.get(name) if name else None
+        allowed = set(_axes_of(rule)) if rule else set()
+        assert set(_axes_of(part)) <= allowed
+
+
+@given(AXES, st.integers(1, 4096), st.integers(1, 4096))
+@settings(**PROP)
+def test_prop_zero1_only_adds_divisible_data_axis(shape, d0, d1):
+    """zero1_extend either returns the spec unchanged or shards exactly
+    one previously-replicated dim by 'data' — and only when it divides."""
+    mesh = _FakeMesh(shape)
+    base = P(None, "model") if d1 % shape["model"] == 0 else P()
+    out = zero1_extend(base, (d0, d1), mesh)
+    parts = list(out) + [None] * (2 - len(out))
+    base_parts = list(base) + [None] * (2 - len(base))
+    added = [(i, p) for i, (p, b) in enumerate(zip(parts, base_parts))
+             if p != b]
+    if not added:
+        return
+    assert len(added) == 1
+    i, p = added[0]
+    assert p == "data" and base_parts[i] is None
+    assert (d0, d1)[i] % shape["data"] == 0
